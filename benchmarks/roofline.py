@@ -1,0 +1,58 @@
+"""Benchmark: roofline table aggregation from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by `python -m repro.launch.dryrun
+--all --mesh both`) and emits the per-(arch x shape x mesh) roofline rows:
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load() -> List[Dict]:
+    out = []
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def run() -> List[Dict]:
+    rows = []
+    for rec in load():
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": "skipped"})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh"), "status": "FAILED"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "tag": rec.get("tag", ""),
+            "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_flops_ratio": rec.get("useful_flops_ratio", 0.0),
+            "fits_hbm_16g": rec.get("fits_hbm_16g"),
+            "roofline_fraction": (
+                max(r["compute_s"], 1e-12)
+                / max(r["compute_s"], r["memory_s"], r["collective_s"])),
+        })
+    return rows
+
+
+def summary(rows: List[Dict]) -> Dict:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    dom = {}
+    for r in ok:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return {"cells_ok": len(ok),
+            "cells_skipped": sum(r.get("status") == "skipped" for r in rows),
+            "cells_failed": sum(r.get("status") == "FAILED" for r in rows),
+            "dominant_histogram": dom}

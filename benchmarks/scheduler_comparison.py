@@ -1,0 +1,60 @@
+"""Benchmark: scheduler comparison (paper Fig. 3).
+
+Reproduces the six-panel experiment: {makespan, CPU time, scheduling
+overhead} x {2, 10 jobs in queue} for the four applications under naive
+SLURM and HQ.  Emits one CSV row per (app, scheduler, queue-depth) with
+boxplot statistics over several seeds.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import workloads
+from repro.core import backends, eval_records, metrics, simulate
+
+SEEDS = (3, 7, 13, 29, 41)
+
+
+def run(n_evals: int = workloads.N_EVALS) -> List[Dict]:
+    rows = []
+    for bench in workloads.BENCHMARKS:
+        w = workloads.make_workload(bench, n_evals=n_evals)
+        for q in workloads.QUEUE_DEPTHS:
+            for backend in ("slurm", "hq"):
+                spec = backends.get(backend)
+                mk, cpu, ovh, slr_v = [], [], [], []
+                for seed in SEEDS:
+                    recs = eval_records(simulate(spec, w, q, seed=seed))
+                    s = metrics.summarize(bench, backend, recs)
+                    mk.append(s.makespan)
+                    cpu.append(s.total_cpu_time)
+                    ovh.append(s.overhead_stats["median"])
+                    slr_v.append(s.slr)
+                rows.append({
+                    "bench": bench, "scheduler": backend, "queue": q,
+                    "makespan_mean": float(np.mean(mk)),
+                    "makespan_std": float(np.std(mk)),
+                    "cpu_time_mean": float(np.mean(cpu)),
+                    "overhead_median": float(np.mean(ovh)),
+                    "slr_mean": float(np.mean(slr_v)),
+                })
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    by = {(r["bench"], r["scheduler"], r["queue"]): r for r in rows}
+    gs2_red = np.mean([
+        1 - by[("gs2", "hq", q)]["makespan_mean"]
+        / by[("gs2", "slurm", q)]["makespan_mean"]
+        for q in workloads.QUEUE_DEPTHS])
+    ovh_ratio = max(
+        by[(b, "slurm", 2)]["overhead_median"]
+        / max(by[(b, "hq", 2)]["overhead_median"], 1e-9)
+        for b in workloads.BENCHMARKS)
+    e100 = (by[("eigen-100", "slurm", 2)]["makespan_mean"]
+            / by[("eigen-100", "hq", 2)]["makespan_mean"])
+    return {"gs2_makespan_reduction": float(gs2_red),
+            "max_overhead_ratio": float(ovh_ratio),
+            "eigen100_speedup_q2": float(e100)}

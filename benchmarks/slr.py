@@ -1,0 +1,36 @@
+"""Benchmark: Schedule Length Ratio comparison (paper Fig. 4).
+
+SLR = makespan / sum_i C_i for each (application x scheduler x queue
+depth); HQ should sit near the work-conserving bound, SLURM far above it
+for short tasks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import workloads
+from repro.core import backends, eval_records, metrics, simulate
+
+SEEDS = (3, 7, 13, 29, 41)
+
+
+def run(n_evals: int = workloads.N_EVALS) -> List[Dict]:
+    rows = []
+    for bench in workloads.BENCHMARKS:
+        w = workloads.make_workload(bench, n_evals=n_evals)
+        for q in workloads.QUEUE_DEPTHS:
+            for backend in ("slurm", "hq"):
+                vals = []
+                for seed in SEEDS:
+                    recs = eval_records(
+                        simulate(backends.get(backend), w, q, seed=seed))
+                    vals.append(metrics.slr(recs))
+                v = np.array(vals)
+                rows.append({"bench": bench, "scheduler": backend,
+                             "queue": q,
+                             "slr_median": float(np.median(v)),
+                             "slr_min": float(v.min()),
+                             "slr_max": float(v.max())})
+    return rows

@@ -1,0 +1,34 @@
+"""Benchmark: UM-Bridge SLURM backend vs naive SLURM (paper Appendix A,
+Figs. 5-6).  GS2 only, as in the paper: the UM-Bridge SLURM backend
+submits per-server sbatch jobs and therefore shows NO gain over naive
+SLURM (it adds the ~1 s server init)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import workloads
+from repro.core import backends, eval_records, metrics, simulate
+
+SEEDS = (3, 7, 13, 29, 41)
+
+
+def run(n_evals: int = workloads.N_EVALS) -> List[Dict]:
+    rows = []
+    w = workloads.make_workload("gs2", n_evals=n_evals)
+    for q in workloads.QUEUE_DEPTHS:
+        for backend in ("slurm", "umb-slurm"):
+            mk, cpu, ovh = [], [], []
+            for seed in SEEDS:
+                recs = eval_records(
+                    simulate(backends.get(backend), w, q, seed=seed))
+                s = metrics.summarize("gs2", backend, recs)
+                mk.append(s.makespan)
+                cpu.append(s.total_cpu_time)
+                ovh.append(s.overhead_stats["median"])
+            rows.append({"bench": "gs2", "scheduler": backend, "queue": q,
+                         "makespan_mean": float(np.mean(mk)),
+                         "cpu_time_mean": float(np.mean(cpu)),
+                         "overhead_median": float(np.mean(ovh))})
+    return rows

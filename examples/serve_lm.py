@@ -1,0 +1,41 @@
+"""LM serving through the paper's scheduler (mixed-cost decode requests).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch starcoder2-3b
+
+The paper's workload shape — many evaluations with unpredictable per-
+request cost — transplanted onto LM serving: variable-length prompts are
+dispatched FCFS to persistent model servers (warm jit caches = warm
+UM-Bridge servers) vs naive per-request servers.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.launch.serve import serve_benchmark
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+
+    for persistent in (True, False):
+        out = serve_benchmark(args.arch, n_requests=args.requests,
+                              max_new=args.max_new,
+                              n_workers=args.workers, persistent=persistent,
+                              max_len=128, reduced=True)
+        s = out["summary"]
+        mode = "persistent (HQ)" if persistent else "per-request (naive)"
+        print(f"{mode:22s}: wall {out['wall']:6.2f}s  "
+              f"cpu {s.total_cpu_time:6.2f}s  "
+              f"{out['tokens']} tokens generated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, load_pytree,
+                                         save_pytree, latest_step)

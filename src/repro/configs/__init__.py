@@ -1,0 +1,56 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants.
+
+`get(name)` / `get_reduced(name)` accept the public dashed ids
+(e.g. "deepseek-v3-671b").  `cells()` enumerates the 40 assigned
+(arch x shape) dry-run cells, flagging the long_500k skips for pure
+full-attention architectures per the brief.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Iterator, List, Tuple
+
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeConfig
+
+_MODULES: Dict[str, str] = {
+    "musicgen-large": "repro.configs.musicgen_large",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "yi-34b": "repro.configs.yi_34b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_4b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "zamba2-2.7b": "repro.configs.zamba2_2b",
+}
+
+ARCH_NAMES: Tuple[str, ...] = tuple(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name])
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).REDUCED
+
+
+def shapes() -> Tuple[ShapeConfig, ...]:
+    return LM_SHAPES
+
+
+def cells() -> List[Tuple[str, ShapeConfig, bool]]:
+    """All 40 assigned (arch, shape, runnable) cells."""
+    out = []
+    for arch in ARCH_NAMES:
+        cfg = get(arch)
+        for shp in LM_SHAPES:
+            out.append((arch, shp, cfg.runnable(shp)))
+    return out

@@ -1,0 +1,11 @@
+"""The paper's primary contribution: dynamic load balancing / task
+scheduling for UQ workflows — backend specs, a calibrated discrete-event
+cluster simulator (quantitative reproduction of the paper's Figs. 3-6),
+and a live persistent-worker executor scheduling real JAX work with fault
+tolerance, straggler mitigation and elastic scaling."""
+from repro.core import backends, metrics
+from repro.core.balancer import LoadBalancer
+from repro.core.executor import Executor
+from repro.core.metrics import TaskRecord, summarize, slr, makespan
+from repro.core.simulator import Workload, simulate, eval_records
+from repro.core.task import EvalRequest, EvalResult, LambdaModel, Model

@@ -1,0 +1,393 @@
+"""Live execution engine: persistent-worker task scheduling over real JAX.
+
+This realises the paper's mechanism with *real* costs instead of simulated
+ones: a pool of persistent workers (threads; on a TPU pod, one per mesh
+slice) pulls evaluation requests from a FCFS queue.
+
+  * HQ semantics (`persistent_servers=True`): each worker instantiates a
+    model server ONCE and reuses it — the jit-compile / warmup cost (the
+    real analogue of the paper's ~1 s model-server init + SLURM env
+    re-init) is paid once per (worker, model).
+  * naive-SLURM semantics (`persistent_servers=False`): every task gets a
+    fresh model server — re-init/re-compile every time, which is exactly
+    why the naive backend loses on anything short.
+
+Production features beyond the paper's prototype:
+  * fault tolerance: worker death or task exception -> requeue up to
+    `max_attempts`; queue state snapshot/restore (checkpoint-restart);
+  * straggler mitigation: speculative re-issue of tasks running longer
+    than `straggler_factor` x the p95 of completed runtimes, first result
+    wins (generalising HQ's time-request/time-limit split);
+  * elastic scaling: `scale_to(n)` while running; an optional autoscaler
+    grows the pool when backlog exceeds `autoscale_backlog` (HQ's
+    worker-per-alloc on-demand allocation);
+  * dependent tasks: requests with `depends_on` wait until their
+    predecessors complete (MCMC-style chains, adaptive GP loops);
+  * time limits: tasks observed to exceed `time_limit` are marked
+    "timeout" (the limit bounds runaway jobs; the *time_request* hint is
+    used only for dispatch ordering when `pack_by_cost=True`).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.metrics import TaskRecord
+from repro.core.task import EvalRequest, EvalResult, Model
+
+_STOP = object()
+
+
+class _Server:
+    """One instantiated model server on one worker."""
+
+    def __init__(self, model: Model, init_t: float):
+        self.model = model
+        self.init_t = init_t
+        self.n_evals = 0
+
+
+class Worker(threading.Thread):
+    def __init__(self, pool: "Executor", wid: int):
+        super().__init__(name=f"worker-{wid}", daemon=True)
+        self.pool = pool
+        self.wid = wid
+        self.alive = True
+        self.servers: Dict[str, _Server] = {}
+        self.crashed = False
+
+    def _get_server(self, name: str) -> _Server:
+        if self.pool.persistent_servers and name in self.servers:
+            s = self.servers[name]
+            s_init = 0.0
+            s.init_t = s_init
+            return s
+        t0 = time.monotonic()
+        model = self.pool.model_factories[name]()
+        model.warmup()
+        init_t = time.monotonic() - t0
+        server = _Server(model, init_t)
+        if self.pool.persistent_servers:
+            self.servers[name] = server
+        return server
+
+    def run(self):
+        while self.alive:
+            try:
+                item = self.pool._queue_get(timeout=0.02)
+            except IndexError:
+                continue
+            if item is _STOP:
+                break
+            req, attempt = item
+            if self.pool._already_done(req.task_id):
+                continue
+            self.pool._mark_running(req, self)
+            dispatch_t = time.monotonic()
+            try:
+                if self.crashed:
+                    raise RuntimeError(f"worker-{self.wid} crashed")
+                fail_n = int(req.config.get("fail_attempts", 0))
+                if attempt <= fail_n:
+                    raise RuntimeError("injected failure")
+                server = self._get_server(req.model_name)
+                t0 = time.monotonic()
+                value = server.model(req.parameters, req.config)
+                compute_t = time.monotonic() - t0
+                server.n_evals += 1
+                status = "ok"
+                if req.time_limit and compute_t > req.time_limit:
+                    status = "timeout"
+                res = EvalResult(
+                    task_id=req.task_id, value=value, status=status,
+                    worker=self.name, attempts=attempt,
+                    submit_t=req.submit_t, dispatch_t=dispatch_t,
+                    start_t=dispatch_t, end_t=time.monotonic(),
+                    compute_t=compute_t, init_t=server.init_t)
+                self.pool._complete(req, res)
+            except Exception as e:  # noqa: BLE001 — any task failure requeues
+                self.pool._fail(req, attempt, repr(e), self)
+                if self.crashed:
+                    self.alive = False
+                    self.pool._on_worker_death(self)
+
+
+class Executor:
+    """Persistent-worker FCFS executor with fault tolerance and scaling."""
+
+    def __init__(self, model_factories: Dict[str, Callable[[], Model]],
+                 n_workers: int = 2, *, persistent_servers: bool = True,
+                 max_attempts: int = 3, backlog_limit: Optional[int] = None,
+                 pack_by_cost: bool = False,
+                 straggler_factor: float = 0.0,
+                 straggler_min_completed: int = 5,
+                 autoscale_backlog: Optional[int] = None,
+                 max_workers: int = 32,
+                 name: str = "hq"):
+        self.model_factories = dict(model_factories)
+        self.persistent_servers = persistent_servers
+        self.max_attempts = max_attempts
+        self.backlog_limit = backlog_limit
+        self.pack_by_cost = pack_by_cost
+        self.straggler_factor = straggler_factor
+        self.straggler_min_completed = straggler_min_completed
+        self.autoscale_backlog = autoscale_backlog
+        self.max_workers = max_workers
+        self.name = name
+
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._heap: List[Tuple[float, int, Tuple[EvalRequest, int]]] = []
+        self._tick = itertools.count()
+        self._waiting: List[Tuple[EvalRequest, int]] = []   # unmet deps
+        self._running: Dict[str, Tuple[EvalRequest, Worker, float]] = {}
+        self._results: Dict[str, EvalResult] = {}
+        self._requests: Dict[str, EvalRequest] = {}
+        self._t0 = time.monotonic()
+        self.workers: List[Worker] = []
+        self._stopping = False
+        for i in range(n_workers):
+            self._add_worker()
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         daemon=True)
+        self._monitor.start()
+
+    # ------------------------------------------------------------------
+    # queue plumbing
+    # ------------------------------------------------------------------
+    def _queue_get(self, timeout: float):
+        with self._cv:
+            if not self._heap:
+                self._cv.wait(timeout)
+            if not self._heap:
+                raise IndexError
+            return heapq.heappop(self._heap)[2]
+
+    def _push(self, req: EvalRequest, attempt: int):
+        cost = (req.time_request if (self.pack_by_cost and req.time_request)
+                else 0.0)
+        with self._cv:
+            heapq.heappush(self._heap, (cost, next(self._tick), (req, attempt)))
+            self._cv.notify()
+
+    def _already_done(self, task_id: str) -> bool:
+        with self._lock:
+            return task_id in self._results and \
+                self._results[task_id].status == "ok"
+
+    def _mark_running(self, req: EvalRequest, worker: Worker):
+        with self._lock:
+            self._running[req.task_id] = (req, worker, time.monotonic())
+
+    def _complete(self, req: EvalRequest, res: EvalResult):
+        with self._cv:
+            self._running.pop(req.task_id, None)
+            prev = self._results.get(req.task_id)
+            if prev is None or prev.status != "ok":    # first success wins
+                self._results[req.task_id] = res
+            self._release_dependents()
+            self._cv.notify_all()
+
+    def _fail(self, req: EvalRequest, attempt: int, error: str,
+              worker: Worker):
+        with self._cv:
+            self._running.pop(req.task_id, None)
+            if self._already_done(req.task_id):
+                return
+            if attempt < self.max_attempts:
+                self._cv.notify_all()
+                self._push(req, attempt + 1)
+            else:
+                self._results[req.task_id] = EvalResult(
+                    task_id=req.task_id, status="failed", error=error,
+                    worker=worker.name, attempts=attempt,
+                    submit_t=req.submit_t, end_t=time.monotonic())
+                self._release_dependents()
+                self._cv.notify_all()
+
+    def _release_dependents(self):
+        still = []
+        for req, attempt in self._waiting:
+            if all(d in self._results for d in req.depends_on):
+                self._push(req, attempt)
+            else:
+                still.append((req, attempt))
+        self._waiting = still
+
+    def _on_worker_death(self, worker: Worker):
+        """Requeue whatever a dead worker was running (fault tolerance)."""
+        with self._cv:
+            if worker in self.workers:
+                self.workers.remove(worker)
+            dead = [tid for tid, (_, w, _) in self._running.items()
+                    if w is worker]
+            for tid in dead:
+                req, _, _ = self._running.pop(tid)
+                self._push(req, 1)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, req: EvalRequest) -> str:
+        with self._cv:
+            if self.backlog_limit is not None:
+                while len(self._heap) >= self.backlog_limit:
+                    self._cv.wait(0.01)
+            req.submit_t = time.monotonic()
+            self._requests[req.task_id] = req
+            if req.depends_on and not all(d in self._results
+                                          for d in req.depends_on):
+                self._waiting.append((req, 1))
+            else:
+                self._push(req, 1)
+        return req.task_id
+
+    def result(self, task_id: str, timeout: float = 300.0) -> EvalResult:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while task_id not in self._results:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError(task_id)
+                self._cv.wait(min(left, 0.05))
+            return self._results[task_id]
+
+    def run_all(self, reqs: Sequence[EvalRequest], timeout: float = 600.0
+                ) -> List[EvalResult]:
+        ids = [self.submit(r) for r in reqs]
+        return [self.result(t, timeout) for t in ids]
+
+    def evaluate(self, model_name: str, parameters, config=None,
+                 timeout: float = 300.0):
+        """Synchronous UM-Bridge-style call through the scheduler."""
+        req = EvalRequest(model_name=model_name, parameters=parameters,
+                          config=config or {})
+        self.submit(req)
+        res = self.result(req.task_id, timeout)
+        if res.status != "ok":
+            raise RuntimeError(f"{model_name} failed: {res.error}")
+        return res.value
+
+    # ------------------------------------------------------------------
+    # elasticity / fault injection / introspection
+    # ------------------------------------------------------------------
+    def _add_worker(self):
+        wid = getattr(self, "_wid_counter", 0)
+        self._wid_counter = wid + 1
+        w = Worker(self, wid)
+        self.workers.append(w)
+        w.start()
+
+    def scale_to(self, n: int):
+        with self._lock:
+            n = min(n, self.max_workers)
+            while len(self.workers) < n:
+                self._add_worker()
+            while len(self.workers) > n:
+                w = self.workers.pop()
+                w.alive = False
+
+    def kill_worker(self, idx: int = 0):
+        """Fault injection: hard-kill one worker (tests, chaos drills)."""
+        with self._lock:
+            if idx < len(self.workers):
+                self.workers[idx].crashed = True
+
+    def backlog(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def n_workers(self) -> int:
+        return len([w for w in self.workers if w.alive])
+
+    def _monitor_loop(self):
+        while not self._stopping:
+            time.sleep(0.05)
+            # autoscaling
+            if self.autoscale_backlog is not None:
+                if self.backlog() > self.autoscale_backlog and \
+                        len(self.workers) < self.max_workers:
+                    self.scale_to(len(self.workers) + 1)
+            # straggler re-issue (speculative execution)
+            if self.straggler_factor > 0:
+                with self._lock:
+                    done = [r.compute_t for r in self._results.values()
+                            if r.status == "ok"]
+                    if len(done) >= self.straggler_min_completed:
+                        done.sort()
+                        p95 = done[int(0.95 * (len(done) - 1))]
+                        cutoff = self.straggler_factor * max(p95, 1e-3)
+                        now = time.monotonic()
+                        for tid, (req, w, t_start) in list(
+                                self._running.items()):
+                            if now - t_start > cutoff and \
+                                    not req.config.get("_speculated"):
+                                req.config["_speculated"] = True
+                                self._push(req, 1)
+
+    # ------------------------------------------------------------------
+    # checkpoint / restart
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Serialisable queue state: done ids + pending request payloads."""
+        with self._lock:
+            pending = [req for _, _, (req, _) in self._heap]
+            pending += [req for req, _ in self._waiting]
+            pending += [req for req, _, _ in self._running.values()]
+            return {
+                "completed": {tid: {"value": r.value, "status": r.status}
+                              for tid, r in self._results.items()},
+                "pending": [{
+                    "model_name": r.model_name, "parameters": r.parameters,
+                    "config": {k: v for k, v in r.config.items()
+                               if not k.startswith("_")},
+                    "task_id": r.task_id,
+                    "time_request": r.time_request,
+                    "time_limit": r.time_limit,
+                    "depends_on": list(r.depends_on),
+                } for r in pending],
+            }
+
+    @classmethod
+    def restore(cls, snap: Dict[str, Any],
+                model_factories: Dict[str, Callable[[], Model]],
+                **kw) -> "Executor":
+        ex = cls(model_factories, **kw)
+        with ex._lock:
+            for tid, r in snap["completed"].items():
+                ex._results[tid] = EvalResult(task_id=tid, value=r["value"],
+                                              status=r["status"])
+        for p in snap["pending"]:
+            ex.submit(EvalRequest(**p))
+        return ex
+
+    # ------------------------------------------------------------------
+    def records(self) -> List[TaskRecord]:
+        with self._lock:
+            out = []
+            for r in self._results.values():
+                out.append(TaskRecord(
+                    task_id=r.task_id, submit_t=r.submit_t,
+                    start_t=r.start_t, end_t=r.end_t,
+                    cpu_time=r.cpu_time, compute_t=r.compute_t,
+                    worker=r.worker, attempts=r.attempts, status=r.status))
+            return out
+
+    def shutdown(self):
+        self._stopping = True
+        with self._cv:
+            for w in self.workers:
+                w.alive = False
+            self._cv.notify_all()
+        for w in self.workers:
+            w.join(timeout=1.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

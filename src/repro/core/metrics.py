@@ -1,0 +1,132 @@
+"""Scheduling metrics from the paper (§IV-A).
+
+The total runtime of a job (makespan) is treated as separable into two
+mutually exclusive additive parts: scheduling overhead and CPU time.
+Queueing time is deliberately part of the overhead (the scheduler's
+responsibility is to allocate resources regardless of system utilisation).
+
+SLR (Schedule Length Ratio, Topcuoglu et al. 2002):
+    SLR = makespan / sum_i C_i
+where C_i is the compute time of task i.  SLR == 1.0 is the zero-overhead
+lower bound when tasks run strictly sequentially on one worker; with W
+workers the work-conserving bound is max(1/W, ...) — the paper reports the
+sequential-sum form, so we do too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """Per-task timestamps (all in seconds on one clock).
+
+    submit_t   — when the task entered the scheduler queue
+    start_t    — when its job began occupying resources (CPU timer start)
+    end_t      — when it finished
+    cpu_time   — CPU-occupancy time of the *job* (init + compute), per the
+                 paper's definition ("the timer begins when the job starts")
+    compute_t  — the application's own compute time C_i (for SLR)
+    """
+    task_id: str
+    submit_t: float
+    start_t: float
+    end_t: float
+    cpu_time: float
+    compute_t: float
+    worker: str = ""
+    attempts: int = 1
+    status: str = "ok"
+
+    @property
+    def overhead(self) -> float:
+        """Per-task scheduling overhead = (end - submit) - cpu_time, >= 0."""
+        return max((self.end_t - self.submit_t) - self.cpu_time, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkSummary:
+    name: str
+    scheduler: str
+    n_tasks: int
+    makespan: float
+    total_cpu_time: float
+    total_compute: float
+    scheduling_overhead: float
+    slr: float
+    cpu_time_stats: Dict[str, float]
+    overhead_stats: Dict[str, float]
+
+
+def _stats(xs: Sequence[float]) -> Dict[str, float]:
+    if not xs:
+        return {k: 0.0 for k in ("min", "q1", "median", "q3", "max", "mean")}
+    s = sorted(xs)
+    n = len(s)
+
+    def q(p: float) -> float:
+        i = p * (n - 1)
+        lo, hi = int(math.floor(i)), int(math.ceil(i))
+        return s[lo] + (s[hi] - s[lo]) * (i - lo)
+
+    return {"min": s[0], "q1": q(0.25), "median": q(0.5), "q3": q(0.75),
+            "max": s[-1], "mean": sum(s) / n}
+
+
+def makespan(records: Sequence[TaskRecord]) -> float:
+    if not records:
+        return 0.0
+    return max(r.end_t for r in records) - min(r.submit_t for r in records)
+
+
+def total_cpu_time(records: Sequence[TaskRecord]) -> float:
+    return sum(r.cpu_time for r in records)
+
+
+def scheduling_overhead(records: Sequence[TaskRecord]) -> float:
+    """Makespan minus the *critical-path share* of CPU time.
+
+    The paper derives overhead by subtracting CPU time from makespan per
+    job and clamping at zero (SLURM's 1 s log granularity can make it
+    negative).  Aggregated the same way: sum of per-task overheads."""
+    return sum(r.overhead for r in records)
+
+
+def slr(records: Sequence[TaskRecord]) -> float:
+    total_c = sum(r.compute_t for r in records)
+    if total_c <= 0:
+        return float("inf")
+    return makespan(records) / total_c
+
+
+def summarize(name: str, scheduler: str,
+              records: Sequence[TaskRecord]) -> BenchmarkSummary:
+    return BenchmarkSummary(
+        name=name,
+        scheduler=scheduler,
+        n_tasks=len(records),
+        makespan=makespan(records),
+        total_cpu_time=total_cpu_time(records),
+        total_compute=sum(r.compute_t for r in records),
+        scheduling_overhead=scheduling_overhead(records),
+        slr=slr(records),
+        cpu_time_stats=_stats([r.cpu_time for r in records]),
+        overhead_stats=_stats([r.overhead for r in records]),
+    )
+
+
+def comparison_row(a: BenchmarkSummary, b: BenchmarkSummary) -> Dict[str, float]:
+    """Headline ratios used in EXPERIMENTS.md (a = baseline, b = candidate)."""
+    def ratio(x, y):
+        return x / y if y else float("inf")
+
+    return {
+        "makespan_reduction": 1.0 - ratio(b.makespan, a.makespan),
+        "cpu_time_reduction": 1.0 - ratio(b.total_cpu_time, a.total_cpu_time),
+        "overhead_ratio": ratio(a.scheduling_overhead,
+                                max(b.scheduling_overhead, 1e-9)),
+        "slr_a": a.slr,
+        "slr_b": b.slr,
+    }

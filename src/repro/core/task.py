@@ -1,0 +1,129 @@
+"""UM-Bridge model protocol and evaluation-request types.
+
+The paper's abstraction: a model is a map F: R^n -> R^m, served behind a
+language-agnostic interface; the UQ client sends evaluation requests
+{F(theta_i)} and the load balancer distributes them.  Here the HTTP layer
+is replaced by in-process calls (documented assumption change in
+DESIGN.md) but the protocol surface is kept: models declare input/output
+sizes, are queried for readiness before first use, and may expose a cost
+hint (the analogue of HQ's per-job *time request* — a scheduling hint,
+distinct from the *time limit* safety bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+_task_counter = itertools.count()
+
+
+class Model:
+    """Base class mirroring umbridge.Model."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def get_input_sizes(self, config: Optional[Dict] = None) -> List[int]:
+        raise NotImplementedError
+
+    def get_output_sizes(self, config: Optional[Dict] = None) -> List[int]:
+        raise NotImplementedError
+
+    def __call__(self, parameters: Sequence[Sequence[float]],
+                 config: Optional[Dict] = None) -> List[List[float]]:
+        raise NotImplementedError
+
+    def supports_evaluate(self) -> bool:
+        return True
+
+    # --- scheduling extensions (this paper) ---------------------------
+    def cost_hint(self, parameters, config: Optional[Dict] = None
+                  ) -> Optional[float]:
+        """Expected compute seconds (HQ 'time request' analogue); None if
+        unpredictable — the GS2 case the paper is built around."""
+        return None
+
+    def warmup(self) -> None:
+        """Server initialisation (compile caches etc.).  The ~1 s per-job
+        model-server init the paper measures corresponds to this running
+        per job on the naive backend vs once per worker on HQ."""
+
+
+@dataclasses.dataclass
+class LambdaModel(Model):
+    """Wrap a plain callable as a Model."""
+
+    def __init__(self, name: str, fn: Callable, input_size: int,
+                 output_size: int, cost_fn: Optional[Callable] = None,
+                 warmup_fn: Optional[Callable] = None):
+        super().__init__(name)
+        self._fn = fn
+        self._in = input_size
+        self._out = output_size
+        self._cost_fn = cost_fn
+        self._warmup_fn = warmup_fn
+
+    def get_input_sizes(self, config=None):
+        return [self._in]
+
+    def get_output_sizes(self, config=None):
+        return [self._out]
+
+    def __call__(self, parameters, config=None):
+        return self._fn(parameters, config)
+
+    def cost_hint(self, parameters, config=None):
+        return self._cost_fn(parameters, config) if self._cost_fn else None
+
+    def warmup(self):
+        if self._warmup_fn:
+            self._warmup_fn()
+
+
+@dataclasses.dataclass
+class EvalRequest:
+    """One F(theta) evaluation travelling through the load balancer."""
+    model_name: str
+    parameters: Any
+    config: Dict = dataclasses.field(default_factory=dict)
+    # HQ-style scheduling fields (seconds):
+    time_request: Optional[float] = None     # expected runtime (hint)
+    time_limit: Optional[float] = None       # hard kill bound
+    n_cpus: int = 1
+    task_id: str = ""
+    submit_t: float = 0.0
+    max_attempts: int = 3
+    # dependency edges (MCMC-style chains): ids that must finish first
+    depends_on: Sequence[str] = ()
+
+    def __post_init__(self):
+        if not self.task_id:
+            self.task_id = f"task-{next(_task_counter)}"
+        if not self.submit_t:
+            self.submit_t = time.monotonic()
+
+
+@dataclasses.dataclass
+class EvalResult:
+    task_id: str
+    value: Any = None
+    status: str = "ok"                        # ok | failed | timeout
+    error: Optional[str] = None
+    worker: str = ""
+    attempts: int = 1
+    submit_t: float = 0.0
+    dispatch_t: float = 0.0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    compute_t: float = 0.0                    # pure application time
+    init_t: float = 0.0                       # server-init share
+
+    @property
+    def cpu_time(self) -> float:
+        return self.init_t + self.compute_t
+
+    @property
+    def queue_wait(self) -> float:
+        return max(self.start_t - self.submit_t, 0.0)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, MemmapCorpus, make_pipeline,
+                                 host_shard)

@@ -1,0 +1,109 @@
+"""Mamba2 state-space-dual (SSD) scan as a chunked Pallas TPU kernel.
+
+Same structure as rwkv6_scan: grid (B*H, n_chunks), sequential TPU grid
+carrying the [P,N] state through an input/output-aliased ref, three MXU
+matmuls per chunk.  dt is folded into x (xdt = dt*x) and into the
+per-step log-decay (la = dt*A_h) by the wrapper; the D-skip term is
+stateless and applied outside.
+
+B/C are head-shared in Mamba2 — the BlockSpec index map points every head
+of one batch row at the same [C,N] tile, so the shared tensors are staged
+into VMEM once per (batch, chunk) instead of being materialised per-head
+in HBM ([B,S,N] stays [B,S,N], never [B,S,H,N]).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xdt_ref, la_ref, b_ref, c_ref, s_in_ref, y_ref, s_out_ref,
+                *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_out_ref[...] = s_in_ref[...]
+
+    st = s_out_ref[...][0].astype(jnp.float32)                 # [P,N]
+    xc = xdt_ref[...][0].astype(jnp.float32)                   # [C,P] (dt folded)
+    la = la_ref[...][0].astype(jnp.float32)                    # [C] log decay
+    bc = b_ref[...][0].astype(jnp.float32)                     # [C,N]
+    cc = c_ref[...][0].astype(jnp.float32)                     # [C,N]
+
+    cum = jnp.cumsum(la)                                       # [C]
+    # inter-chunk: y_t += exp(cum_t) * C_t . st
+    y_inter = jax.lax.dot_general(cc, st, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, None]                  # [C,P]
+    # intra-chunk: y_t += sum_{j<=t} (C_t.B_j) exp(cum_t-cum_j) xdt_j
+    g = jax.lax.dot_general(cc, bc, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C,C]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.exp(cum[:, None] - cum[None, :])
+    g = jnp.where(tj <= ti, g * l_mat, 0.0)
+    y_intra = jax.lax.dot_general(g, xc, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[...] = (y_inter + y_intra)[None].astype(y_ref.dtype)
+    # state: st' = exp(cum_C) st + sum_j exp(cum_C - cum_j) xdt_j B_j^T
+    k_dec = jnp.exp(cum[-1] - cum)                             # [C]
+    new_st = (jnp.exp(cum[-1]) * st
+              + jax.lax.dot_general(xc * k_dec[:, None], bc,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32))
+    s_out_ref[...] = new_st[None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, dt, a, b_in, c_in, d, state: Optional[jax.Array] = None, *,
+               chunk: int = 128, interpret: bool = False
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative); b,c: [B,S,N]; d: [H];
+    state: [B,H,P,N] f32.  Returns (y [B,S,H,P], final_state)."""
+    bb, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if state is None:
+        state = jnp.zeros((bb, h, p, n), jnp.float32)
+    state = state.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    dtf = dt.astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dtf[..., None])             # [B,S,H,P]
+    xdt = xdt.transpose(0, 2, 1, 3).reshape(bb * h, sp, p)
+    la = (dtf * a.astype(jnp.float32)[None, None, :])          # [B,S,H]
+    la = la.transpose(0, 2, 1).reshape(bb * h, sp)
+    st = state.reshape(bb * h, p, n)
+
+    x_spec = pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0))
+    la_spec = pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci))
+    bc_spec = pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh // h, ci, 0))
+    state_spec = pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0))
+
+    y, final_state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bb * h, nc),
+        in_specs=[x_spec, la_spec, bc_spec, bc_spec, state_spec],
+        out_specs=(x_spec, state_spec),
+        out_shape=(jax.ShapeDtypeStruct((bb * h, sp, p), x.dtype),
+                   jax.ShapeDtypeStruct((bb * h, p, n), jnp.float32)),
+        input_output_aliases={4: 1},
+        interpret=interpret,
+    )(xdt, la, b_in, c_in, st)
+
+    y = y.reshape(bb, h, sp, p).transpose(0, 2, 1, 3)[:, :s]
+    y = y + (d.astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32)[:, :s]).astype(y.dtype)
+    return y, final_state.reshape(bb, h, p, n)

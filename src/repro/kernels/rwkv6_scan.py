@@ -1,0 +1,110 @@
+"""RWKV6 (Finch) WKV recurrence as a chunked Pallas TPU kernel.
+
+TPU adaptation: the token-recurrent WKV update is reformulated as chunked
+gated linear attention (the same math as ref.rwkv6_wkv_chunked) so each
+grid step does three MXU matmuls ([C,K]@[K,V], [C,K]@[K,C], [C,C]@[C,V])
+instead of S sequential rank-1 updates.  The grid is (B*H, n_chunks) with
+TPU's sequential grid traversal carrying the [K,V] state in an
+input/output-aliased ref: chunk ci reads the state left by chunk ci-1 —
+no HBM round-trip between chunks beyond the aliased buffer.
+
+The diagonal "bonus" term (u) has no state dependence and is added by the
+wrapper outside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, s_in_ref, out_ref, s_out_ref,
+                *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_out_ref[...] = s_in_ref[...]
+
+    st = s_out_ref[...][0].astype(jnp.float32)                 # [K,V]
+    rc = r_ref[...][0].astype(jnp.float32)                     # [C,K]
+    kc = k_ref[...][0].astype(jnp.float32)
+    vc = v_ref[...][0].astype(jnp.float32)                     # [C,V]
+    wc = w_ref[...][0].astype(jnp.float32)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(logw, axis=0)                             # [C,K]
+    dec_in = jnp.exp(cum - logw)                               # prod w_1..w_{t-1}
+    r_dec = rc * dec_in
+    out_inter = jax.lax.dot_general(r_dec, st, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    k_dec = kc * jnp.exp(-cum)
+    a = jax.lax.dot_general(r_dec, k_dec, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C,C]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(tj < ti, a, 0.0)                             # strict lower tri
+    out_intra = jax.lax.dot_general(a, vc, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    out_ref[...] = (out_inter + out_intra)[None].astype(out_ref.dtype)
+
+    dec_all = jnp.exp(cum[-1])                                 # [K]
+    k_out = kc * jnp.exp(cum[-1][None] - cum)                  # [C,K]
+    new_st = (dec_all[:, None] * st
+              + jax.lax.dot_general(k_out, vc, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32))
+    s_out_ref[...] = new_st[None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, state: Optional[jax.Array] = None, *,
+              chunk: int = 64, interpret: bool = False
+              ) -> Tuple[jax.Array, jax.Array]:
+    """r,k,w: [B,S,H,K]; v: [B,S,H,V]; u: [H,K]; state: [B,H,K,V] f32.
+    Returns (out [B,S,H,V], final_state [B,H,K,V])."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, kd, vd), jnp.float32)
+    state = state.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+    if pad:
+        r = jnp.pad(r, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        w = jnp.pad(w, padw, constant_values=1.0)
+    sp = s + pad
+    n = sp // chunk
+
+    def fold(x):                                               # [B,S,H,E]->[BH,S,E]
+        return x.transpose(0, 2, 1, 3).reshape(b * h, sp, x.shape[-1])
+
+    rt, kt, vt, wt = fold(r), fold(k), fold(v), fold(w)
+    st = state.reshape(b * h, kd, vd)
+
+    seq_spec = lambda e: pl.BlockSpec((1, chunk, e), lambda bh, ci: (bh, ci, 0))
+    state_spec = pl.BlockSpec((1, kd, vd), lambda bh, ci: (bh, 0, 0))
+
+    out, final_state = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(b * h, n),
+        in_specs=[seq_spec(kd), seq_spec(kd), seq_spec(vd), seq_spec(kd),
+                  state_spec],
+        out_specs=(seq_spec(vd), state_spec),
+        out_shape=(jax.ShapeDtypeStruct((b * h, sp, vd), r.dtype),
+                   jax.ShapeDtypeStruct((b * h, kd, vd), jnp.float32)),
+        input_output_aliases={4: 1},
+        interpret=interpret,
+    )(rt, kt, vt, wt, st)
+
+    out = out.reshape(b, h, sp, vd).transpose(0, 2, 1, 3)[:, :s]
+    # diagonal bonus: r_t . (u * k_t) v_t  (stateless; done outside the kernel)
+    diag = jnp.einsum("bshk,hk,bshk->bsh", r.astype(jnp.float32)[:, :s],
+                      u.astype(jnp.float32), k.astype(jnp.float32)[:, :s])
+    out = out + (diag[..., None] * v.astype(jnp.float32)[:, :s]).astype(out.dtype)
+    return out, final_state.reshape(b, h, kd, vd)

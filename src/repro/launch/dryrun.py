@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train
+shapes, prefill/decode steps otherwise) against abstract ShapeDtypeStruct
+inputs with full production shardings, compiles it, and records:
+  * memory_analysis()  — per-device bytes (proves the cell fits),
+  * cost_analysis()    — per-device HLO flops / bytes accessed,
+  * collective traffic — parsed from optimized HLO (all-gather/all-reduce/
+    reduce-scatter/all-to-all/collective-permute operand bytes),
+  * derived roofline terms for the v5e-class target
+    (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.launch import hlo_cost, hlo_stats, specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models import model as model_lib
+from repro.models import sharding
+from repro.optim import AdamWConfig
+
+# target hardware constants (TPU v5e class)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+HBM_PER_CHIP = 16 * 2**30    # v5e: 16 GiB
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def step_for(cfg, shape, opt_cfg):
+    """-> (step_fn, donate_argnums).  Donation aliases the streaming state
+    (params+opt for train, the KV/recurrent cache for serving) so XLA
+    updates buffers in place instead of double-buffering them — without it
+    a decode step carries two copies of a multi-GiB cache."""
+    if shape.mode == "train":
+        return make_train_step(cfg, opt_cfg), (0, 1)
+    if shape.mode == "prefill":
+        return make_prefill_step(cfg), (2,)
+    return make_decode_step(cfg), (1,)
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True, verbose: bool = True,
+             overrides: dict = None, tag: str = "") -> dict:
+    """overrides: ModelConfig.replace kwargs (perf-hillclimb knobs);
+    tag: suffix for the result file so variants never clobber baselines."""
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = next(s for s in configs.shapes() if s.name == shape_name)
+    if not cfg.runnable(shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped",
+               "reason": "long_500k requires sub-quadratic attention"}
+        if save:
+            _save(rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    opt_cfg = AdamWConfig(moments_dtype=cfg.moments_dtype)
+    step, donate = step_for(cfg, shape, opt_cfg)
+    args, in_sh = specs.cell_arguments(cfg, shape, mesh, opt_cfg)
+    t0 = time.time()
+    with sharding.use_mesh(mesh):
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled.memory_analysis())
+    hlo = compiled.as_text()
+    # trip-count-aware walk of the optimized HLO (cost_analysis counts
+    # scanned layer bodies only once; see launch/hlo_cost.py)
+    walked = hlo_cost.analyze(hlo)
+    flops_dev = float(walked["flops"])
+    bytes_dev = float(walked["bytes"])
+    coll_bytes = float(walked["collective_bytes"])
+
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    n_active = model_lib.count_active_params(cfg)
+    mult = 6 if shape.mode == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    collective_term = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": collective_term}
+    dominant = max(terms, key=terms.get)
+    temp_b = mem.get("temp_size_in_bytes", 0)
+    arg_b = mem.get("argument_size_in_bytes", 0)
+    fits = (temp_b + arg_b) <= HBM_PER_CHIP
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "tag": tag, "overrides": dict(overrides or {}),
+        "status": "ok", "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": walked["collectives"],
+        "bytes_by_opcode": walked.get("bytes_by_opcode", {}),
+        "xla_cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                                  "bytes": float(cost.get("bytes accessed",
+                                                          0.0))},
+        "memory_analysis": mem,
+        "fits_hbm_16g": bool(fits),
+        "roofline": {**terms, "dominant": dominant},
+        "model_flops_global": float(model_flops),
+        "hlo_flops_global": flops_dev * n_dev,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_dev)
+                               if flops_dev else 0.0),
+        "active_params": int(n_active),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}] "
+              f"compile={t_compile:.1f}s flops/dev={flops_dev:.3e} "
+              f"bytes/dev={bytes_dev:.3e} coll/dev={coll_bytes:.3e} "
+              f"mem(arg+temp)={(arg_b + temp_b)/2**30:.2f}GiB "
+              f"fits16G={fits} dominant={dominant}")
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{rec['tag']}" if rec.get("tag") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s.name) for a, s, _run in configs.cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shp in cells:
+        for mk in meshes:
+            out = RESULTS_DIR / f"{arch}__{shp}__{mk}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[{arch} x {shp} x {mk}] cached: {prev['status']}")
+                    continue
+            try:
+                run_cell(arch, shp, mk)
+            except Exception as e:  # a failure here is a sharding bug
+                traceback.print_exc()
+                failures.append((arch, shp, mk, repr(e)))
+                _save({"arch": arch, "shape": shp, "mesh": mk,
+                       "status": "failed", "error": repr(e)})
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll requested dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Trip-count-aware cost analysis of compiled (optimized) HLO text.
+
+`compiled.cost_analysis()` visits every instruction ONCE — a model scanned
+over L layers (`jax.lax.scan`, our default for compile-time sanity at 512
+devices) is under-counted by ~L in FLOPs, bytes and collective traffic.
+This walker fixes that from the artifact itself:
+
+  * parse every computation and its ops;
+  * FLOPs: 2 * |out| * contraction for every `dot` (recursing into fusion
+    bodies, where the dots actually live after fusion);
+  * HBM bytes: operand+output bytes of top-level ops (fusion boundaries
+    only — fused interiors never touch HBM), excluding pure plumbing
+    (tuple/get-tuple-element/parameter/bitcast/while shells);
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async `-start`
+    counted once);
+  * `while` bodies are multiplied by `backend_config.known_trip_count`
+    (fallback 1 when XLA could not prove a trip count);
+  * call graph walked from ENTRY through fusion/call/while/conditional.
+
+The result is the per-device roofline input for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"         # result name
+    r"((?:\([^)]*\)|[\w\[\],\{\}\. ]+?))\s+"         # result shape (tuple ok)
+    r"([\w\-]+)\(")                                   # opcode
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"(\{[^}]*\}|%?[\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\\?\{\\?"n\\?":\\?"(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "opt-barrier", "copy-start", "copy-done"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[List[int]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        out.append([int(d) for d in m.group(2).split(",") if d])
+    return out
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Optional[Dict[str, float]] = None
+    by_opcode: Optional[Dict[str, float]] = None   # bytes per opcode
+
+    def add_bytes(self, opcode: str, b: float):
+        self.bytes += b
+        if self.by_opcode is None:
+            self.by_opcode = defaultdict(float)
+        self.by_opcode[opcode] += b
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_shape: str
+    line: str
+    called: List[str]
+    operands: List[str]
+    trip_count: int = 1
+    is_root: bool = False
+
+
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, List[_Op]], str,
+                                           Dict[str, str]]:
+    comps: Dict[str, List[_Op]] = {}
+    shapes: Dict[str, str] = {}          # op name -> result shape string
+    entry = ""
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = current
+                continue
+        if line.strip() == "}":
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.group(1), m.group(2), m.group(3)
+        is_root = line.lstrip().startswith("ROOT")
+        shapes[name] = shape
+        # operand region: between the opcode's '(' and its closing ')'
+        op_pos = line.find(opcode + "(")
+        lp = op_pos + len(opcode)
+        rp = line.find(")", lp)
+        operand_blob = line[lp + 1:rp] if rp > lp else ""
+        operands = _OPERAND_RE.findall(operand_blob)
+        called: List[str] = []
+        for cm in _CALLED_RE.finditer(line):
+            blob = cm.group(1)
+            if blob.startswith("{"):
+                called += [c.strip().lstrip("%") for c in
+                           blob.strip("{}").split(",") if c.strip()]
+            else:
+                called.append(blob.lstrip("%"))
+        trip = 1
+        tm = _TRIP_RE.search(line)
+        if tm:
+            trip = int(tm.group(1))
+        comps[current].append(_Op(name, opcode, shape, line, called,
+                                  operands, trip, is_root))
+    return comps, entry, shapes
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    dims_list = _shape_dims(op.result_shape)
+    if not dims_list:
+        return 0.0
+    out_elems = 1
+    for d in dims_list[0]:
+        out_elems *= d
+    cm = _CONTRACT_RE.search(op.line)
+    if not cm:
+        return 2.0 * out_elems
+    cdims = [int(x) for x in cm.group(1).split(",") if x]
+    lhs_shape = shapes.get(op.operands[0], "") if op.operands else ""
+    lhs_dims_list = _shape_dims(lhs_shape)
+    if not lhs_dims_list:
+        return 2.0 * out_elems
+    lhs_dims = lhs_dims_list[0]
+    contract = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            contract *= lhs_dims[c]
+    return 2.0 * out_elems * contract
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry, self.shapes = _parse_computations(hlo_text)
+        self._memo: Dict[Tuple[str, bool], OpCost] = {}
+
+    @staticmethod
+    def _merge(total: OpCost, sub: OpCost, scale: float = 1.0,
+               flops_only: bool = False):
+        total.flops += sub.flops * scale
+        if flops_only:
+            return
+        total.bytes += sub.bytes * scale
+        total.coll_bytes += sub.coll_bytes * scale
+        for k, v in (sub.coll_counts or {}).items():
+            total.coll_counts[k] += v * scale
+        for k, v in (sub.by_opcode or {}).items():
+            if total.by_opcode is None:
+                total.by_opcode = defaultdict(float)
+            total.by_opcode[k] += v * scale
+
+    def _comp_cost(self, comp: str, fused: bool) -> OpCost:
+        """Cost of one execution of `comp`.  `fused=True` -> interior of a
+        fusion: only FLOPs count (no HBM traffic, no collectives expected)."""
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = OpCost(coll_counts=defaultdict(float),
+                       by_opcode=defaultdict(float))
+        for op in self.comps.get(comp, ()):
+            oc = op.opcode
+            if oc == "fusion":
+                for c in op.called:
+                    self._merge(total, self._comp_cost(c, True),
+                                flops_only=True)
+                if not fused:
+                    total.add_bytes("fusion",
+                                    sum(self._fusion_bytes(c)
+                                        for c in op.called))
+            elif oc in ("while",):
+                for c in op.called:
+                    self._merge(total, self._comp_cost(c, fused),
+                                scale=op.trip_count)
+            elif oc in ("call", "conditional", "custom-call", "reduce",
+                        "sort", "scatter", "map", "reduce-window",
+                        "select-and-scatter", "all-reduce", "reduce-scatter"):
+                for c in op.called:
+                    self._merge(total,
+                                self._comp_cost(c, fused or oc == "reduce"))
+                if oc.startswith("all-") or oc == "reduce-scatter":
+                    b = self._op_bytes(op, output_only=True)
+                    total.coll_bytes += b
+                    total.coll_counts[oc] += 1
+                    if not fused:
+                        total.add_bytes(oc, self._op_bytes(op))
+                elif not fused and oc not in _SKIP_BYTES:
+                    total.add_bytes(oc, self._op_bytes(op))
+            elif oc == "dot":
+                total.flops += _dot_flops(op, self.shapes)
+                if not fused:
+                    total.add_bytes(oc, self._op_bytes(op))
+            elif any(oc == c or oc == c + "-start" for c in _COLLECTIVES):
+                base = oc[:-6] if oc.endswith("-start") else oc
+                b = self._op_bytes(op, output_only=True)
+                total.coll_bytes += b
+                total.coll_counts[base] += 1
+                if not fused:
+                    total.add_bytes(base, self._op_bytes(op))
+            elif oc.endswith("-done") or oc in _SKIP_BYTES:
+                continue
+            else:
+                if not fused:
+                    total.add_bytes(oc, self._op_bytes(op))
+        total.coll_counts = dict(total.coll_counts)
+        total.by_opcode = dict(total.by_opcode)
+        self._memo[key] = total
+        return total
+
+    def _fusion_bytes(self, body: str) -> float:
+        """HBM traffic of one fusion execution, use-def-aware: a body
+        parameter consumed ONLY by slice-type ops is read at the slice
+        size (XLA's FusionCalculateUtilization does the same), otherwise
+        at full size; writes = the root's output."""
+        key = ("__fusion_bytes__", body)
+        if key in self._memo:
+            return self._memo[key].bytes
+        ops = self.comps.get(body, ())
+        consumers: Dict[str, List[_Op]] = defaultdict(list)
+        for op in ops:
+            for o in op.operands:
+                consumers[o].append(op)
+        total = 0.0
+        for op in ops:
+            if op.opcode == "parameter":
+                cons = consumers.get(op.name, [])
+                if cons and all(c.opcode in ("dynamic-slice", "slice",
+                                             "gather") for c in cons):
+                    total += sum(_shape_bytes(c.result_shape) for c in cons)
+                else:
+                    total += _shape_bytes(op.result_shape)
+            elif op.is_root:
+                total += _shape_bytes(op.result_shape)
+            elif op.opcode == "fusion":           # nested fusion
+                total += sum(self._fusion_bytes(c) for c in op.called)
+        self._memo[key] = OpCost(bytes=total)
+        return total
+
+    def _op_bytes(self, op: _Op, output_only: bool = False) -> float:
+        out_b = _shape_bytes(op.result_shape)
+        if output_only:
+            # collective payload proxy: the op's RESULT bytes (gathered /
+            # reduced tensor), per the roofline brief's operand-size sum
+            return float(out_b)
+        oc = op.opcode
+        # slicing ops read only the slice, not the whole operand (matching
+        # XLA's bytes-accessed); update ops read+write only the update
+        # window (in-place buffer semantics)
+        if oc in ("dynamic-slice", "slice", "gather"):
+            return float(2.0 * out_b)
+        if oc in ("dynamic-update-slice", "scatter"):
+            upd = (_shape_bytes(self.shapes.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else out_b)
+            return float(2.0 * upd)
+        in_b = sum(_shape_bytes(self.shapes.get(o, "")) for o in op.operands)
+        return float(out_b + in_b)
+
+    def total(self) -> OpCost:
+        return self._comp_cost(self.entry, False)
+
+
+def analyze(hlo_text: str, top_ops: int = 12) -> Dict[str, float]:
+    c = HloCost(hlo_text).total()
+    by = sorted((c.by_opcode or {}).items(), key=lambda kv: -kv[1])[:top_ops]
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": c.coll_bytes,
+            "collectives": c.coll_counts or {},
+            "bytes_by_opcode": dict(by)}

@@ -1,0 +1,75 @@
+"""Parse collective traffic and op statistics out of compiled/optimized HLO.
+
+`cost_analysis()` reports flops and bytes but NOT collective bytes, so the
+roofline's collective term comes from summing operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the optimized HLO text.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,1280,7168]{2,1,0} all-gather(...)"
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^=]*\)|[\w\[\],\{\} ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """-> {op_kind: {"count": n, "bytes": output bytes summed}}.
+
+    `-done` ops are skipped so async (start/done) pairs count once."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(shape_str)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> Dict[str, int]:
+    """Count opcodes (fusion-level view of what the program does)."""
+    counts: Dict[str, int] = defaultdict(int)
+    opre = re.compile(r"=\s*(?:\([^)]*\)\s+)?[\w\[\],\{\} ]*?\s([a-z][\w\-]*)\(")
+    for line in hlo_text.splitlines():
+        m = opre.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

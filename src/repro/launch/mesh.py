@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the 512-placeholder-device dry-run must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(*, data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
+
+
+def mesh_device_count(mesh: Mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,166 @@
+"""Serving driver: LM decode requests scheduled through the paper's
+load balancer.
+
+The paper's workload shape — many evaluations of one expensive map with
+widely varying per-request cost — is exactly LM serving with mixed
+sequence lengths.  This driver wraps an LM's prefill+decode loop as an
+UM-Bridge `Model` and pushes batched requests through the persistent-
+worker executor (HQ semantics: the jit cache is the warm server) or the
+naive per-request mode (SLURM semantics: fresh compile every request),
+so the paper's comparison is measurable on real JAX serving.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
+        --requests 16 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import EvalRequest, Executor, LambdaModel
+from repro.core.metrics import summarize
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+class LMServer:
+    """A persistent LM model server: holds params + compiled steps.
+
+    Prompts are right-padded to power-of-two BUCKETS so the warm server's
+    jit cache hits across requests of different lengths — without this,
+    every distinct prompt length recompiles and a 'persistent' server is
+    no faster than a fresh one (measured; see EXPERIMENTS.md §Perf-serve).
+    Causal masking keeps the padded KV rows unread until decode overwrites
+    them position by position."""
+
+    def __init__(self, cfg: ModelConfig, *, batch: int = 1,
+                 max_len: int = 256, seed: int = 0, min_bucket: int = 16):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.min_bucket = min_bucket
+        self.params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+        from repro.launch.steps import make_bucketed_prefill_step
+        self._prefill = jax.jit(make_bucketed_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def warmup(self, prompt_len: int = 8):
+        self.generate(np.zeros((self.batch, prompt_len), np.int32), 1)
+
+    def _bucket(self, s: int) -> int:
+        # Recurrent archs (SSM/RWKV/hybrid) integrate every input token
+        # into their state — right-padding would corrupt it (causal
+        # masking only protects attention caches).  They use exact
+        # lengths; attention archs bucket.
+        if self.cfg.block_kind != "attn+mlp":
+            return s
+        b = self.min_bucket
+        while b < s:
+            b *= 2
+        return min(b, self.max_len)
+
+    def generate(self, prompt_tokens: np.ndarray, max_new: int
+                 ) -> np.ndarray:
+        b, s = prompt_tokens.shape
+        assert b == self.batch
+        bucket = self._bucket(s)
+        padded = np.zeros((b, bucket), np.int32)
+        padded[:, :s] = prompt_tokens
+        cache = model_lib.init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(padded)}, cache,
+            jnp.full((b,), s - 1, jnp.int32))
+        outs = []
+        tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+        outs.append(tok)
+        for i in range(max_new - 1):
+            pos = jnp.int32(s + i)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok[:, None]}, pos)
+            tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+            outs.append(tok)
+        return np.stack([np.asarray(t) for t in outs], axis=1)
+
+
+def make_lm_model_factory(cfg: ModelConfig, *, max_len: int = 256,
+                          seed: int = 0):
+    """UM-Bridge model factory: parameters = [prompt tokens]; config may
+    set max_new.  Request cost scales with prompt length + new tokens —
+    the mixed-cost profile the scheduler is for."""
+
+    def factory():
+        server = LMServer(cfg, batch=1, max_len=max_len, seed=seed)
+
+        def fn(parameters, config):
+            prompt = np.asarray(parameters, np.int32).reshape(1, -1)
+            max_new = int((config or {}).get("max_new", 8))
+            out = server.generate(prompt, max_new)
+            return [out[0].tolist()]
+
+        model = LambdaModel(f"lm-{cfg.name}", fn, input_size=-1,
+                            output_size=-1,
+                            warmup_fn=lambda: server.warmup())
+        return model
+
+    return factory
+
+
+def serve_benchmark(arch: str, *, n_requests: int = 16, max_new: int = 8,
+                    n_workers: int = 2, persistent: bool = True,
+                    max_len: int = 256, seed: int = 0,
+                    reduced: bool = True) -> Dict:
+    cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, max_len // 2, n_requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)).tolist()
+               for l in lens]
+    factory = make_lm_model_factory(cfg, max_len=max_len, seed=seed)
+    name = f"lm-{cfg.name}"
+    t0 = time.monotonic()
+    with Executor({name: factory}, n_workers=n_workers,
+                  persistent_servers=persistent,
+                  name="hq" if persistent else "slurm") as ex:
+        reqs = [EvalRequest(name, p, config={"max_new": max_new},
+                            time_request=0.001 * len(p))
+                for p in prompts]
+        results = ex.run_all(reqs, timeout=1200.0)
+        recs = ex.records()
+    wall = time.monotonic() - t0
+    assert all(r.status == "ok" for r in results)
+    summary = summarize(f"serve-{arch}", "hq" if persistent else "slurm",
+                        recs)
+    return {"wall": wall, "summary": summary,
+            "tokens": sum(len(r.value[0]) for r in results)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for persistent in (True, False):
+        out = serve_benchmark(args.arch, n_requests=args.requests,
+                              max_new=args.max_new, n_workers=args.workers,
+                              persistent=persistent, max_len=args.max_len,
+                              reduced=not args.full)
+        s = out["summary"]
+        mode = "persistent (HQ)" if persistent else "per-request (SLURM)"
+        print(f"[serve {args.arch}] {mode:22s} wall={out['wall']:.2f}s "
+              f"cpu={s.total_cpu_time:.2f}s overhead={s.scheduling_overhead:.3f}s "
+              f"SLR={s.slr:.2f}")
+
+
+if __name__ == "__main__":
+    main()

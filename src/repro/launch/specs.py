@@ -1,0 +1,100 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+`input_specs()` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation), per the dry-run contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model, sharding
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, abstract_opt_state, opt_state_axes
+
+
+def batch_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    s = 1 if shape.mode == "decode" else shape.seq_len
+    if cfg.input_mode == "embeddings":
+        specs = {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    cfg.activation_dtype)}
+        if shape.mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def batch_axes_tree(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    out = {}
+    for k, v in batch_input_specs(cfg, shape).items():
+        out[k] = ("act_batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def fsdp_axes(cfg: ModelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    ax = ("pod", "data") if cfg.fsdp_pod else ("data",)
+    return tuple(a for a in ax if a in mesh.axis_names)
+
+
+def _param_rules(cfg: ModelConfig):
+    if not cfg.ep_over_data:
+        return None
+    # EP over (data x model): experts fully resident, no FSDP on the
+    # expert hidden dim (serving layout; see moe._moe_body_ep_all)
+    rules = dict(sharding.PARAM_RULES)
+    rules["expert"] = (("data", "model"), ("model",))
+    rules["expert_mlp"] = ((),)
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return sharding.tree_shardings(model.param_axes(cfg),
+                                   model.abstract_params(cfg), mesh,
+                                   fsdp_axes=fsdp_axes(cfg, mesh),
+                                   rules=_param_rules(cfg))
+
+
+def opt_shardings(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh: Mesh):
+    ax = opt_state_axes(model.param_axes(cfg))
+    ab = abstract_opt_state(model.abstract_params(cfg), opt_cfg)
+    return sharding.tree_shardings(ax, ab, mesh,
+                                   fsdp_axes=fsdp_axes(cfg, mesh),
+                                   rules=_param_rules(cfg))
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    return sharding.tree_shardings(batch_axes_tree(cfg, shape),
+                                   batch_input_specs(cfg, shape), mesh,
+                                   rules=sharding.ACT_RULES)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    ab = model.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    ax = model.cache_axes(cfg, shape.global_batch, shape.seq_len)
+    return sharding.tree_shardings(ax, ab, mesh, rules=sharding.ACT_RULES)
+
+
+def cell_arguments(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   opt_cfg: Optional[AdamWConfig] = None):
+    """-> (abstract_args tuple, in_shardings tuple) for the cell's step fn."""
+    opt_cfg = opt_cfg or AdamWConfig(moments_dtype=cfg.moments_dtype)
+    ap = model.abstract_params(cfg)
+    psh = param_shardings(cfg, mesh)
+    batch = batch_input_specs(cfg, shape)
+    bsh = batch_shardings(cfg, shape, mesh)
+    if shape.mode == "train":
+        aopt = abstract_opt_state(ap, opt_cfg)
+        osh = opt_shardings(cfg, opt_cfg, mesh)
+        return (ap, aopt, batch), (psh, osh, bsh)
+    acache = model.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    csh = cache_shardings(cfg, shape, mesh)
+    if shape.mode == "prefill":
+        return (ap, batch, acache), (psh, bsh, csh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    possh = NamedSharding(mesh, P())
+    return (ap, acache, batch, pos), (psh, csh, bsh, possh)

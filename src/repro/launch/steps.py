@@ -1,0 +1,107 @@
+"""jit-able train / prefill / decode step factories."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model, sharding
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, compress_with_feedback
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    *, compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation: the global batch is split into cfg.accum_steps
+    microbatches scanned sequentially; gradients accumulate in f32 (bf16 when
+    the config opts into bf16 moments, halving peak optimizer-path HBM)."""
+    accum = max(cfg.accum_steps, 1)
+    acc_dtype = (jnp.bfloat16 if cfg.moments_dtype == "bfloat16"
+                 else jnp.float32)
+
+    def micro_loss(params, mb):
+        return model.loss_fn(params, mb, cfg)
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: sharding.constrain(
+                        x, *(("act_batch",) + (None,) * (x.ndim - 1))), mb)
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                return (g_acc, loss_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss_sum), ms = jax.lax.scan(body, (g0, jnp.float32(0)),
+                                                 split)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        if compress_grads:
+            grads, err = compress_with_feedback(grads, opt_state["comp_err"])
+        new_params, new_opt, om = adamw_update(params, grads,
+                                               {k: v for k, v in
+                                                opt_state.items()
+                                                if k != "comp_err"}, opt_cfg)
+        if compress_grads:
+            new_opt["comp_err"] = err
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        logits, new_cache, _ = model.prefill(params, batch, cfg, cache,
+                                             last_only=True)
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_bucketed_prefill_step(cfg: ModelConfig):
+    """Prefill over a right-padded prompt bucket; the LM head runs on the
+    true last token only (`last_index`, per-row).  Padding rows write
+    garbage KV beyond last_index, but causal masking means nothing ever
+    reads them before decode overwrites them position by position."""
+    def prefill_step(params, batch, cache, last_index):
+        logits, new_cache, _ = model.forward(params, batch, cfg,
+                                             cache=cache,
+                                             last_index=last_index)
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch, pos):
+        logits, new_cache = model.decode_step(params, batch, cfg, cache, pos)
+        return logits, new_cache
+
+    return decode_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch, cfg)
+        return metrics
+
+    return eval_step

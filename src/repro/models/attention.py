@@ -1,0 +1,417 @@
+"""Attention blocks: GQA (llama-style) and MLA (deepseek/minicpm-style).
+
+Three execution paths per block:
+  * train / prefill: full-sequence causal attention (Pallas flash kernel on
+    TPU, chunked-jnp fallback elsewhere) — prefill additionally returns the
+    KV cache.
+  * decode: one new token against a pre-filled cache.  When a mesh is active
+    the cache's sequence dimension is sharded over the `model` axis and the
+    attention is computed flash-decoding style inside `shard_map` (partial
+    max/sum per shard + logsumexp merge via psum) — the TPU-native analogue
+    of splitting one long context over many workers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+from repro.models import sharding
+from repro.models.layers import ParamDef, apply_rope, dense, rms_norm
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+def gqa_defs(cfg) -> Dict[str, ParamDef]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs = {
+        "w_q": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_k": ParamDef((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "w_v": ParamDef((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "w_o": ParamDef((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((dh,), ("head_dim",), "ones")
+        defs["k_norm"] = ParamDef((dh,), ("head_dim",), "ones")
+    return defs
+
+
+def _project_qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg, *, positions, cache=None, decode_pos=None):
+    """x: [B,S,D].  Returns (out, new_cache_or_None)."""
+    if cache is not None and decode_pos is not None:          # decode
+        return _gqa_decode(p, x, cfg, cache, decode_pos)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if cfg.seq_shard and cache is None:
+        # context-parallel attention (train path): Q rows seq-sharded over
+        # `model`, K/V replicated; the dense form lets XLA SPMD shard the
+        # score/context matmuls by Q rows — the chunked-scan form would
+        # serialise a scan over a sharded dim.  Traffic and FLOPs per
+        # device drop ~TP-fold vs the replicated fallback.
+        from repro.kernels import ref as kref
+        q = sharding.constrain(q, "act_batch", "act_seq", "act_heads", None)
+        k = sharding.constrain(k, "act_batch", "act_seq_attn",
+                               "act_kv_heads", None)
+        v = sharding.constrain(v, "act_batch", "act_seq_attn",
+                               "act_kv_heads", None)
+        out = kref.attention(q, k, v, causal=True)
+    elif _use_cp_prefill(cfg, cache, x.shape[1]):
+        # context-parallel prefill (forward-only, memory-bounded): chunked
+        # attention per rank over its Q-row shard via shard_map
+        out = _cp_prefill_attention(q, k, v, cfg, sharding._current_mesh())
+    else:
+        q = sharding.constrain(q, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        k = sharding.constrain(k, "act_batch", "act_seq_attn",
+                               "act_kv_heads", None)
+        v = sharding.constrain(v, "act_batch", "act_seq_attn",
+                               "act_kv_heads", None)
+        out = kops.flash_attention(q, k, v, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_o"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = None
+    if cache is not None:                                     # prefill into cache
+        s = x.shape[1]
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+        } if s != cache["k"].shape[1] else {"k": k, "v": v}
+        new_cache = {n: sharding.constrain(
+            c, "act_batch", "act_seq_sharded", "act_kv_heads", None)
+            for n, c in new_cache.items()}
+    return out, new_cache
+
+
+def gqa_cache_defs(cfg, batch: int, max_len: int) -> Dict[str, ParamDef]:
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    ax = ("act_batch", "act_seq_sharded", "act_kv_heads", None)
+    return {"k": ParamDef((batch, max_len, hkv, dh), ax, "zeros"),
+            "v": ParamDef((batch, max_len, hkv, dh), ax, "zeros")}
+
+
+def _cp_prefill_attention(q, k, v, cfg, mesh):
+    """Context-parallel prefill: each `model`-rank computes its S/tp Q rows
+    against the full K/V (gathered once) with the chunked forward —
+    inside shard_map, so the chunk scan stays per-device (SPMD would
+    serialise a scan over a sharded dim)."""
+    from repro.kernels import ref as kref
+    b, s = q.shape[:2]
+    tp = sharding.current_mesh_axis_size("model")
+    bspec = _batch_spec(mesh, b)
+    s_local = s // tp
+
+    def body(q_l, k_f, v_f):
+        rank = jax.lax.axis_index("model")
+        return kref.attention_chunked_fwd(q_l, k_f, v_f, causal=True,
+                                          q_offset=rank * s_local)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None),
+                  P(bspec, None, None, None), P(bspec, None, None, None)),
+        out_specs=P(bspec, "model", None, None),
+        check_vma=False,
+    )(q, k, v)
+
+
+def _use_cp_prefill(cfg, cache, s: int) -> bool:
+    mesh = sharding._current_mesh()
+    tp = sharding.current_mesh_axis_size("model")
+    return (cfg.seq_shard and cache is not None and mesh is not None
+            and tp > 1 and s % tp == 0)
+
+
+def _merge_partial(o, m, l, axis_name):
+    """Merge flash-decoding partials across `axis_name`: [B,H,Dh],[B,H],[B,H]."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    o_g = jax.lax.psum(o * corr[..., None], axis_name)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def _local_masked_attend(q, k, v, valid):
+    """q:[B,H,Dh] k/v:[B,S,H,Dh] valid:[B,S] -> partial (o, m, l) in f32."""
+    s = jnp.einsum("bhk,bshk->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)                                   # [B,H]
+    e = jnp.exp(s - m[..., None]) * valid[:, None, :]
+    l = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bhs,bshk->bhk", e, v.astype(jnp.float32))
+    return o, m, l
+
+
+def _gqa_decode_body(q, k_new, v_new, ck, cv, pos, *, axis_name, shards):
+    """Per-shard body. ck/cv: [B, S_local, Hkv, Dh]; q: [B, H, Dh]."""
+    b, s_local, hkv, dh = ck.shape
+    h = q.shape[1]
+    rank = jax.lax.axis_index(axis_name) if axis_name else 0
+    local_pos = pos - rank * s_local
+    iota = jnp.arange(s_local)
+    hit = (iota == local_pos)[None, :, None, None]            # [1,S_l,1,1]
+    ck = jnp.where(hit, k_new[:, None], ck)
+    cv = jnp.where(hit, v_new[:, None], cv)
+    # expand kv heads -> q heads
+    rep = h // hkv
+    ke = jnp.repeat(ck, rep, axis=2)
+    ve = jnp.repeat(cv, rep, axis=2)
+    global_iota = iota + rank * s_local
+    valid = jnp.broadcast_to((global_iota <= pos)[None, :], (b, s_local))
+    o, m, l = _local_masked_attend(q, ke, ve, valid)
+    if axis_name:
+        out = _merge_partial(o, m, l, axis_name)
+    else:
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype), ck, cv
+
+
+def _batch_spec(mesh, batch_size: int):
+    """Mesh axes for the batch dim of a shard_map decode body; falls back
+    to replicated when the batch does not divide (e.g. long_500k B=1)."""
+    ba = sharding.batch_axes(mesh)
+    total = 1
+    for a in ba:
+        total *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if not ba or batch_size % total != 0:
+        return None
+    return ba[0] if len(ba) == 1 else ba
+
+
+def _gqa_decode(p, x, cfg, cache, pos):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)              # [B,1,H,Dh]
+    q, k_new, v_new = q[:, 0], k[:, 0], v[:, 0]
+    mesh = sharding._current_mesh()
+    shards = sharding.current_mesh_axis_size("model")
+    if mesh is not None and shards > 1 and cache["k"].shape[1] % shards == 0:
+        bspec = _batch_spec(mesh, b)
+        body = functools.partial(_gqa_decode_body, axis_name="model",
+                                 shards=shards)
+        out, ck, cv = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(bspec, None, None),
+                      P(bspec, None, None),
+                      P(bspec, "model", None, None), P(bspec, "model", None, None),
+                      P()),
+            out_specs=(P(bspec, None, None),
+                       P(bspec, "model", None, None), P(bspec, "model", None, None)),
+            check_vma=False,
+        )(q, k_new, v_new, cache["k"], cache["v"], pos)
+    else:
+        out, ck, cv = _gqa_decode_body(q, k_new, v_new, cache["k"], cache["v"],
+                                       pos, axis_name=None, shards=1)
+    out = jnp.einsum("bhk,hkd->bd", out, p["w_o"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out[:, None], {"k": ck, "v": cv}
+
+
+# ==========================================================================
+# MLA (multi-head latent attention)
+# ==========================================================================
+def mla_defs(cfg) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qd = nope + rope_d
+    defs: Dict[str, ParamDef] = {}
+    if cfg.q_lora_rank:
+        defs["w_q_a"] = ParamDef((d, cfg.q_lora_rank), ("embed", "q_lora"))
+        defs["q_a_norm"] = ParamDef((cfg.q_lora_rank,), ("q_lora",), "ones")
+        defs["w_q_b"] = ParamDef((cfg.q_lora_rank, h, qd),
+                                 ("q_lora", "heads", "head_dim"))
+    else:
+        defs["w_q"] = ParamDef((d, h, qd), ("embed", "heads", "head_dim"))
+    defs["w_kv_a"] = ParamDef((d, cfg.kv_lora_rank + rope_d), ("embed", "kv_lora"))
+    defs["kv_a_norm"] = ParamDef((cfg.kv_lora_rank,), ("kv_lora",), "ones")
+    defs["w_kv_b"] = ParamDef((cfg.kv_lora_rank, h, nope + vdim),
+                              ("kv_lora", "heads", "head_dim"))
+    defs["w_o"] = ParamDef((h, vdim, d), ("heads", "head_dim", "embed"))
+    return defs
+
+
+def mla_cache_defs(cfg, batch: int, max_len: int) -> Dict[str, ParamDef]:
+    return {
+        "c_kv": ParamDef((batch, max_len, cfg.kv_lora_rank),
+                         ("act_batch", "act_seq_sharded", None), "zeros"),
+        "k_rope": ParamDef((batch, max_len, cfg.qk_rope_head_dim),
+                           ("act_batch", "act_seq_sharded", None), "zeros"),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = rms_norm(dense(x, p["w_q_a"]), p["q_a_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["w_q_b"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(p, x, cfg, positions):
+    rope_d = cfg.qk_rope_head_dim
+    kv_a = dense(x, p["w_kv_a"])                              # [B,S,r+rope]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, cfg, *, positions, cache=None, decode_pos=None):
+    nope, vdim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    if cache is not None and decode_pos is not None:
+        return _mla_decode(p, x, cfg, cache, decode_pos)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latents(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_kv_b"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    h = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_rope.shape[:2] + (h, k_rope.shape[-1]))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if cfg.seq_shard and cache is None:
+        # context-parallel train path (see gqa_apply)
+        from repro.kernels import ref as kref
+        q = sharding.constrain(q, "act_batch", "act_seq", "act_heads", None)
+        k = sharding.constrain(k, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        v = sharding.constrain(v, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        out = kref.attention(q, k, v, causal=True)
+    elif _use_cp_prefill(cfg, cache, x.shape[1]):
+        out = _cp_prefill_attention(q, k, v, cfg, sharding._current_mesh())
+    else:
+        q = sharding.constrain(q, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        k = sharding.constrain(k, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        v = sharding.constrain(v, "act_batch", "act_seq_attn", "act_heads",
+                               None)
+        out = kops.flash_attention(q, k, v, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_o"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        if c_kv.shape[1] != cache["c_kv"].shape[1]:
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, 0, 0)),
+                "k_rope": jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
+                                                       (0, 0, 0)),
+            }
+        new_cache = {n: sharding.constrain(c, "act_batch", "act_seq_sharded", None)
+                     for n, c in new_cache.items()}
+    return out, new_cache
+
+
+def _mla_decode_body(qc, q_rope, c_new, kr_new, c_kv, k_rope, w_uv, pos,
+                     *, axis_name):
+    """Absorbed MLA decode. qc: [B,H,r] (q_nope @ W_uk); q_rope: [B,H,rope];
+    c_kv: [B,S_l,r]; k_rope: [B,S_l,rope]; w_uv: [r,H,v]."""
+    b, s_local, r = c_kv.shape
+    rank = jax.lax.axis_index(axis_name) if axis_name else 0
+    local_pos = pos - rank * s_local
+    iota = jnp.arange(s_local)
+    hit = (iota == local_pos)[None, :, None]
+    c_kv = jnp.where(hit, c_new[:, None], c_kv)
+    k_rope = jnp.where(hit, kr_new[:, None], k_rope)
+    # qc and q_rope arrive pre-scaled by 1/sqrt(nope + rope); the latent dot
+    # qc . c_kv reproduces q_nope . k_nope exactly (absorption identity).
+    s = (jnp.einsum("bhr,bsr->bhs", qc.astype(jnp.float32),
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    global_iota = iota + rank * s_local
+    valid = jnp.broadcast_to((global_iota <= pos)[None, :], (b, s_local))
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    e = jnp.exp(s - m[..., None]) * valid[:, None, :]
+    l = jnp.sum(e, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", e, c_kv.astype(jnp.float32))
+    if axis_name:
+        m_g = jax.lax.pmax(m, axis_name)
+        corr = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * corr, axis_name)
+        ctx = jax.lax.psum(ctx * corr[..., None], axis_name)
+    ctx = ctx / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    return out, c_kv, k_rope
+
+
+def _mla_decode(p, x, cfg, cache, pos):
+    nope = cfg.qk_nope_head_dim
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)             # [B,1,H,*]
+    c_kv_new, k_rope_new = _mla_latents(p, x, cfg, positions)
+    w_uk = p["w_kv_b"][..., :nope]                            # [r,H,nope]
+    w_uv = p["w_kv_b"][..., nope:]                            # [r,H,v]
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+    qc = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0].astype(jnp.float32),
+                    w_uk.astype(jnp.float32)) * scale
+    q_rope_s = q_rope[:, 0].astype(jnp.float32) * scale
+    mesh = sharding._current_mesh()
+    shards = sharding.current_mesh_axis_size("model")
+    args = (qc, q_rope_s, c_kv_new[:, 0], k_rope_new[:, 0],
+            cache["c_kv"], cache["k_rope"], w_uv, pos)
+    if mesh is not None and shards > 1 and cache["c_kv"].shape[1] % shards == 0:
+        bspec = _batch_spec(mesh, b)
+        body = functools.partial(_mla_decode_body, axis_name="model")
+        out, c_kv, k_rope = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(bspec, None, None),
+                      P(bspec, None), P(bspec, None),
+                      P(bspec, "model", None), P(bspec, "model", None),
+                      P(None, None, None), P()),
+            out_specs=(P(bspec, None, None),
+                       P(bspec, "model", None), P(bspec, "model", None)),
+            check_vma=False,
+        )(*args)
+    else:
+        out, c_kv, k_rope = _mla_decode_body(*args, axis_name=None)
+    out = jnp.einsum("bhv,hvd->bd", out, p["w_o"].astype(jnp.float32))
+    return out.astype(x.dtype)[:, None], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def attention_defs(cfg):
+    return mla_defs(cfg) if cfg.attn_kind == "mla" else gqa_defs(cfg)
+
+
+def attention_apply(p, x, cfg, **kw):
+    if cfg.attn_kind == "mla":
+        return mla_apply(p, x, cfg, **kw)
+    return gqa_apply(p, x, cfg, **kw)
+
+
+def attention_cache_defs(cfg, batch: int, max_len: int):
+    if cfg.attn_kind == "mla":
+        return mla_cache_defs(cfg, batch, max_len)
+    return gqa_cache_defs(cfg, batch, max_len)

@@ -1,0 +1,174 @@
+"""Parameter-definition machinery and elementary layers (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Parameter definitions.  Modules describe their parameters declaratively so
+# that (a) init, (b) logical-axis pspecs and (c) abstract eval_shape trees all
+# come from one source of truth.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"         # fan_in | normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+DefTree = Union[ParamDef, Dict[str, "DefTree"]]
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn, tree: DefTree):
+    return jax.tree.map(fn, tree, is_leaf=_is_def)
+
+
+def stack_defs(tree: DefTree, n: int) -> DefTree:
+    """Prepend a scan-stacked layer dimension to every leaf."""
+    return map_defs(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        tree)
+
+
+def axes_tree(tree: DefTree):
+    return map_defs(lambda d: d.axes, tree)
+
+
+def shape_tree(tree: DefTree, dtype) -> DefTree:
+    return map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree)
+
+
+def init_tree(tree: DefTree, key: jax.Array, dtype) -> DefTree:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, dtype)
+        else:
+            if d.init == "fan_in":
+                fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+                std = d.scale / math.sqrt(max(fan_in, 1))
+            else:
+                std = d.scale * 0.02
+            v = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Elementary ops.  Norms run in f32; matmuls accumulate in f32.
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def mlp_defs(cfg, d_model: Optional[int] = None, d_ff: Optional[int] = None) -> DefTree:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "mlp")),
+            "w_up": ParamDef((d, f), ("embed", "mlp")),
+            "w_down": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {  # gelu two-matrix MLP (musicgen / starcoder2 style)
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "b_up": ParamDef((f,), ("mlp",), "zeros"),
+        "w_down": ParamDef((f, d), ("mlp", "embed")),
+        "b_down": ParamDef((d,), ("embed",), "zeros"),
+    }
+
+
+def mlp_apply(p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        g = dense(x, p["w_gate"])
+        u = dense(x, p["w_up"])
+        return dense(jax.nn.silu(g) * u, p["w_down"])
+    h = jax.nn.gelu(dense(x, p["w_up"], p["b_up"]))
+    return dense(h, p["w_down"], p["b_down"])
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (llama split-half convention).
+# --------------------------------------------------------------------------
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / logits.
+# --------------------------------------------------------------------------
+def embed_defs(cfg) -> DefTree:
+    defs: Dict[str, DefTree] = {
+        "embedding": ParamDef((cfg.padded_vocab, cfg.d_model),
+                              ("in_vocab", "mlp"), "normal"),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                   ("embed", "vocab"))
+    return defs
+
+
+def embed_tokens(p, tokens: jax.Array, cfg) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def logits_from_hidden(p, x: jax.Array, cfg) -> jax.Array:
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, w, preferred_element_type=jnp.float32)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          vocab_size: int) -> jax.Array:
+    """Mean CE over tokens; padded vocab columns are masked out of the lse."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab_size:
+        pad = logits.shape[-1] - vocab_size
+        mask = jnp.concatenate([jnp.zeros((vocab_size,), jnp.float32),
+                                jnp.full((pad,), -1e30, jnp.float32)])
+        logits = logits + mask
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,362 @@
+"""Model composition: segments of scanned homogeneous layers.
+
+Every architecture in the pool is expressed as a list of `Segment`s, each a
+stack of identical layers run under `jax.lax.scan` (keeping HLO size and
+compile time bounded at 512 devices) with optional per-layer remat.  The
+zamba2 hybrid is a scan over *groups* (N mamba layers + one weight-shared
+attention block passed by closure, so the sharing is structural).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.attention import (attention_apply, attention_cache_defs,
+                                    attention_defs)
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamDef, axes_tree, embed_defs, embed_tokens,
+                                 init_tree, logits_from_hidden, mlp_apply,
+                                 mlp_defs, rms_norm, shape_tree,
+                                 softmax_cross_entropy, stack_defs)
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.rwkv import rwkv6_apply, rwkv6_cache_defs, rwkv6_defs
+from repro.models.ssm import mamba2_apply, mamba2_cache_defs, mamba2_defs
+
+MOE_AUX_COEF = 0.01
+MTP_LOSS_COEF = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    n_layers: int
+    kind: str                 # attn_mlp | attn_moe | mamba2 | rwkv6 | zamba_group
+    cfg: ModelConfig          # possibly a modified copy (e.g. dense d_ff)
+
+
+def model_segments(cfg: ModelConfig) -> List[Segment]:
+    if cfg.block_kind == "rwkv6":
+        return [Segment("layers", cfg.n_layers, "rwkv6", cfg)]
+    if cfg.block_kind == "mamba2":
+        if cfg.shared_attn_every:
+            assert cfg.n_layers % cfg.shared_attn_every == 0
+            return [Segment("groups", cfg.n_layers // cfg.shared_attn_every,
+                            "zamba_group", cfg)]
+        return [Segment("layers", cfg.n_layers, "mamba2", cfg)]
+    if cfg.n_experts:
+        segs = []
+        if cfg.first_k_dense:
+            dense_cfg = cfg.replace(n_experts=0, d_ff=cfg.dense_d_ff or cfg.d_ff)
+            segs.append(Segment("dense", cfg.first_k_dense, "attn_mlp", dense_cfg))
+        segs.append(Segment("moe", cfg.n_layers - cfg.first_k_dense,
+                            "attn_moe", cfg))
+        return segs
+    return [Segment("layers", cfg.n_layers, "attn_mlp", cfg)]
+
+
+# --------------------------------------------------------------------------
+# Per-layer defs / apply
+# --------------------------------------------------------------------------
+def _layer_defs(kind: str, cfg: ModelConfig):
+    d = cfg.d_model
+    if kind == "attn_mlp":
+        return {"norm1": ParamDef((d,), ("embed",), "ones"),
+                "attn": attention_defs(cfg),
+                "norm2": ParamDef((d,), ("embed",), "ones"),
+                "mlp": mlp_defs(cfg)}
+    if kind == "attn_moe":
+        return {"norm1": ParamDef((d,), ("embed",), "ones"),
+                "attn": attention_defs(cfg),
+                "norm2": ParamDef((d,), ("embed",), "ones"),
+                "moe": moe_defs(cfg)}
+    if kind == "mamba2":
+        return {"norm": ParamDef((d,), ("embed",), "ones"),
+                "mamba": mamba2_defs(cfg)}
+    if kind == "rwkv6":
+        return rwkv6_defs(cfg)
+    if kind == "zamba_group":
+        return {"mamba": stack_defs(_layer_defs("mamba2", cfg),
+                                    cfg.shared_attn_every)}
+    raise ValueError(kind)
+
+
+def _layer_cache_defs(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("attn_mlp", "attn_moe"):
+        return attention_cache_defs(cfg, batch, max_len)
+    if kind == "mamba2":
+        return mamba2_cache_defs(cfg, batch)
+    if kind == "rwkv6":
+        return rwkv6_cache_defs(cfg, batch)
+    if kind == "zamba_group":
+        return {"mamba": stack_defs(mamba2_cache_defs(cfg, batch),
+                                    cfg.shared_attn_every),
+                "shared_attn": attention_cache_defs(cfg, batch, max_len)}
+    raise ValueError(kind)
+
+
+def _layer_apply(kind: str, lp, x, cfg, *, positions, cache, decode_pos,
+                 shared=None):
+    """-> (x, new_cache, aux_loss)."""
+    if kind in ("attn_mlp", "attn_moe"):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        attn_out, new_c = attention_apply(lp["attn"], h, cfg,
+                                          positions=positions, cache=cache,
+                                          decode_pos=decode_pos)
+        x = x + attn_out
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            mo, aux = moe_apply(lp["moe"], h, cfg)
+            return x + mo, new_c, aux
+        return x + mlp_apply(lp["mlp"], h, cfg), new_c, jnp.float32(0)
+    if kind == "mamba2":
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, new_c = mamba2_apply(lp["mamba"], h, cfg, cache=cache,
+                                  decode=decode_pos is not None)
+        return x + out, new_c, jnp.float32(0)
+    if kind == "rwkv6":
+        x, new_c = rwkv6_apply(lp, x, cfg, cache=cache,
+                               decode=decode_pos is not None)
+        return x, new_c, jnp.float32(0)
+    if kind == "zamba_group":
+        x, mcache, aux = _run_stack("mamba2", lp["mamba"], x, cfg,
+                                    positions=positions,
+                                    caches=None if cache is None
+                                    else cache["mamba"],
+                                    decode_pos=decode_pos)
+        x2, acache, aux2 = _layer_apply(
+            "attn_mlp", shared, x, cfg, positions=positions,
+            cache=None if cache is None else cache["shared_attn"],
+            decode_pos=decode_pos)
+        new_c = None
+        if cache is not None:
+            new_c = {"mamba": mcache, "shared_attn": acache}
+        return x2, new_c, aux + aux2
+    raise ValueError(kind)
+
+
+def _run_stack(kind: str, stacked_params, x, cfg, *, positions, caches,
+               decode_pos, shared=None):
+    """Scan over a stack of identical layers. caches: stacked or None."""
+    train_mode = caches is None and decode_pos is None
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, cache_in = xs
+        h, new_cache, a = _layer_apply(kind, lp, h, cfg, positions=positions,
+                                       cache=cache_in, decode_pos=decode_pos,
+                                       shared=shared)
+        return (h, aux + a), new_cache
+
+    if cfg.remat and train_mode:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        aux = jnp.float32(0)
+        new_caches = []
+        for i in range(n):
+            lp = jax.tree.map(lambda t: t[i], stacked_params)
+            ci = None if caches is None else jax.tree.map(lambda t: t[i], caches)
+            (x, aux), nc = body((x, aux), (lp, ci))
+            new_caches.append(nc)
+        out_caches = None
+        if caches is not None:
+            out_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
+        return x, out_caches, aux
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0)),
+                                        (stacked_params, caches))
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------
+# Whole-model param / cache trees
+# --------------------------------------------------------------------------
+def param_defs(cfg: ModelConfig):
+    defs: Dict[str, Any] = dict(embed_defs(cfg))
+    for seg in model_segments(cfg):
+        defs[seg.name] = stack_defs(_layer_defs(seg.kind, seg.cfg), seg.n_layers)
+    if cfg.shared_attn_every:
+        defs["shared_attn"] = _layer_defs("attn_mlp", cfg)
+    if cfg.mtp_depth:
+        defs["mtp"] = {"proj": ParamDef((2 * cfg.d_model, cfg.d_model),
+                                        ("embed", "embed")),
+                       "norm": ParamDef((cfg.d_model,), ("embed",), "ones"),
+                       "layer": _layer_defs(
+                           "attn_mlp",
+                           cfg.replace(n_experts=0,
+                                       d_ff=cfg.dense_d_ff or cfg.d_ff))}
+    return defs
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(param_defs(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return shape_tree(param_defs(cfg), cfg.activation_dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_tree(param_defs(cfg), key, cfg.activation_dtype)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(param_defs(cfg),
+                                is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token: routed experts scaled by top_k/E,
+    input embedding excluded (a lookup, not a matmul)."""
+    defs = param_defs(cfg)
+    flat = jax.tree.flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]
+    total = 0
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if "embedding" in keys and not cfg.tie_embeddings:
+            continue
+        if "moe" in keys and "shared" not in keys and "router" not in keys:
+            n = n * cfg.moe_top_k // max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int):
+    defs = {}
+    for seg in model_segments(cfg):
+        defs[seg.name] = stack_defs(
+            _layer_cache_defs(seg.kind, seg.cfg, batch, max_len), seg.n_layers)
+    return defs
+
+
+def cache_axes(cfg: ModelConfig, batch: int, max_len: int):
+    return axes_tree(cache_defs(cfg, batch, max_len))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return init_tree(cache_defs(cfg, batch, max_len), jax.random.PRNGKey(0),
+                     cfg.activation_dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return shape_tree(cache_defs(cfg, batch, max_len), cfg.activation_dtype)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+def _inputs_to_hidden(params, batch: Dict[str, jax.Array], cfg) -> jax.Array:
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(cfg.activation_dtype)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    return sharding.constrain(x, "act_batch", "act_seq", None)
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, cache=None, decode_pos=None, last_only: bool = False,
+            last_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Any, jax.Array]:
+    """-> (logits [B,S,Vpad] f32, new_cache, aux_loss).
+    last_only=True computes the LM head on the final position only (prefill
+    never needs the other 32k-1 rows of a 150k-wide head); last_index [B]
+    selects a per-row position instead (bucketed-prefill serving)."""
+    import contextlib
+    sp = (sharding.act_overrides(act_seq=(("model",),))
+          if (cfg.seq_shard and decode_pos is None)
+          else contextlib.nullcontext())
+    with sp:
+        x = _inputs_to_hidden(params, batch, cfg)
+        b, s = x.shape[:2]
+        if decode_pos is not None:
+            positions = jnp.full((b, s), decode_pos, jnp.int32)
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        shared = params.get("shared_attn")
+        aux = jnp.float32(0)
+        new_cache = {} if cache is not None else None
+        for seg in model_segments(cfg):
+            seg_cache = None if cache is None else cache[seg.name]
+            x, nc, a = _run_stack(seg.kind, params[seg.name], x, seg.cfg,
+                                  positions=positions, caches=seg_cache,
+                                  decode_pos=decode_pos, shared=shared)
+            aux = aux + a
+            if cache is not None:
+                new_cache[seg.name] = nc
+    if last_index is not None:
+        x = jnp.take_along_axis(
+            x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    elif last_only:
+        x = x[:, -1:]
+    logits = logits_from_hidden(params, x, cfg)
+    logits = sharding.constrain(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, new_cache, aux
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(params, batch, cfg)
+    labels = batch.get("labels", batch.get("tokens"))
+    ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:], cfg.vocab_size)
+    loss = ce + MOE_AUX_COEF * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth:
+        mtp_ce = _mtp_loss(params, batch, cfg)
+        loss = loss + MTP_LOSS_COEF * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params, batch, cfg) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction: one extra depth (predict t+2)."""
+    mtp = params["mtp"]
+    x = _inputs_to_hidden(params, batch, cfg)
+    b, s = x.shape[:2]
+    labels = batch.get("labels", batch.get("tokens"))
+    # h'_t = proj([norm(h_t); emb(token_{t+1})]) for t < S-1
+    h = rms_norm(x, mtp["norm"], cfg.norm_eps)
+    nxt = embed_tokens(params, labels, cfg)
+    hcat = jnp.concatenate([h[:, :-1], nxt[:, 1:]], axis=-1)
+    hp = jnp.einsum("bsd,df->bsf", hcat, mtp["proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s - 1, dtype=jnp.int32)[None],
+                                 (b, s - 1))
+    dense_cfg = cfg.replace(n_experts=0, d_ff=cfg.dense_d_ff or cfg.d_ff)
+    hp, _, _ = _layer_apply("attn_mlp", mtp["layer"], hp, dense_cfg,
+                            positions=positions, cache=None, decode_pos=None)
+    logits = logits_from_hidden(params, hp, cfg)
+    return softmax_cross_entropy(logits[:, :-1], labels[:, 2:], cfg.vocab_size)
+
+
+def prefill(params, batch, cfg, cache, *, last_only: bool = False):
+    """Full-sequence forward that also fills the cache."""
+    logits, new_cache, aux = forward(params, batch, cfg, cache=cache,
+                                     last_only=last_only)
+    return logits, new_cache, aux
+
+
+def decode_step(params, token_batch, cfg, cache, pos):
+    """token_batch: {'tokens': [B,1]} (or embeddings [B,1,D]); pos: scalar."""
+    logits, new_cache, _ = forward(params, token_batch, cfg, cache=cache,
+                                   decode_pos=pos)
+    return logits[:, -1], new_cache

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts FFN with explicit expert-parallel dispatch.
+
+Design (TPU-native adaptation of EP):
+  * tokens are sharded over (pod, data) and *replicated* over the `model`
+    axis (standard TP activation layout at the FFN boundary);
+  * experts are sharded over `model` (E/tp experts per rank) with their
+    weights additionally FSDP-sharded over the fsdp axes and all-gathered
+    at use (ZeRO-3);
+  * each model-rank routes every local token, keeps only the assignments
+    that land on its own experts, packs them into static [E_local, C, D]
+    capacity buffers with a cumsum position index (dropping on overflow),
+    runs the expert FFN as one grouped einsum, scatter-adds the weighted
+    results, and a single psum over `model` combines routed partials with
+    the hidden-sharded shared-expert partials — the same all-reduce a dense
+    TP FFN would need, so EP adds *no* extra collective on the hot path.
+
+The body is mesh-free when called without an axis name, which is the path
+unit tests and single-device smoke configs take.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding
+from repro.models.layers import ParamDef
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), "normal"),
+        "w_gate": ParamDef((e, d, f), ("expert", None, "expert_mlp")),
+        "w_up": ParamDef((e, d, f), ("expert", None, "expert_mlp")),
+        "w_down": ParamDef((e, f, d), ("expert", "expert_mlp", None)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        defs["shared"] = {
+            "w_gate": ParamDef((d, fs), ("embed", "mlp")),
+            "w_up": ParamDef((d, fs), ("embed", "mlp")),
+            "w_down": ParamDef((fs, d), ("mlp", "embed")),
+        }
+    return defs
+
+
+def _route(logits: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits: [T, E] (f32) -> (weights [T,k], idx [T,k], aux_loss scalar)."""
+    t, e = logits.shape
+    k = cfg.moe_top_k
+    if cfg.router_kind == "sigmoid":                    # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_i f_i * P_i
+    dispatch = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    f_i = jnp.mean(dispatch, axis=0)
+    p_i = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_i * p_i)
+    return w, idx, aux
+
+
+def _swiglu_grouped(xg, wg, wu, wd):
+    """xg: [E,C,D]; wg/wu: [E,D,F]; wd: [E,F,D]."""
+    g = jnp.einsum("ecd,edf->ecf", xg, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xg, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(xg.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(xg.dtype)
+
+
+def _moe_body(x, router_w, w_gate, w_up, w_down, shared, cfg, *,
+              axis_name: Optional[str], fsdp_axes: Tuple[str, ...],
+              batch_axes: Tuple[str, ...] = ()):
+    """x: [T, D] local tokens; expert weights are this rank's slice
+    [E_l, D, F_l] (F additionally FSDP-sharded -> all-gathered here)."""
+    t, d = x.shape
+    e = cfg.n_experts
+    k = cfg.moe_top_k
+    e_l = w_gate.shape[0]
+    rank = jax.lax.axis_index(axis_name) if axis_name else 0
+    if fsdp_axes:
+        w_gate = jax.lax.all_gather(w_gate, fsdp_axes, axis=2, tiled=True)
+        w_up = jax.lax.all_gather(w_up, fsdp_axes, axis=2, tiled=True)
+        w_down = jax.lax.all_gather(w_down, fsdp_axes, axis=1, tiled=True)
+
+    logits = jnp.einsum("td,de->te", x, router_w,
+                        preferred_element_type=jnp.float32)
+    weights, idx, aux = _route(logits, cfg)
+
+    cap = max(1, int(math.ceil(cfg.capacity_factor * t * k / e)))
+    token_id = jnp.repeat(jnp.arange(t), k)                      # [T*k]
+    expert_id = idx.reshape(-1)
+    w_flat = weights.reshape(-1).astype(jnp.float32)
+    local_e = expert_id - rank * e_l
+    in_local = (local_e >= 0) & (local_e < e_l)
+    onehot = (jnp.where(in_local, local_e, e_l)[:, None]
+              == jnp.arange(e_l)[None, :]).astype(jnp.int32)     # [T*k, E_l]
+    pos = jnp.cumsum(onehot, axis=0) * onehot                    # 1-based
+    pos_e = jnp.sum(pos, axis=-1) - 1                            # [-1 if foreign]
+    keep = in_local & (pos_e >= 0) & (pos_e < cap)
+    slot = jnp.where(keep, jnp.where(in_local, local_e, 0) * cap + pos_e,
+                     e_l * cap)                                  # sentinel slot
+    buf_tok = jnp.full((e_l * cap + 1,), t, jnp.int32).at[slot].set(token_id)
+    buf_w = jnp.zeros((e_l * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, w_flat, 0.0))
+    buf_tok, buf_w = buf_tok[:-1], buf_w[:-1]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[buf_tok].reshape(e_l, cap, d)
+    y = _swiglu_grouped(xg, w_gate, w_up, w_down).reshape(e_l * cap, d)
+    y = y * buf_w[:, None].astype(y.dtype)
+    out = jnp.zeros((t + 1, d), jnp.float32).at[buf_tok].add(
+        y.astype(jnp.float32))[:t]
+
+    if shared is not None:                                        # hidden-sharded
+        g = jnp.einsum("td,df->tf", x, shared["w_gate"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("td,df->tf", x, shared["w_up"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+        out = out + jnp.einsum("tf,fd->td", h, shared["w_down"],
+                               preferred_element_type=jnp.float32)
+    if axis_name:
+        out = jax.lax.psum(out, axis_name)
+        axes = ((axis_name,) if isinstance(axis_name, str)
+                else tuple(axis_name))
+        aux = jax.lax.pmean(aux, tuple(dict.fromkeys(batch_axes + axes)))
+    return out.astype(x.dtype), aux
+
+
+def _moe_body_ep_all(x_local, router_w, w_gate, w_up, w_down, shared, cfg, *,
+                     ep_axes: Tuple[str, ...],
+                     gather_axes: Tuple[str, ...]):
+    """EP over (data x model) — 1..few experts per chip, weights fully
+    resident (the DeepSeek-V3 serving layout).  Tokens are all-gathered
+    over the batch axes (cheap when tokens << weights, i.e. decode),
+    every rank runs its local experts over the full token set, one psum
+    over the EP axes combines; each rank keeps its own batch rows.
+    Replaces the per-step FSDP weight gathers whose traffic dominates
+    decode."""
+    t_local, d = x_local.shape
+    x = x_local
+    if gather_axes:
+        x = jax.lax.all_gather(x, gather_axes, axis=0, tiled=True)
+    out, aux = _moe_body(x, router_w, w_gate, w_up, w_down, shared, cfg,
+                         axis_name=ep_axes, fsdp_axes=(),
+                         batch_axes=gather_axes)
+    if gather_axes:
+        my_row = jax.lax.axis_index(gather_axes) * t_local
+        out = jax.lax.dynamic_slice(out, (my_row, 0), (t_local, d))
+    return out, aux
+
+
+def moe_apply(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (out [B,S,D], aux loss scalar)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    mesh = sharding._current_mesh()
+    tp = sharding.current_mesh_axis_size("model")
+    shared = p.get("shared")
+    if mesh is None or tp == 1 or cfg.n_experts % tp != 0:
+        out, aux = _moe_body(xt, p["router"], p["w_gate"], p["w_up"],
+                             p["w_down"], shared, cfg, axis_name=None,
+                             fsdp_axes=())
+        return out.reshape(b, s, d), aux
+
+    batch = sharding.batch_axes(mesh)               # (pod?, data)
+    n_batch = 1
+    for a in batch:
+        n_batch *= sharding.current_mesh_axis_size(a)
+    ep_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    n_ep = 1
+    for a in ep_axes:
+        n_ep *= sharding.current_mesh_axis_size(a)
+    if (cfg.ep_over_data and len(ep_axes) == 2
+            and cfg.n_experts % n_ep == 0 and (b * s) % n_batch == 0):
+        def _m(axes):
+            if not axes:
+                return None
+            return axes[0] if len(axes) == 1 else tuple(axes)
+
+        bspec = _m(batch)
+        ew = P(_m(ep_axes), None, None)
+        shared_specs = None
+        if shared is not None:
+            shared_specs = {"w_gate": P(None, "model"),
+                            "w_up": P(None, "model"),
+                            "w_down": P("model", None)}
+        body = functools.partial(_moe_body_ep_all, cfg=cfg,
+                                 ep_axes=ep_axes, gather_axes=batch)
+        out, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None), P(None, None), ew, ew, ew,
+                      shared_specs),
+            out_specs=(P(bspec, None), P()),
+            check_vma=False,
+        )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
+        return out.reshape(b, s, d), aux
+
+    fsdp = ("pod", "data") if cfg.fsdp_pod else ("data",)
+    total = 1
+    resolved = []
+    for a in fsdp:
+        if a in mesh.axis_names:
+            resolved.append(a)
+            total *= sharding.current_mesh_axis_size(a)
+    fsdp = tuple(resolved) if (resolved and cfg.moe_d_ff % total == 0) else ()
+
+    def _m(axes):
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else tuple(axes)
+
+    batch = sharding.batch_axes(mesh)
+    bspec = _m(batch)
+    ew = P("model", None, _m(fsdp))
+    ewd = P("model", _m(fsdp), None)
+    shared_specs = None
+    if shared is not None:
+        shared_specs = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                        "w_down": P("model", None)}
+    body = functools.partial(_moe_body, cfg=cfg, axis_name="model",
+                             fsdp_axes=fsdp, batch_axes=batch)
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None), P(None, None), ew, ew, ewd, shared_specs),
+        out_specs=(P(bspec, None), P()),
+        check_vma=False,
+    )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
+    return out.reshape(b, s, d), aux

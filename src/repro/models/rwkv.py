@@ -1,0 +1,164 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Faithful to arXiv:2404.05892: token-shift ddlerp with a shared low-rank
+projection for the five mix targets (w,k,v,r,g), low-rank data-dependent
+decay w_t, bonus u, per-head group norm, squared-relu channel mix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import ParamDef, dense
+
+_N_MIX = 5  # w, k, v, r, g
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rwkv6_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h = cfg.rwkv_heads
+    kd = cfg.rwkv_head_dim
+    lw = cfg.rwkv_decay_lora
+    lm = cfg.rwkv_mix_lora
+    f = cfg.d_ff
+    return {
+        "ln1_w": ParamDef((d,), ("embed",), "ones"),
+        "ln1_b": ParamDef((d,), ("embed",), "zeros"),
+        "ln2_w": ParamDef((d,), ("embed",), "ones"),
+        "ln2_b": ParamDef((d,), ("embed",), "zeros"),
+        # --- time mix ---
+        "mix_x": ParamDef((d,), ("embed",), "zeros"),
+        "mix_base": ParamDef((_N_MIX, d), (None, "embed"), "zeros"),
+        "mix_w1": ParamDef((d, _N_MIX * lm), ("embed", "lora")),
+        "mix_w2": ParamDef((_N_MIX, lm, d), (None, "lora", "embed")),
+        "decay_base": ParamDef((d,), ("embed",), "zeros"),
+        "decay_w1": ParamDef((d, lw), ("embed", "lora")),
+        "decay_w2": ParamDef((lw, d), ("lora", "embed")),
+        "bonus_u": ParamDef((h, kd), ("heads", "head_dim"), "normal"),
+        "w_r": ParamDef((d, d), ("embed", "inner")),
+        "w_k": ParamDef((d, d), ("embed", "inner")),
+        "w_v": ParamDef((d, d), ("embed", "inner")),
+        "w_g": ParamDef((d, d), ("embed", "inner")),
+        "gn_w": ParamDef((d,), ("inner",), "ones"),
+        "gn_b": ParamDef((d,), ("inner",), "zeros"),
+        "w_o": ParamDef((d, d), ("inner", "embed")),
+        # --- channel mix ---
+        "cmix_k": ParamDef((d,), ("embed",), "zeros"),
+        "cmix_r": ParamDef((d,), ("embed",), "zeros"),
+        "cw_k": ParamDef((d, f), ("embed", "mlp")),
+        "cw_r": ParamDef((d, d), ("embed", "embed2")),
+        "cw_v": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def rwkv6_cache_defs(cfg, batch: int) -> Dict[str, ParamDef]:
+    d, h, kd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "shift_t": ParamDef((batch, 1, d), ("act_batch", None, None), "zeros"),
+        "shift_c": ParamDef((batch, 1, d), ("act_batch", None, None), "zeros"),
+        "wkv": ParamDef((batch, h, kd, kd), ("act_batch", None, None, None),
+                        "zeros"),
+    }
+
+
+def _token_shift(x, prev: Optional[jax.Array]):
+    """Return x_{t-1} stream: [B,S,D]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _group_norm(x, w, b, n_heads, eps=1e-5):
+    """Per-head layer norm over head_dim. x: [B,S,D]."""
+    bsz, s, d = x.shape
+    xh = x.reshape(bsz, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(bsz, s, d)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _time_mix(p, x, cfg, prev_shift, wkv_state, decode):
+    b, s, d = x.shape
+    h, kd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xprev = _token_shift(x, prev_shift)
+    dx = xprev - x
+    # shared ddlerp: five data-dependent mixing coefficients
+    xx = x + dx * p["mix_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", xx, p["mix_w1"],
+                               preferred_element_type=jnp.float32))
+    lora = lora.reshape(b, s, _N_MIX, -1)
+    mix = (p["mix_base"].astype(jnp.float32)[None, None]
+           + jnp.einsum("bsml,mld->bsmd", lora,
+                        p["mix_w2"].astype(jnp.float32)))
+    xm = x[:, :, None] + dx[:, :, None] * mix.astype(x.dtype)  # [B,S,5,D]
+    x_w, x_k, x_v, x_r, x_g = (xm[:, :, i] for i in range(_N_MIX))
+    # data-dependent decay in (0, 1)
+    dec = jnp.tanh(jnp.einsum("bsd,dl->bsl", x_w, p["decay_w1"],
+                              preferred_element_type=jnp.float32))
+    dec = (p["decay_base"].astype(jnp.float32)[None, None]
+           + jnp.einsum("bsl,ld->bsd", dec, p["decay_w2"].astype(jnp.float32)))
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32) - 2.0))        # init near ~0.87
+    r = dense(x_r, p["w_r"]).reshape(b, s, h, kd)
+    k = dense(x_k, p["w_k"]).reshape(b, s, h, kd)
+    v = dense(x_v, p["w_v"]).reshape(b, s, h, kd)
+    g = jax.nn.silu(dense(x_g, p["w_g"]).astype(jnp.float32)).astype(x.dtype)
+    wh = w.reshape(b, s, h, kd).astype(jnp.float32)
+    if decode:
+        # one-step recurrence
+        st = wkv_state.astype(jnp.float32)
+        rt, kt, vt = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv",
+                         rt, st + p["bonus_u"].astype(jnp.float32)[None, :, :, None] * kv)
+        new_state = wh[:, 0][..., None] * st + kv
+        out = out[:, None].reshape(b, 1, d).astype(x.dtype)
+    else:
+        out, new_state = kops.rwkv6_wkv(r, k, v, wh, p["bonus_u"], wkv_state)
+        out = out.reshape(b, s, d)
+    out = _group_norm(out, p["gn_w"], p["gn_b"], h) * g
+    return dense(out, p["w_o"]), x[:, -1:], new_state
+
+
+def _channel_mix(p, x, prev_shift):
+    xprev = _token_shift(x, prev_shift)
+    dx = xprev - x
+    x_k = x + dx * p["cmix_k"].astype(x.dtype)
+    x_r = x + dx * p["cmix_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(x_k, p["cw_k"]).astype(jnp.float32)))
+    r = jax.nn.sigmoid(dense(x_r, p["cw_r"]).astype(jnp.float32))
+    out = r * jnp.einsum("bsf,fd->bsd", k.astype(x.dtype), p["cw_v"],
+                         preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), x[:, -1:]
+
+
+def rwkv6_apply(p, x: jax.Array, cfg, *, cache=None, decode: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """One RWKV6 layer (time-mix + channel-mix, pre-LN residual)."""
+    st = cache["shift_t"] if cache is not None else None
+    sc = cache["shift_c"] if cache is not None else None
+    wkv = cache["wkv"] if cache is not None else None
+    h1 = layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    tm, new_st, new_wkv = _time_mix(p, h1, cfg, st, wkv, decode)
+    x = x + tm
+    h2 = layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    cm, new_sc = _channel_mix(p, h2, sc)
+    x = x + cm
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_t": new_st.astype(cache["shift_t"].dtype),
+                     "shift_c": new_sc.astype(cache["shift_c"].dtype),
+                     "wkv": new_wkv.astype(cache["wkv"].dtype)}
+    return x, new_cache

@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules (t5x-style) with divisibility fallback.
+
+Every parameter leaf is declared with a tuple of *logical* axis names; the
+rules below map logical axes onto mesh axes.  A mapping is dropped (axis left
+unsharded) whenever the dimension size is not divisible by the mesh-axis
+size — this keeps one rule table valid across all ten architectures (e.g.
+yi-34b's 56 heads do not divide a 16-way model axis; its head axis falls back
+to replicated + padded activations, which the roofline table then reports
+honestly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes, in priority order. The first candidate
+# whose total size divides the dimension wins.
+#
+# "fsdp" is a placeholder resolved to ("data",) or ("pod", "data") per-config.
+PARAM_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "vocab": (("model",),),
+    # input-embedding table: vocab UNsharded, d_model TP-sharded.  A gather
+    # along a sharded vocab axis forces SPMD to replicate the whole table
+    # (involuntary full remat); sharding d_model instead costs one small
+    # activation all-gather and keeps storage at table/16 per device.
+    "in_vocab": ((),),
+    "embed": (("fsdp",),),            # d_model rows of weight matrices
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": ((),),
+    "expert": (("model",),),
+    "expert_mlp": (("fsdp",),),
+    "q_lora": ((),),
+    "kv_lora": ((),),
+    "inner": (("model",),),           # ssm/rwkv fused inner dim
+    "state": ((),),
+    "conv": ((),),
+    "lora": ((),),
+    "layers": ((),),                  # scan-stacked layer dim: never sharded
+    None: ((),),
+}
+
+ACT_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "act_batch": (("pod", "data"),),
+    "act_seq": ((),),
+    "act_seq_attn": ((),),             # q/k/v seq dim: NEVER seq-sharded
+                                       # (attention is the TP-heads region
+                                       # even under sequence parallelism)
+    "act_seq_sharded": (("model",),),  # kv-cache sequence dim (flash-decoding)
+    "act_vocab": (("model",),),
+    "act_heads": (("model",),),
+    "act_kv_heads": (("model",),),
+    "act_embed": ((),),
+    "act_mlp": (("model",),),
+    "act_expert": (("model",),),
+    None: ((),),
+}
+
+
+def _resolve(candidates, fsdp_axes: Tuple[str, ...]):
+    out = []
+    for cand in candidates:
+        axes: Tuple[str, ...] = ()
+        for a in cand:
+            axes += fsdp_axes if a == "fsdp" else (a,)
+        out.append(axes)
+    return out
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    *,
+    fsdp_axes: Tuple[str, ...] = ("data",),
+    rules: Optional[Dict] = None,
+    strict_divisible: bool = True,
+) -> P:
+    """Map logical axes of one array onto a PartitionSpec for `mesh`."""
+    rules = rules or PARAM_RULES
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        table = rules.get(name, ((),))
+        chosen: Tuple[str, ...] = ()
+        for axes in _resolve(table, fsdp_axes):
+            # drop axes absent from this mesh (e.g. "pod" on the single-pod
+            # mesh) rather than rejecting the whole candidate
+            axes = tuple(a for a in axes if a in mesh_sizes)
+            if not axes or any(a in used for a in axes):
+                continue
+            total = math.prod(mesh_sizes[a] for a in axes)
+            if strict_divisible and dim % total != 0:
+                continue
+            chosen = axes
+            break
+        for a in chosen:
+            used.add(a)
+        parts.append(chosen if len(chosen) > 1 else (chosen[0] if chosen else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_pspecs(axes_tree, shape_tree, mesh: Mesh, *, fsdp_axes=("data",), rules=None):
+    """Build a pytree of PartitionSpec matching `shape_tree`/`axes_tree`."""
+    def f(axes, shp):
+        shape = shp.shape if hasattr(shp, "shape") else shp
+        return spec_for(shape, axes, mesh, fsdp_axes=fsdp_axes, rules=rules)
+    return jax.tree.map(f, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, **kw):
+    specs = tree_pspecs(axes_tree, shape_tree, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, *logical_axes, mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by activation logical axes (no-op off-mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return x
+    spec = spec_for(x.shape, logical_axes, mesh, rules=_effective_act_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --- activation-rule overrides (perf knobs, e.g. sequence parallelism) ---
+_ACT_OVERRIDES: list = []
+
+
+class act_overrides:
+    """Context manager overriding ACT_RULES entries during tracing, e.g.
+    `with act_overrides(act_seq=(("model",),)):` turns on Megatron-style
+    sequence parallelism for every `constrain` under it."""
+
+    def __init__(self, **over):
+        self.over = {k: v for k, v in over.items()}
+
+    def __enter__(self):
+        _ACT_OVERRIDES.append(self.over)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_OVERRIDES.pop()
+
+
+def _effective_act_rules() -> Dict:
+    if not _ACT_OVERRIDES:
+        return ACT_RULES
+    rules = dict(ACT_RULES)
+    for o in _ACT_OVERRIDES:
+        rules.update(o)
+    return rules
+
+
+# --- lightweight mesh context -------------------------------------------
+_MESH_STACK = []
+
+
+class use_mesh:
+    """Context manager marking the mesh used by `constrain` (and `with mesh:`)."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _MESH_STACK.append(self.mesh)
+        self._ctx = self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _MESH_STACK.pop()
+        return self.mesh.__exit__(*exc)
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def current_mesh_axis_size(axis: str) -> int:
+    m = _current_mesh()
+    if m is None or axis not in m.axis_names:
+        return 1
+    return dict(zip(m.axis_names, m.devices.shape))[axis]
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """The mesh axes that shard the batch dimension (pod and/or data)."""
+    mesh = mesh or _current_mesh()
+    names = mesh.axis_names if mesh is not None else ()
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,114 @@
+"""Mamba2 (state-space dual) block — used by zamba2.
+
+Layout follows the reference Mamba2: fused in-projection producing
+(z, x, B, C, dt), causal depthwise conv over (x, B, C), per-head scalar
+decay SSD recurrence, gated RMSNorm, out-projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import sharding
+from repro.models.layers import ParamDef, dense, rms_norm
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = d_inner + 2 * n
+    return d_inner, n, h, conv_dim
+
+
+def mamba2_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_inner, n, h, conv_dim = _dims(cfg)
+    d_proj = 2 * d_inner + 2 * n + h
+    return {
+        "w_in": ParamDef((d, d_proj), ("embed", "inner")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), ("conv", "inner"), "normal"),
+        "conv_b": ParamDef((conv_dim,), ("inner",), "zeros"),
+        "a_log": ParamDef((h,), ("inner",), "zeros"),
+        "d_skip": ParamDef((h,), ("inner",), "ones"),
+        "dt_bias": ParamDef((h,), ("inner",), "zeros"),
+        "norm": ParamDef((d_inner,), ("inner",), "ones"),
+        "w_out": ParamDef((d_inner, d), ("inner", "embed")),
+    }
+
+
+def mamba2_cache_defs(cfg, batch: int) -> Dict[str, ParamDef]:
+    d_inner, n, h, conv_dim = _dims(cfg)
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, conv_dim),
+                         ("act_batch", None, None), "zeros"),
+        "ssd": ParamDef((batch, h, cfg.ssm_head_dim, n),
+                        ("act_batch", None, None, None), "zeros"),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, n, h, _ = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev: Optional[jax.Array] = None):
+    """xbc: [B,S,C]; conv_w: [K,C] depthwise. prev: [B,K-1,C] state."""
+    k = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # k is tiny (4): unrolled taps beat a conv primitive here
+        out = out + (xp[:, i:i + xbc.shape[1]].astype(jnp.float32)
+                     * conv_w[i].astype(jnp.float32))
+    out = out + conv_b.astype(jnp.float32)
+    new_state = xp[:, -(k - 1):] if k > 1 else prev
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def mamba2_apply(p, x: jax.Array, cfg, *, cache=None, decode: bool = False
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B,S,D] -> (out, new_cache)."""
+    b, s, d = x.shape
+    d_inner, n, h, conv_dim = _dims(cfg)
+    proj = dense(x, p["w_in"])
+    z, xbc, dt = _split_proj(proj, cfg)
+    prev_conv = cache["conv"] if cache is not None else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev_conv)
+    xs = xbc[..., :d_inner].reshape(b, s, h, cfg.ssm_head_dim)
+    b_in = xbc[..., d_inner:d_inner + n]
+    c_in = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    state0 = cache["ssd"] if cache is not None else None
+    if decode:
+        # single-step recurrence (s == 1)
+        dtt = dt[:, 0]                                          # [B,H]
+        dec = jnp.exp(dtt * a[None])
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xs[:, 0].astype(jnp.float32),
+                         b_in[:, 0].astype(jnp.float32))
+        st = dec[..., None, None] * state0.astype(jnp.float32) + dbx
+        y = (jnp.einsum("bhpn,bn->bhp", st, c_in[:, 0].astype(jnp.float32))
+             + p["d_skip"].astype(jnp.float32)[None, :, None]
+             * xs[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)
+        ssd_state = st
+    else:
+        y, ssd_state = kops.mamba2_ssd(xs, dt, a, b_in, c_in, p["d_skip"],
+                                       state0, chunk=cfg.ssm_chunk)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = dense(y, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssd": ssd_state.astype(cache["ssd"].dtype)}
+    return out, new_cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               abstract_opt_state, opt_state_axes,
+                               cosine_schedule, global_norm)
+from repro.optim.compression import (CompressionState, compress_with_feedback,
+                                     init_compression_state)

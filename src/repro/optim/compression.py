@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback (int8 block quantization).
+
+A distributed-optimization trick for cross-pod (DCN) gradient reduction:
+quantize each gradient leaf to int8 with a per-block scale before the slow
+inter-pod reduction, carrying the quantization error into the next step
+(error feedback keeps convergence unbiased in expectation).  On a real
+multi-pod deployment the int8 payload is what crosses the DCN; here the
+quantize/dequantize pair is applied to the gradient tree inside train_step
+(flag-gated), and tests assert the error-feedback invariant.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def init_compression_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+CompressionState = Any
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_with_feedback(grads, err_state):
+    """-> (decompressed grads, new error state).  Round-trips through int8."""
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize(corrected)
+        deq = _dequantize(q, scale, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(leaf, grads, err_state)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e

@@ -1,0 +1,3 @@
+"""UQ substrate: the paper's applications (GS2 proxy, GP surrogate,
+eigenproblem benchmarks, quasilinear QoI integral) plus samplers."""
+from repro.uq.sampling import GS2_PARAM_RANGES, halton, latin_hypercube

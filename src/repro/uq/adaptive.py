@@ -1,0 +1,68 @@
+"""Adaptive surrogate delegation (paper §VI: the stated future workflow).
+
+"delegating costly simulation to the surrogate at points with low
+uncertainty": for each requested input, query the GP posterior first —
+if its predictive sd is below `sd_threshold`, accept the surrogate mean
+(cheap); otherwise schedule the expensive forward model through the
+executor and CONDITION the GP on the result, so later nearby requests
+hit the cheap path.  The workload is therefore a mixed stream of
+millisecond surrogate hits and minutes-equivalent simulator runs with a
+data-dependent mix — exactly the scheduling profile the paper's load
+balancer exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import Executor
+from repro.core.task import EvalRequest
+from repro.uq import gp as gp_lib
+
+
+@dataclasses.dataclass
+class AdaptiveResult:
+    outputs: np.ndarray              # [n, m] accepted outputs
+    used_simulator: np.ndarray       # [n] bool — which requests ran the model
+    posterior: gp_lib.GPPosterior    # final (enriched) surrogate
+    n_sim_calls: int
+
+
+def evaluate_stream(executor: Executor, model_name: str,
+                    post: gp_lib.GPPosterior, inputs: np.ndarray, *,
+                    sd_threshold: float = 0.05, timeout: float = 600.0,
+                    batch_condition: bool = True) -> AdaptiveResult:
+    """Process `inputs` in order, delegating to the surrogate where its
+    uncertainty allows and to the scheduled simulator where it does not."""
+    inputs = np.asarray(inputs, np.float32)
+    n = len(inputs)
+    m = post.y.shape[1]
+    outputs = np.zeros((n, m), np.float32)
+    used_sim = np.zeros(n, bool)
+    n_sim = 0
+
+    for i, x in enumerate(inputs):
+        mean, var = gp_lib.predict(post, x[None])
+        sd = float(np.sqrt(np.asarray(var)[0]))
+        if sd <= sd_threshold:
+            outputs[i] = np.asarray(mean)[0]
+            continue
+        req = EvalRequest(model_name, [x.tolist()],
+                          time_request=None)       # unpredictable runtime
+        executor.submit(req)
+        res = executor.result(req.task_id, timeout)
+        if res.status != "ok":
+            # fault-tolerant degradation: accept the surrogate rather
+            # than fail the stream; flagged via used_simulator=False
+            outputs[i] = np.asarray(mean)[0]
+            continue
+        y = np.asarray(res.value[0], np.float32)
+        outputs[i] = y
+        used_sim[i] = True
+        n_sim += 1
+        if batch_condition:
+            post = gp_lib.condition(post, x[None], y[None])
+    return AdaptiveResult(outputs=outputs, used_simulator=used_sim,
+                          posterior=post, n_sim_calls=n_sim)

@@ -1,0 +1,173 @@
+"""Gaussian-process regression in pure JAX (paper §III-B).
+
+Implements eqs. (3)/(4): posterior mean/variance through a Cholesky solve,
+ARD RBF / Matérn-5/2 kernels (covariance assembly via the Pallas
+`gp_kernel` on TPU, jnp fallback elsewhere), and marginal-likelihood
+training with Adam on log-parameters.  Multi-output (the paper's GP emits
+growth rate AND mode frequency) is handled as independent GPs sharing the
+kernel matrix — one Cholesky, two solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class GPParams:
+    log_lengthscale: jax.Array       # [D]
+    log_variance: jax.Array          # []
+    log_noise: jax.Array             # []
+
+    @staticmethod
+    def init(d: int) -> "GPParams":
+        return GPParams(jnp.zeros((d,)), jnp.zeros(()), jnp.log(jnp.float32(0.1)))
+
+    def tree(self):
+        return {"ls": self.log_lengthscale, "var": self.log_variance,
+                "noise": self.log_noise}
+
+    @staticmethod
+    def from_tree(t) -> "GPParams":
+        return GPParams(t["ls"], t["var"], t["noise"])
+
+
+@dataclasses.dataclass
+class GPPosterior:
+    """Trained GP conditioned on (x, y); y may be [N] or [N, M].
+    Outputs are standardised internally (per-column mean/std) — predict()
+    returns results on the original scale."""
+    params: GPParams
+    x: jax.Array                     # [N, D]
+    y: jax.Array                     # [N, M] raw observations
+    y_mean: jax.Array                # [M]
+    y_std: jax.Array                 # [M]
+    chol: jax.Array                  # [N, N]
+    alpha: jax.Array                 # [N, M]  (K + s2 I)^-1 (y - mean)/std
+    kind: str = "rbf"
+
+
+def _kernel(params: GPParams, x1, x2, kind: str) -> jax.Array:
+    # clip log-params: keeps NLML optimisation from walking the noise or
+    # lengthscales into Cholesky-breaking territory
+    ls = jnp.exp(jnp.clip(params.log_lengthscale, -5.0, 5.0))
+    var = jnp.exp(jnp.clip(params.log_variance, -8.0, 8.0))
+    return kops.gp_kernel_matrix(x1, x2, ls, var, kind)
+
+
+def _chol_factor(params: GPParams, x, kind: str) -> jax.Array:
+    n = x.shape[0]
+    k = _kernel(params, x, x, kind)
+    s2 = jnp.exp(2.0 * jnp.clip(params.log_noise, -5.0, 5.0))
+    # jitter scales with the signal variance: keeps the f32 Cholesky
+    # conditioned even in the noiseless-interpolation regime the NLML
+    # optimum sometimes reaches (large var, lengthscale >> data range)
+    var = jnp.exp(jnp.clip(params.log_variance, -8.0, 8.0))
+    return jnp.linalg.cholesky(k + (s2 + 1e-5 * (var + 1.0)) * jnp.eye(n))
+
+
+def nlml(tree, x, y, kind: str = "rbf") -> jax.Array:
+    """Negative log marginal likelihood, summed over output columns."""
+    params = GPParams.from_tree(tree)
+    y2 = y if y.ndim == 2 else y[:, None]
+    yc = y2 - jnp.mean(y2, axis=0, keepdims=True)
+    n, m = yc.shape
+    chol = _chol_factor(params, x, kind)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), yc)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    quad = jnp.sum(yc * alpha)
+    return 0.5 * (quad + m * logdet + m * n * jnp.log(2.0 * jnp.pi))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "steps", "lr"))
+def _fit(x, y, kind: str, steps: int, lr: float):
+    tree0 = GPParams.init(x.shape[1]).tree()
+    grad_fn = jax.value_and_grad(lambda t: nlml(t, x, y, kind))
+
+    clip_lo = {"ls": -5.0, "var": -8.0, "noise": -5.0}
+    clip_hi = {"ls": 5.0, "var": 8.0, "noise": 2.0}
+
+    def adam_step(state, _):
+        tree, m, v, t = state
+        loss, g = grad_fn(tree)
+        # a NaN gradient (transient Cholesky breakdown) must not poison
+        # the parameters: zero it and let the next step recover
+        g = jax.tree.map(lambda a: jnp.nan_to_num(a), g)
+        t = t + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        tree = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8),
+                            tree, mh, vh)
+        tree = {k: jnp.clip(x, clip_lo[k], clip_hi[k])
+                for k, x in tree.items()}
+        return (tree, m, v, t), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, tree0)
+    (tree, _, _, _), losses = jax.lax.scan(
+        adam_step, (tree0, zeros, zeros, jnp.float32(0)), None, length=steps)
+    return tree, losses
+
+
+def fit(x: jax.Array, y: jax.Array, kind: str = "rbf", steps: int = 200,
+        lr: float = 5e-2) -> GPPosterior:
+    """Type-II MLE: optimise (lengthscales, variance, noise) by Adam."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    y2 = y if y.ndim == 2 else y[:, None]
+    mean = jnp.mean(y2, axis=0)
+    std = jnp.maximum(jnp.std(y2, axis=0), 1e-8)
+    yn = (y2 - mean) / std
+    tree, _ = _fit(x, yn, kind, steps, lr)
+    params = GPParams.from_tree(tree)
+    chol = _chol_factor(params, x, kind)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), yn)
+    return GPPosterior(params=params, x=x, y=y2, y_mean=mean, y_std=std,
+                       chol=chol, alpha=alpha, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _predict(params_tree, x_train, y_mean, y_std, chol, alpha, x_star, kind):
+    params = GPParams.from_tree(params_tree)
+    ks = _kernel(params, x_train, x_star, kind)                 # [N, S]
+    mean = y_mean[None] + (ks.T @ alpha) * y_std[None]          # [S, M]
+    v = jax.scipy.linalg.solve_triangular(chol, ks, lower=True)  # [N, S]
+    prior = jnp.exp(params.log_variance)
+    var = jnp.maximum(prior - jnp.sum(v * v, axis=0), 1e-12)    # [S]
+    var = var * jnp.mean(y_std) ** 2                            # orig scale
+    return mean, var
+
+
+def predict(post: GPPosterior, x_star: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Posterior mean [S, M] and variance [S] at x_star (eqs. 3-4)."""
+    x_star = jnp.asarray(x_star, jnp.float32)
+    if x_star.ndim == 1:
+        x_star = x_star[None]
+    return _predict(post.params.tree(), post.x, post.y_mean, post.y_std,
+                    post.chol, post.alpha, x_star, post.kind)
+
+
+def condition(post: GPPosterior, x_new: jax.Array, y_new: jax.Array
+              ) -> GPPosterior:
+    """Add observations and re-condition (adaptive/Bayesian-quadrature use);
+    hyperparameters are kept — only the Cholesky is rebuilt."""
+    x_new = jnp.atleast_2d(jnp.asarray(x_new, jnp.float32))
+    y_new2 = jnp.asarray(y_new, jnp.float32)
+    if y_new2.ndim == 1:
+        y_new2 = y_new2[:, None] if x_new.shape[0] > 1 else y_new2[None, :]
+    x = jnp.concatenate([post.x, x_new])
+    y = jnp.concatenate([post.y, y_new2])
+    mean = jnp.mean(y, axis=0)
+    std = jnp.maximum(jnp.std(y, axis=0), 1e-8)
+    chol = _chol_factor(post.params, x, post.kind)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), (y - mean) / std)
+    return GPPosterior(params=post.params, x=x, y=y, y_mean=mean, y_std=std,
+                       chol=chol, alpha=alpha, kind=post.kind)

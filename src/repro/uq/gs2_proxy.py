@@ -1,0 +1,154 @@
+"""GS2 proxy: a JAX linear gyrokinetic-stability forward model.
+
+GS2 itself is a Fortran code solving the 5-D Vlasov-Maxwell system; what
+matters to *this* paper is its scheduling profile: an initial-value solver
+whose runtime varies unpredictably (minutes to hours) with seven physics
+inputs because it iterates until an unstable mode converges.
+
+The proxy keeps exactly that profile.  It discretises a 1-D
+ballooning-space mode equation along the field line into an m x m operator
+A(theta) built from the paper's Table II inputs (safety factor, shear,
+density/temperature gradients, beta, collisionality, binormal wavelength)
+and runs an initial-value power iteration under `lax.while_loop` until the
+dominant-mode growth rate converges.  The spectral gap of A — and hence
+the iteration count, and hence the runtime — depends strongly and
+non-obviously on the inputs: the milliseconds->seconds spread on CPU has
+the same ~100-1000x dynamic range as GS2's minutes->hours.
+
+Outputs mirror the GP surrogate's: (growth rate, mode frequency).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_RESOLUTION = 96
+MAX_ITERS = 20_000
+TOL = 1e-9
+
+# GS2-equivalent calibration: wall-clock grows superlinearly in proxy
+# iterations (GS2 must resolve marginal modes on finer time grids), scaled
+# so the induced runtime distribution spans the paper's [1, 180] minute
+# band with a long right tail.
+GS2_RUNTIME_SCALE = 0.0143
+GS2_RUNTIME_POWER = 2.0
+
+
+def build_operator(theta: jax.Array, m: int = DEFAULT_RESOLUTION) -> jax.Array:
+    """Assemble the m x m ballooning-mode operator from the 7 inputs."""
+    q, shear, dens_grad, temp_grad, beta, nu, ky = (theta[i] for i in range(7))
+    ky = 0.05 + ky                                 # avoid the ky=0 degeneracy
+    grid = jnp.linspace(-jnp.pi, jnp.pi, m)
+    # field-line bending: -(d^2/dtheta^2) with shear-dependent metric
+    h = grid[1] - grid[0]
+    bend = (1.0 + (shear * grid - beta * q * jnp.sin(grid)) ** 2) / (q * q)
+    lap = (jnp.diag(jnp.full(m - 1, 1.0), 1) + jnp.diag(jnp.full(m - 1, 1.0), -1)
+           - 2.0 * jnp.eye(m)) / (h * h)
+    # instability drive: curvature * pressure gradients, localised at the
+    # outboard midplane; damping: collisions + FLR
+    drive = (ky * (temp_grad + 0.4 * dens_grad)
+             * (jnp.cos(grid) + (shear * grid - beta * q * jnp.sin(grid))
+                * jnp.sin(grid)))
+    damp = nu * 12.0 + 0.15 * ky * ky
+    # bending is stabilising: +bend * lap (lap is negative-definite)
+    a = (jnp.diag(bend) @ lap * 0.05
+         + jnp.diag(drive) * 0.5
+         - damp * jnp.eye(m))
+    # mode coupling (off-diagonal, shear-driven) makes the spectrum -- and
+    # the power-iteration convergence rate -- a non-obvious function of
+    # the inputs
+    couple = 0.08 * shear * (jnp.diag(jnp.cos(grid[:-1]), 1)
+                             - jnp.diag(jnp.cos(grid[:-1]), -1))
+    return a + couple
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def solve(theta: jax.Array, m: int = DEFAULT_RESOLUTION
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Initial-value iteration -> (growth_rate, frequency, n_iters)."""
+    a = build_operator(theta, m)
+    # shifted power iteration on exp(A dt) ~ (I + dt A): the dominant
+    # eigenvalue's real part is the growth rate.  dt respects the explicit
+    # stability bound (Gershgorin radius) so stiff, strongly-sheared cases
+    # stay stable at any resolution — they just take more iterations,
+    # which is exactly GS2's runtime profile.
+    gersh = jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    dt = jnp.minimum(0.02, 0.5 / jnp.maximum(gersh, 1e-6))
+    prop = jnp.eye(m) + dt * a + 0.5 * dt * dt * (a @ a)
+    v0 = jnp.ones((m,)) / jnp.sqrt(m)
+
+    def cond(state):
+        _, lam, lam_prev, it = state
+        return (jnp.abs(lam - lam_prev) > TOL) & (it < MAX_ITERS)
+
+    def body(state):
+        v, lam, _, it = state
+        w = prop @ v
+        nrm = jnp.linalg.norm(w)
+        v_new = w / jnp.maximum(nrm, 1e-30)
+        lam_new = jnp.log(jnp.maximum(nrm, 1e-30)) / dt
+        return v_new, lam_new, lam, it + 1
+
+    v, lam, _, iters = jax.lax.while_loop(
+        cond, body, (v0, jnp.float32(0.0), jnp.float32(jnp.inf), 0))
+    growth = lam
+    # mode frequency: Rayleigh-quotient imaginary proxy via the
+    # antisymmetric part of A
+    asym = 0.5 * (a - a.T)
+    freq = v @ (asym @ v)
+    return growth, freq, iters
+
+
+def evaluate(theta, m: int = DEFAULT_RESOLUTION) -> Tuple[float, float]:
+    g, f, _ = solve(jnp.asarray(theta, jnp.float32), m)
+    return float(g), float(f)
+
+
+_solver_salt = [0]
+
+
+def make_solver(m: int = DEFAULT_RESOLUTION):
+    """A FRESH jitted solver (private executable cache).  Model servers
+    use this so that 'fresh server per task' really pays the compile —
+    the module-level `solve` shares its cache across instances, and jax
+    also memoises compilations by HLO hash, so a unique compile-time salt
+    is folded in (emulating the cold process a fresh SLURM job gets)."""
+    _solver_salt[0] += 1
+    salt = float(_solver_salt[0])
+
+    def _solve_salted(theta, m):
+        # +salt −salt: numerically a no-op that XLA folds away, but it
+        # lands in the unoptimised HLO, so the compile cache misses
+        return solve.__wrapped__((theta + salt) - salt, m)
+
+    fresh = jax.jit(_solve_salted, static_argnames=("m",))
+
+    def _eval(theta) -> Tuple[float, float]:
+        g, f, _ = fresh(jnp.asarray(theta, jnp.float32), m)
+        return float(g), float(f)
+
+    return _eval
+
+
+def iteration_count(theta, m: int = DEFAULT_RESOLUTION) -> int:
+    _, _, it = solve(jnp.asarray(theta, jnp.float32), m)
+    return int(it)
+
+
+def gs2_equivalent_runtime(theta, m: int = DEFAULT_RESOLUTION,
+                           floor_s: float = 60.0,
+                           cap_s: float = 10_800.0) -> float:
+    """Map the proxy's iteration count onto GS2's wall-clock band
+    ([1, 180] minutes on 8 cores, Table III) for the scheduling simulator."""
+    it = iteration_count(theta, m)
+    return float(np.clip(GS2_RUNTIME_SCALE * it ** GS2_RUNTIME_POWER,
+                         floor_s, cap_s))
+
+
+def runtime_table(thetas: np.ndarray, m: int = DEFAULT_RESOLUTION
+                  ) -> np.ndarray:
+    return np.array([gs2_equivalent_runtime(t, m) for t in thetas])

@@ -1,0 +1,12 @@
+import os
+
+# Tests and benches must see ONE device (the dry-run sets 512 itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,143 @@
+"""Multi-device numerical-equivalence tests.
+
+These run in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count
+so the main test process keeps its single-device jax (per the dry-run
+contract, only the dry-run may see >1 placeholder device).
+
+Checked invariants:
+  * the EP-over-(data x model) MoE path == the single-device MoE oracle,
+  * sequence-parallel + context-parallel forward == unsharded forward,
+  * decode flash-decoding shard_map == single-device decode.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SNIPPET_HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models import model as M, sharding
+from repro.launch import specs
+from jax.sharding import NamedSharding, PartitionSpec as P
+"""
+
+
+def _run(snippet: str):
+    proc = subprocess.run(
+        [sys.executable, "-c", _SNIPPET_HEADER + textwrap.dedent(snippet)],
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_moe_ep_over_data_matches_single_device():
+    _run("""
+    cfg = configs.get_reduced('dbrx-132b').replace(n_experts=8,
+                                                   capacity_factor=8.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {'tokens': jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 16)),
+        jnp.int32)}
+    ref, _, aux_ref = M.forward(params, batch, cfg)          # no mesh
+
+    mesh = jax.make_mesh((4, 2), ('data', 'model'))
+    cfg_ep = cfg.replace(ep_over_data=True)
+    psh = specs.param_shardings(cfg_ep, mesh)
+    pp = jax.device_put(params, psh)
+    bb = jax.device_put(batch, specs.batch_shardings(cfg_ep,
+        configs.shapes()[0], mesh))
+    with sharding.use_mesh(mesh):
+        out, _, aux = jax.jit(
+            lambda p, b: M.forward(p, b, cfg_ep))(pp, bb)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-3, rtol=2e-3)
+    print('moe ep ok')
+    """)
+
+
+def test_seq_shard_forward_matches_unsharded():
+    _run("""
+    cfg = configs.get_reduced('qwen3-14b')
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch = {'tokens': jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (4, 32)),
+        jnp.int32)}
+    ref, _, _ = M.forward(params, batch, cfg)
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    cfg_sp = cfg.replace(seq_shard=True)
+    psh = specs.param_shardings(cfg_sp, mesh)
+    pp = jax.device_put(params, psh)
+    with sharding.use_mesh(mesh):
+        out, _, _ = jax.jit(lambda p, b: M.forward(p, b, cfg_sp))(pp, batch)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-3, rtol=2e-3)
+    print('seq shard ok')
+    """)
+
+
+def test_sharded_decode_matches_single_device():
+    _run("""
+    cfg = configs.get_reduced('yi-34b') if 'yi-34b' in configs.ARCH_NAMES \
+        else configs.get_reduced('qwen3-14b')
+    cfg = configs.get_reduced('qwen3-14b')
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    b, prompt, total = 2, 5, 8
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        0, cfg.vocab_size, (b, total)), jnp.int32)
+    # single-device reference decode
+    cache = M.init_cache(cfg, b, total)
+    _, cache, _ = M.prefill(params, {'tokens': toks[:, :prompt]}, cfg, cache)
+    ref_logits = []
+    for pos in range(prompt, total):
+        lg, cache = M.decode_step(params, {'tokens': toks[:, pos:pos+1]},
+                                  cfg, cache, jnp.int32(pos))
+        ref_logits.append(np.asarray(lg, np.float32))
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    with sharding.use_mesh(mesh):
+        psh = specs.param_shardings(cfg, mesh)
+        pp = jax.device_put(params, psh)
+        cache = M.init_cache(cfg, b, total)
+        _, cache, _ = jax.jit(lambda p, bt, c: M.prefill(p, bt, cfg, c))(
+            pp, {'tokens': toks[:, :prompt]}, cache)
+        for i, pos in enumerate(range(prompt, total)):
+            lg, cache = jax.jit(
+                lambda p, bt, c, q: M.decode_step(p, bt, cfg, c, q))(
+                pp, {'tokens': toks[:, pos:pos+1]}, cache, jnp.int32(pos))
+            np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                       ref_logits[i], atol=3e-3, rtol=3e-3)
+    print('sharded decode ok')
+    """)
+
+
+def test_cp_prefill_matches_single_device():
+    _run("""
+    cfg = configs.get_reduced('qwen3-14b').replace(seq_shard=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 32)), jnp.int32)
+    ref, _, _ = M.forward(params, {'tokens': toks},
+                          configs.get_reduced('qwen3-14b'))
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    with sharding.use_mesh(mesh):
+        pp = jax.device_put(params, specs.param_shardings(cfg, mesh))
+        cache = M.init_cache(cfg, 2, 32)
+        logits, cache2, _ = jax.jit(
+            lambda p, b, c: M.prefill(p, b, cfg, c))(
+            pp, {'tokens': toks}, cache)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-3, rtol=3e-3)
+    print('cp prefill ok')
+    """)

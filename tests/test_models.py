@@ -1,0 +1,149 @@
+"""Per-architecture smoke + decode-equivalence tests (reduced configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+ARCHS = list(configs.ARCH_NAMES)
+
+
+def _batch(cfg: ModelConfig, b: int, s: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    if cfg.input_mode == "embeddings":
+        return {"embeddings": jnp.asarray(
+                    rng.standard_normal((b, s, cfg.d_model)), cfg.activation_dtype),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# smoke: forward + one train step per arch
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = configs.get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 16)
+    logits, _, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, init_opt_state
+    cfg = configs.get_reduced(arch)
+    opt_cfg = AdamWConfig()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg, 2, 16)
+    p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(o2["step"]) == 1
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+# --------------------------------------------------------------------------
+# decode equivalence: cached decode must match teacher-forced forward
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = configs.get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b, prompt, total = 2, 6, 10
+    full = _batch(cfg, b, total, seed=3)
+    full.pop("labels", None)
+    # teacher-forced full forward
+    logits_full, _, _ = M.forward(params, full, cfg)
+
+    def slice_batch(lo, hi):
+        return {k: v[:, lo:hi] for k, v in full.items()}
+
+    cache = M.init_cache(cfg, b, total)
+    _, cache, _ = M.prefill(params, slice_batch(0, prompt), cfg, cache)
+    for pos in range(prompt, total):
+        step_logits, cache = M.decode_step(
+            params, slice_batch(pos, pos + 1), cfg, cache, jnp.int32(pos))
+        want = logits_full[:, pos]
+        np.testing.assert_allclose(
+            np.asarray(step_logits, np.float32),
+            np.asarray(want, np.float32), atol=2e-3, rtol=2e-3,
+            err_msg=f"{arch} decode diverges at pos {pos}")
+
+
+# --------------------------------------------------------------------------
+# family-specific invariants
+# --------------------------------------------------------------------------
+def test_moe_capacity_drops_are_bounded():
+    """With a generous capacity factor no tokens should be dropped:
+    doubling capacity must not change the output."""
+    from repro.models.moe import moe_apply
+    cfg = configs.get_reduced("dbrx-132b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    seg = [s for s in M.model_segments(cfg) if s.kind == "attn_moe"][0]
+    lp = jax.tree.map(lambda t: t[0], params[seg.name])
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg.d_model))
+    y1, _ = moe_apply(lp["moe"], x, cfg.replace(capacity_factor=8.0))
+    y2, _ = moe_apply(lp["moe"], x, cfg.replace(capacity_factor=16.0))
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+
+def test_moe_aux_loss_near_one_for_uniform_router():
+    """Switch aux loss == E * sum f_i P_i -> ~1.0 under uniform routing."""
+    from repro.models.moe import _route
+    logits = jnp.zeros((4096, 8)) + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(4), (4096, 8))
+    cfg = configs.get_reduced("dbrx-132b")
+    _, _, aux = _route(logits, cfg)
+    assert 0.9 < float(aux) < 1.3
+
+
+def test_deepseek_mtp_loss_present():
+    cfg = configs.get_reduced("deepseek-v3-671b")
+    assert cfg.mtp_depth == 1
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    batch = _batch(cfg, 2, 12)
+    loss, metrics = M.loss_fn(params, batch, cfg)
+    assert "mtp_ce" in metrics and np.isfinite(float(metrics["mtp_ce"]))
+
+
+def test_zamba_shared_attention_is_shared():
+    """The zamba2 shared attention block must be a single weight copy."""
+    cfg = configs.get_reduced("zamba2-2.7b")
+    defs = M.param_defs(cfg)
+    assert "shared_attn" in defs
+    # groups stack exists and the shared block is NOT per-layer stacked
+    w_q = defs["shared_attn"]["attn"]["w_q"]
+    assert len(w_q.shape) == 3  # no leading layer dim
+
+
+def test_long_500k_runnable_flags():
+    runnable = {a: configs.get(a).runnable(configs.shapes()[3])
+                for a in ARCHS}
+    assert runnable["rwkv6-3b"] and runnable["zamba2-2.7b"]
+    assert sum(runnable.values()) == 2  # everyone else skips long_500k
+
+
+def test_param_counts_match_public_specs():
+    """Full-config parameter counts must land near the published sizes."""
+    expected = {
+        "yi-34b": 34.4e9, "qwen3-14b": 14.8e9, "dbrx-132b": 132e9,
+        "deepseek-v3-671b": 671e9, "starcoder2-3b": 3.0e9,
+        "minicpm3-4b": 4.0e9, "rwkv6-3b": 3.1e9, "zamba2-2.7b": 2.7e9,
+        "phi-3-vision-4.2b": 4.2e9, "musicgen-large": 3.3e9,
+    }
+    for arch, want in expected.items():
+        got = M.count_params(configs.get(arch))
+        assert 0.7 * want < got < 1.35 * want, (arch, got, want)

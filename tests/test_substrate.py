@@ -1,0 +1,230 @@
+"""Substrate tests: checkpointing, data pipeline, optimizer, sharding rules,
+gradient compression, end-to-end training behaviour."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import MemmapCorpus, SyntheticLM, host_shard
+from repro.models import sharding
+from repro.optim import (AdamWConfig, adamw_update, compress_with_feedback,
+                         cosine_schedule, init_compression_state,
+                         init_opt_state)
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32),
+                  "d": jnp.full((2, 2), 0.5, jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(tmp_path / "x.npz", t, step=7)
+    got, meta = load_pytree(tmp_path / "x.npz", t)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_manager_retention_and_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        t = jax.tree.map(lambda x: x + 1, t)
+        mgr.save(s, t)
+    mgr.wait()
+    files = sorted(p.name for p in tmp_path.iterdir())
+    assert files == ["step_00000003.npz", "step_00000004.npz"]
+    got, meta = mgr.restore_latest(t)
+    assert meta["step"] == 4
+    np.testing.assert_allclose(np.asarray(got["a"], np.float32),
+                               np.asarray(t["a"], np.float32))
+
+
+def test_checkpoint_resharding_restore(tmp_path):
+    """Restore must accept a different sharding layout than was saved
+    (elastic restart across mesh shapes)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(8.0).reshape(2, 4)}
+    save_pytree(tmp_path / "x.npz", t, step=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got, _ = load_pytree(tmp_path / "x.npz", t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+    assert got["w"].sharding == sh["w"]
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+def test_synthetic_deterministic_and_structured():
+    pipe = SyntheticLM(vocab_size=97, seq_len=32, global_batch=4, seed=1)
+    a, b = pipe.batch(5), pipe.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(pipe.batch(6)["tokens"], a["tokens"])
+    # structure: most transitions follow the affine rule
+    t = a["tokens"].astype(np.int64)
+    follows = (t[:, 1:] == (t[:, :-1] * (6364136223846793005 % 97) + 7) % 97)
+    assert follows.mean() > 0.8
+
+
+def test_host_shard_partition():
+    slices = [host_shard(64, i, 4) for i in range(4)]
+    assert [s[1] for s in slices] == [16] * 4
+    assert sorted(o for o, _ in slices) == [0, 16, 32, 48]
+
+
+def test_memmap_corpus(tmp_path):
+    p = tmp_path / "corpus.bin"
+    MemmapCorpus.build_demo(p, vocab_size=50, n_tokens=4096, seed=0)
+    pipe = MemmapCorpus(p, vocab_size=50, seq_len=16, global_batch=2)
+    b = pipe.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["tokens"].max() < 50
+    np.testing.assert_array_equal(b["tokens"], pipe.batch(0)["tokens"])
+
+
+def test_embeddings_mode():
+    pipe = SyntheticLM(vocab_size=97, seq_len=8, global_batch=2, seed=0,
+                       embeddings_dim=16)
+    b = pipe.batch(0)
+    assert b["embeddings"].shape == (2, 8, 16)
+    assert b["labels"].shape == (2, 8)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(peak_lr=0.1, warmup_steps=5, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 0.05
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, min_lr=0.1, warmup_steps=10,
+                      total_steps=100)
+    lrs = [float(cosine_schedule(jnp.asarray(s), cfg)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert abs(lrs[10] - 1.0) < 0.01
+    assert lrs[-1] == pytest.approx(0.1, abs=0.01)
+
+
+def test_bf16_moments_dtype():
+    cfg = AdamWConfig(moments_dtype="bfloat16")
+    params = {"w": jnp.ones((4,))}
+    opt = init_opt_state(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4,))}
+    _, opt2, _ = adamw_update(params, g, opt, cfg)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# gradient compression (error feedback)
+# --------------------------------------------------------------------------
+def test_compression_error_feedback_invariant():
+    """decompressed + error == original + previous error (exactly, in f32)."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(1000), jnp.float32)}
+    err0 = init_compression_state(g)
+    deq, err = compress_with_feedback(g, err0)
+    np.testing.assert_allclose(np.asarray(deq["w"]) + np.asarray(err["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+    # error is bounded by one quant step per block
+    scale = np.abs(np.asarray(g["w"])).reshape(-1, 250).max()  # loose bound
+    assert np.abs(np.asarray(err["w"])).max() <= scale / 127 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(10, 600))
+def test_compression_roundtrip_accumulates_correctly(seed, n):
+    """Error feedback: sum of decompressed grads converges to sum of true
+    grads (bias cancels across steps)."""
+    rng = np.random.default_rng(seed)
+    true = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    g = {"w": true}
+    err = init_compression_state(g)
+    total = np.zeros(n)
+    for _ in range(20):
+        deq, err = compress_with_feedback(g, err)
+        total += np.asarray(deq["w"])
+    np.testing.assert_allclose(total / 20, np.asarray(true),
+                               atol=np.abs(true).max() / 127 + 1e-5)
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+def _mesh16():
+    import os
+    devs = jax.devices()
+    if len(devs) >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    return None
+
+
+def test_spec_for_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("model",))
+    # head dim 56 not divisible by ... (size 1 always divides; use rules
+    # logic directly with a fake mesh shape via spec_for arguments)
+    spec = sharding.spec_for((128, 1024), ("embed", "mlp"), mesh,
+                             fsdp_axes=("data",))
+    assert isinstance(spec, P)
+
+
+def test_spec_for_never_reuses_axis():
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = sharding.spec_for((64, 64), ("mlp", "mlp"), mesh)
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat += list(s) if isinstance(s, tuple) else [s]
+    assert len(flat) == len(set(flat))
+
+
+def test_train_loss_decreases_end_to_end(tmp_path):
+    """(b) end-to-end driver sanity: a reduced model trains and improves."""
+    from repro.launch.train import train
+    out = train("starcoder2-3b", reduced=True, steps=40, batch=8, seq=64,
+                ckpt_dir=str(tmp_path / "ck"), ckpt_every=20, log_every=100)
+    first5 = np.mean(out["losses"][:5])
+    last5 = np.mean(out["losses"][-5:])
+    assert last5 < first5 - 0.02, (first5, last5)
+
+
+def test_accumulation_matches_single_batch():
+    """accum_steps=2 over the same data must match accum_steps=1 closely."""
+    from repro import configs
+    from repro.launch.steps import make_train_step
+    from repro.models import model as M
+    from repro.optim import AdamWConfig, init_opt_state
+    cfg1 = configs.get_reduced("qwen3-14b").replace(accum_steps=1)
+    cfg2 = cfg1.replace(accum_steps=2)
+    opt_cfg = AdamWConfig()
+    params = M.init_params(cfg1, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, opt_cfg)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg1.vocab_size, (4, 16)),
+                                   jnp.int32)}
+    p1, _, m1 = jax.jit(make_train_step(cfg1, opt_cfg))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg2, opt_cfg))(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(diff)) < 5e-3

@@ -1,0 +1,86 @@
+"""Dependent-task MCMC + adaptive surrogate delegation (paper §VI)."""
+import numpy as np
+import pytest
+
+from repro.core import Executor, LambdaModel
+from repro.uq import adaptive, gp as gp_lib, mcmc, sampling
+
+
+def _quad_model_factory():
+    """Cheap analytic forward model: F(x) = [x0^2 + x1, x0 - x1^2]."""
+    def fn(parameters, config):
+        x = np.asarray(parameters[0], float)
+        return [[float(x[0] ** 2 + x[1]), float(x[0] - x[1] ** 2)]]
+    return LambdaModel("quad", fn, 2, 2)
+
+
+BOUNDS = [(-2.0, 2.0), (-2.0, 2.0)]
+TRUTH = np.array([0.8, -0.5])
+OBSERVED = [TRUTH[0] ** 2 + TRUTH[1], TRUTH[0] - TRUTH[1] ** 2]
+
+
+def test_mcmc_chain_converges_toward_posterior():
+    with Executor({"quad": _quad_model_factory}, n_workers=2) as ex:
+        res = mcmc.run_chain(ex, "quad", x0=np.array([0.0, 0.0]),
+                             bounds=BOUNDS, observed=OBSERVED,
+                             n_steps=120, step_scale=0.03, sigma=0.1,
+                             seed=3)
+    assert res.n_evals == 121
+    assert 0.05 < res.accept_rate < 0.95
+    # the second half of the chain should fit the data much better
+    first, second = res.log_likelihoods[:40], res.log_likelihoods[-40:]
+    assert second.mean() > first.mean()
+    # posterior mass near a solution consistent with the observation
+    tail = res.samples[-40:]
+    f1 = tail[:, 0] ** 2 + tail[:, 1]
+    assert abs(np.median(f1) - OBSERVED[0]) < 0.3
+
+
+def test_mcmc_multiple_chains_interleave():
+    with Executor({"quad": _quad_model_factory}, n_workers=3) as ex:
+        results = mcmc.run_chains(
+            ex, "quad", x0s=[np.zeros(2), np.ones(2) * 0.5],
+            bounds=BOUNDS, observed=OBSERVED, n_steps=30,
+            step_scale=0.1, sigma=0.1)
+    assert len(results) == 2
+    assert all(r.n_evals == 31 for r in results)
+    # chains are distinct (different seeds)
+    assert not np.allclose(results[0].samples, results[1].samples)
+
+
+def test_adaptive_delegation_reduces_simulator_calls():
+    rng = np.random.default_rng(0)
+    xs_train = rng.uniform(-2, 2, (40, 2)).astype(np.float32)
+    ys_train = np.stack([xs_train[:, 0] ** 2 + xs_train[:, 1],
+                         xs_train[:, 0] - xs_train[:, 1] ** 2], 1)
+    post = gp_lib.fit(xs_train, ys_train, steps=200)
+
+    # request stream: half near the training data (surrogate-safe), half
+    # far outside (forces simulator runs)
+    near = rng.uniform(-1.5, 1.5, (10, 2)).astype(np.float32)
+    with Executor({"quad": _quad_model_factory}, n_workers=2) as ex:
+        res = adaptive.evaluate_stream(ex, "quad", post, near,
+                                       sd_threshold=0.25)
+    assert res.n_sim_calls < len(near)          # some surrogate hits
+    # every output is accurate regardless of path taken
+    want = np.stack([near[:, 0] ** 2 + near[:, 1],
+                     near[:, 0] - near[:, 1] ** 2], 1)
+    np.testing.assert_allclose(res.outputs, want, atol=0.35)
+    # simulator outputs are exact
+    np.testing.assert_allclose(res.outputs[res.used_simulator],
+                               want[res.used_simulator], atol=1e-5)
+
+
+def test_adaptive_conditioning_enriches_surrogate():
+    rng = np.random.default_rng(1)
+    xs = rng.uniform(-0.5, 0.5, (15, 2)).astype(np.float32)
+    ys = np.stack([xs[:, 0] ** 2 + xs[:, 1], xs[:, 0] - xs[:, 1] ** 2], 1)
+    post = gp_lib.fit(xs, ys, steps=150)
+    probe = np.array([[1.8, 1.8]], np.float32)   # far from training data
+    _, var_before = gp_lib.predict(post, probe)
+    with Executor({"quad": _quad_model_factory}, n_workers=1) as ex:
+        res = adaptive.evaluate_stream(ex, "quad", post, probe,
+                                       sd_threshold=0.01)
+    assert res.n_sim_calls == 1
+    _, var_after = gp_lib.predict(res.posterior, probe)
+    assert float(var_after[0]) < float(var_before[0])
