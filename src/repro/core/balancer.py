@@ -41,15 +41,33 @@ class LoadBalancer:
     """Language-agnostic facade: register models, evaluate through the
     scheduler, monitor health."""
 
-    def __init__(self, backend: str = "hq", n_workers: int = 2, **executor_kw):
+    def __init__(self, backend: str = "hq", n_workers: int = 2, *,
+                 policy: Any = "fcfs", predictor: Any = None,
+                 **executor_kw):
+        """`policy` / `predictor` select the `repro.sched` scheduling
+        policy and online runtime predictor by registered name (or
+        instance) and are passed straight through to the `Executor` —
+        e.g. ``LoadBalancer("hq", policy="pack", predictor="gp")``."""
         assert backend in ("hq", "slurm"), backend
         self.backend = backend
         self._factories: Dict[str, Callable[[], Model]] = {}
         self._info: Dict[str, ModelInfo] = {}
         self._executor_kw = dict(executor_kw)
         self._executor_kw.setdefault("persistent_servers", backend == "hq")
+        self._executor_kw["policy"] = policy
+        self._executor_kw["predictor"] = predictor
         self._n_workers = n_workers
         self.executor: Optional[Executor] = None
+
+    @property
+    def policy(self):
+        """The live scheduling-policy object (None before start())."""
+        return self.executor.policy if self.executor else None
+
+    @property
+    def predictor(self):
+        """The live runtime predictor (None before start() / if unset)."""
+        return self.executor.predictor if self.executor else None
 
     # ------------------------------------------------------------------
     def register_model(self, name: str, factory: Callable[[], Model],

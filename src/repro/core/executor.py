@@ -2,7 +2,10 @@
 
 This realises the paper's mechanism with *real* costs instead of simulated
 ones: a pool of persistent workers (threads; on a TPU pod, one per mesh
-slice) pulls evaluation requests from a FCFS queue.
+slice) pulls evaluation requests from a pluggable `repro.sched` scheduling
+policy (FCFS by default; SJF/LPT/cost-aware packing/work stealing by
+name), with an optional online runtime predictor learning task costs from
+completions.
 
   * HQ semantics (`persistent_servers=True`): each worker instantiates a
     model server ONCE and reuses it — the jit-compile / warmup cost (the
@@ -29,8 +32,6 @@ Production features beyond the paper's prototype:
 """
 from __future__ import annotations
 
-import heapq
-import itertools
 import json
 import threading
 import time
@@ -38,12 +39,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import TaskRecord
 from repro.core.task import EvalRequest, EvalResult, Model
+from repro.sched import make_policy, make_predictor
+from repro.sched.policy import SchedulingPolicy, WorkerView
 
 _STOP = object()
 
 
 class _Server:
-    """One instantiated model server on one worker."""
+    """One instantiated model server on one worker.  `init_t` is the cost
+    of the FIRST instantiation and is never overwritten — warm reuses
+    report 0 per dispatch while the warmup-cost record survives."""
 
     def __init__(self, model: Model, init_t: float):
         self.model = model
@@ -60,25 +65,36 @@ class Worker(threading.Thread):
         self.servers: Dict[str, _Server] = {}
         self.crashed = False
 
-    def _get_server(self, name: str) -> _Server:
+    def view(self) -> WorkerView:
+        """What the scheduling policy may know about this worker.  The
+        allocation budget is populated only when the executor was given
+        an `allocation_s` (emulating HQ's bulk-allocation length) —
+        without one, budget-aware packing degrades to plain LPT order."""
+        budget = None
+        if self.pool.allocation_s is not None:
+            budget = max(self.pool.allocation_s
+                         - (time.monotonic() - self.pool._t0), 0.0)
+        return WorkerView(wid=self.wid, warm_models=frozenset(self.servers),
+                          budget_left=budget)
+
+    def _get_server(self, name: str) -> Tuple[_Server, float]:
+        """Return (server, init seconds paid by THIS dispatch: 0 on reuse)."""
         if self.pool.persistent_servers and name in self.servers:
-            s = self.servers[name]
-            s_init = 0.0
-            s.init_t = s_init
-            return s
+            return self.servers[name], 0.0
         t0 = time.monotonic()
         model = self.pool.model_factories[name]()
         model.warmup()
         init_t = time.monotonic() - t0
         server = _Server(model, init_t)
+        self.pool._note_server_init(init_t)
         if self.pool.persistent_servers:
             self.servers[name] = server
-        return server
+        return server, init_t
 
     def run(self):
         while self.alive:
             try:
-                item = self.pool._queue_get(timeout=0.02)
+                item = self.pool._queue_get(timeout=0.02, worker=self)
             except IndexError:
                 continue
             if item is _STOP:
@@ -94,7 +110,7 @@ class Worker(threading.Thread):
                 fail_n = int(req.config.get("fail_attempts", 0))
                 if attempt <= fail_n:
                     raise RuntimeError("injected failure")
-                server = self._get_server(req.model_name)
+                server, init_t = self._get_server(req.model_name)
                 t0 = time.monotonic()
                 value = server.model(req.parameters, req.config)
                 compute_t = time.monotonic() - t0
@@ -107,7 +123,7 @@ class Worker(threading.Thread):
                     worker=self.name, attempts=attempt,
                     submit_t=req.submit_t, dispatch_t=dispatch_t,
                     start_t=dispatch_t, end_t=time.monotonic(),
-                    compute_t=compute_t, init_t=server.init_t)
+                    compute_t=compute_t, init_t=init_t)
                 self.pool._complete(req, res)
             except Exception as e:  # noqa: BLE001 — any task failure requeues
                 self.pool._fail(req, attempt, repr(e), self)
@@ -117,16 +133,36 @@ class Worker(threading.Thread):
 
 
 class Executor:
-    """Persistent-worker FCFS executor with fault tolerance and scaling."""
+    """Persistent-worker executor with pluggable scheduling, fault
+    tolerance and elastic scaling.
+
+    `policy` selects how queued tasks are ordered/routed (a registered
+    name — "fcfs", "sjf", "lpt", "pack", "steal" — or a configured
+    `SchedulingPolicy` instance); `predictor` supplies online per-task
+    cost estimates ("quantile", "gp", or a `RuntimePredictor`).  Every
+    successful completion is fed back to the predictor, so cost-aware
+    policies sharpen as the run progresses.  The legacy `pack_by_cost`
+    flag maps onto `policy="sjf"` (ordering by the static time request,
+    exactly the old inline-heap behaviour).
+
+    `allocation_s` emulates HQ's bulk-allocation length for the live
+    pool: workers then advertise their remaining budget to the policy,
+    which is what makes `policy="pack"` allocation-aware here (without
+    it, pack orders like LPT — budget fitting only applies where a
+    budget exists, as in `simulate_policy`).
+    """
 
     def __init__(self, model_factories: Dict[str, Callable[[], Model]],
                  n_workers: int = 2, *, persistent_servers: bool = True,
                  max_attempts: int = 3, backlog_limit: Optional[int] = None,
                  pack_by_cost: bool = False,
+                 policy: Any = "fcfs",
+                 predictor: Any = None,
                  straggler_factor: float = 0.0,
                  straggler_min_completed: int = 5,
                  autoscale_backlog: Optional[int] = None,
                  max_workers: int = 32,
+                 allocation_s: Optional[float] = None,
                  name: str = "hq"):
         self.model_factories = dict(model_factories)
         self.persistent_servers = persistent_servers
@@ -139,14 +175,24 @@ class Executor:
         self.max_workers = max_workers
         self.name = name
 
+        if pack_by_cost and policy in (None, "fcfs"):
+            policy = "sjf"
+        self.policy: SchedulingPolicy = make_policy(policy,
+                                                    make_predictor(predictor))
+        # completions feed the predictor the policy actually READS — if a
+        # policy instance arrived with its own, that binding wins and any
+        # `predictor=` kwarg is superseded (no split-brain feedback loop)
+        self.predictor = self.policy.predictor
+        self.allocation_s = allocation_s
+
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
-        self._heap: List[Tuple[float, int, Tuple[EvalRequest, int]]] = []
-        self._tick = itertools.count()
         self._waiting: List[Tuple[EvalRequest, int]] = []   # unmet deps
         self._running: Dict[str, Tuple[EvalRequest, Worker, float]] = {}
         self._results: Dict[str, EvalResult] = {}
         self._requests: Dict[str, EvalRequest] = {}
+        self._init_total_t = 0.0               # cumulative server-init cost
+        self._init_count = 0
         self._t0 = time.monotonic()
         self.workers: List[Worker] = []
         self._stopping = False
@@ -159,19 +205,19 @@ class Executor:
     # ------------------------------------------------------------------
     # queue plumbing
     # ------------------------------------------------------------------
-    def _queue_get(self, timeout: float):
+    def _queue_get(self, timeout: float, worker: Optional[Worker] = None):
+        view = worker.view() if worker is not None else None
         with self._cv:
-            if not self._heap:
+            if not len(self.policy):
                 self._cv.wait(timeout)
-            if not self._heap:
+            item = self.policy.pop(view)
+            if item is None:
                 raise IndexError
-            return heapq.heappop(self._heap)[2]
+            return item
 
     def _push(self, req: EvalRequest, attempt: int):
-        cost = (req.time_request if (self.pack_by_cost and req.time_request)
-                else 0.0)
         with self._cv:
-            heapq.heappush(self._heap, (cost, next(self._tick), (req, attempt)))
+            self.policy.push(req, attempt)
             self._cv.notify()
 
     def _already_done(self, task_id: str) -> bool:
@@ -183,7 +229,18 @@ class Executor:
         with self._lock:
             self._running[req.task_id] = (req, worker, time.monotonic())
 
+    def _note_server_init(self, init_t: float):
+        with self._lock:
+            self._init_total_t += init_t
+            self._init_count += 1
+
     def _complete(self, req: EvalRequest, res: EvalResult):
+        if res.status == "ok" and self.predictor is not None:
+            # outside the scheduler lock: a GP refit must not stall dispatch
+            try:
+                self.predictor.observe(req, res.compute_t)
+            except Exception:  # noqa: BLE001 — prediction is best-effort
+                pass
         with self._cv:
             self._running.pop(req.task_id, None)
             prev = self._results.get(req.task_id)
@@ -219,15 +276,18 @@ class Executor:
         self._waiting = still
 
     def _on_worker_death(self, worker: Worker):
-        """Requeue whatever a dead worker was running (fault tolerance)."""
+        """Requeue whatever a dead worker was running (fault tolerance);
+        the policy reflows any per-worker queue state it held."""
         with self._cv:
             if worker in self.workers:
                 self.workers.remove(worker)
+            self.policy.remove_worker(worker.wid)
             dead = [tid for tid, (_, w, _) in self._running.items()
                     if w is worker]
             for tid in dead:
                 req, _, _ = self._running.pop(tid)
                 self._push(req, 1)
+            self._cv.notify_all()
 
     # ------------------------------------------------------------------
     # public API
@@ -235,7 +295,7 @@ class Executor:
     def submit(self, req: EvalRequest) -> str:
         with self._cv:
             if self.backlog_limit is not None:
-                while len(self._heap) >= self.backlog_limit:
+                while len(self.policy) >= self.backlog_limit:
                     self._cv.wait(0.01)
             req.submit_t = time.monotonic()
             self._requests[req.task_id] = req
@@ -290,6 +350,7 @@ class Executor:
             while len(self.workers) > n:
                 w = self.workers.pop()
                 w.alive = False
+                self.policy.remove_worker(w.wid)
 
     def kill_worker(self, idx: int = 0):
         """Fault injection: hard-kill one worker (tests, chaos drills)."""
@@ -299,7 +360,7 @@ class Executor:
 
     def backlog(self) -> int:
         with self._lock:
-            return len(self._heap)
+            return len(self.policy)
 
     def n_workers(self) -> int:
         return len([w for w in self.workers if w.alive])
@@ -312,14 +373,19 @@ class Executor:
                 if self.backlog() > self.autoscale_backlog and \
                         len(self.workers) < self.max_workers:
                     self.scale_to(len(self.workers) + 1)
-            # straggler re-issue (speculative execution)
+            # straggler re-issue (speculative execution): the p95 comes
+            # from the online predictor when one is configured, else from
+            # a scan over completed results
             if self.straggler_factor > 0:
                 with self._lock:
                     done = [r.compute_t for r in self._results.values()
                             if r.status == "ok"]
                     if len(done) >= self.straggler_min_completed:
-                        done.sort()
-                        p95 = done[int(0.95 * (len(done) - 1))]
+                        p95 = (self.predictor.quantile(0.95)
+                               if self.predictor is not None else None)
+                        if p95 is None:
+                            done.sort()
+                            p95 = done[int(0.95 * (len(done) - 1))]
                         cutoff = self.straggler_factor * max(p95, 1e-3)
                         now = time.monotonic()
                         for tid, (req, w, t_start) in list(
@@ -335,7 +401,7 @@ class Executor:
     def snapshot(self) -> Dict[str, Any]:
         """Serialisable queue state: done ids + pending request payloads."""
         with self._lock:
-            pending = [req for _, _, (req, _) in self._heap]
+            pending = [req for req, _ in self.policy.pending()]
             pending += [req for req, _ in self._waiting]
             pending += [req for req, _, _ in self._running.values()]
             return {
@@ -366,6 +432,25 @@ class Executor:
         return ex
 
     # ------------------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        """Executor-level counters.  `server_init_total_t` is the true
+        cumulative warmup cost across all server instantiations — visible
+        even though warm reuses report `init_t == 0` per result."""
+        with self._lock:
+            by_status: Dict[str, int] = {}
+            for r in self._results.values():
+                by_status[r.status] = by_status.get(r.status, 0) + 1
+            return {
+                "server_init_total_t": self._init_total_t,
+                "server_inits": self._init_count,
+                "policy": self.policy.name,
+                "backlog": len(self.policy),
+                "running": len(self._running),
+                "waiting_on_deps": len(self._waiting),
+                "workers_alive": self.n_workers(),
+                "results_by_status": by_status,
+            }
+
     def records(self) -> List[TaskRecord]:
         with self._lock:
             out = []

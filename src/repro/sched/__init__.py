@@ -1,0 +1,16 @@
+"""Pluggable scheduling: policies + online runtime predictors.
+
+The architectural seam between "what to run next" and the three dispatch
+layers that need an answer — the live `Executor`, the UM-Bridge
+`LoadBalancer` facade, and the discrete-event `simulate_policy` loop.
+Pick by name (`policy="pack", predictor="gp"`) or pass configured
+instances; register new ones with `@register_policy` / `@register_predictor`.
+"""
+from repro.sched.policy import (FCFSPolicy, LPTPolicy, PackingPolicy,
+                                SchedulingPolicy, SJFPolicy,
+                                WorkStealingPolicy, WorkerView)
+from repro.sched.predictor import (GPRuntimePredictor, QuantileEstimator,
+                                   RuntimePredictor, flatten_parameters)
+from repro.sched.registry import (POLICIES, PREDICTORS, make_policy,
+                                  make_predictor, register_policy,
+                                  register_predictor)

@@ -1,0 +1,304 @@
+"""Pluggable scheduling policies for the UQ task queue.
+
+One `SchedulingPolicy` object is the queue: the live `Executor`'s worker
+threads and the discrete-event `simulate_policy` loop both push submitted
+requests into it and pop the next request to run — the SAME objects drive
+both, so a policy can be validated deterministically in simulation before
+it schedules real work.
+
+Policies see an optional `WorkerView` at pop time (who is asking: which
+model servers it already has warm, how much of its allocation remains) and
+an optional `RuntimePredictor` for per-task cost estimates.  Cost fallback
+order: predictor estimate -> the request's `time_request` hint (HQ's
+static per-job hint) -> 0.
+
+Implementations:
+  * `FCFSPolicy`      — arrival order (the repo's former hard-coded queue).
+  * `SJFPolicy`       — shortest predicted job first (minimises mean wait;
+                        what `pack_by_cost=True` used to approximate with
+                        the static time request).
+  * `LPTPolicy`       — longest predicted job first (classic 4/3-approx
+                        list scheduling for makespan on parallel workers).
+  * `PackingPolicy`   — LPT order + allocation awareness, generalising
+                        HQ's time-request/time-limit split: a worker near
+                        the end of its bulk allocation is handed the
+                        longest task that still FITS its remaining budget,
+                        so short tasks backfill the allocation tail.
+  * `WorkStealingPolicy` — locality-aware per-worker queues: tasks follow
+                        the worker holding a warm server for their model
+                        (skipping the ~1 s re-init the paper measures);
+                        idle workers steal from the most loaded peer.
+
+Thread-safety: the executor serialises push/pop under its own lock, so
+policies are plain data structures (and stay deterministic in simulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple
+
+from repro.sched.registry import register_policy
+
+if TYPE_CHECKING:                              # hint-only: keeps repro.sched
+    from repro.core.task import EvalRequest    # import-cycle-free
+
+QueueItem = Tuple["EvalRequest", int]          # (request, attempt)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerView:
+    """What a policy may know about the worker asking for work."""
+    wid: int = -1
+    warm_models: frozenset = frozenset()       # models with a live server
+    budget_left: Optional[float] = None        # seconds left in allocation
+
+
+class SchedulingPolicy:
+    """Queue interface shared by the live executor and the simulator."""
+
+    name = "base"
+
+    def __init__(self, predictor=None):
+        self.predictor = predictor
+        self._tick = itertools.count()         # deterministic FIFO tiebreak
+
+    def bind(self, predictor) -> "SchedulingPolicy":
+        """Attach a runtime predictor (no-op if one is already set)."""
+        if predictor is not None and self.predictor is None:
+            self.predictor = predictor
+        return self
+
+    def cost(self, req: EvalRequest) -> float:
+        """Estimated compute seconds: predictor, else time_request, else 0."""
+        if self.predictor is not None:
+            c = self.predictor.predict(req)
+            if c is not None:
+                return float(c)
+        if req.time_request:
+            return float(req.time_request)
+        return 0.0
+
+    # -- queue protocol -------------------------------------------------
+    def push(self, req: EvalRequest, attempt: int) -> None:
+        raise NotImplementedError
+
+    def pop(self, worker: Optional[WorkerView] = None) -> Optional[QueueItem]:
+        raise NotImplementedError
+
+    def pending(self) -> List[QueueItem]:
+        """Snapshot of queued items (checkpointing; no pops)."""
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def remove_worker(self, wid: int) -> None:
+        """A worker left the pool (death, descale): policies holding
+        per-worker state must reflow it so no queued task is stranded."""
+
+
+@register_policy("fcfs")
+class FCFSPolicy(SchedulingPolicy):
+    """First-come-first-served — the baseline every dispatch path used."""
+
+    name = "fcfs"
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._q: Deque[QueueItem] = deque()
+
+    def push(self, req, attempt):
+        self._q.append((req, attempt))
+
+    def pop(self, worker=None):
+        return self._q.popleft() if self._q else None
+
+    def pending(self):
+        return list(self._q)
+
+    def __len__(self):
+        return len(self._q)
+
+
+class _CostOrderedPolicy(SchedulingPolicy):
+    """Heap on (sign * cost, arrival tick): sign=+1 -> SJF, -1 -> LPT.
+
+    Costs are evaluated at push time and lazily RE-evaluated whenever the
+    predictor has absorbed new completions since the heap was last built —
+    so a queue submitted up front (the UQ batch pattern) still benefits
+    from runtime estimates learned online during the run.
+    """
+
+    sign = 1.0
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._heap: List[Tuple[float, int, QueueItem]] = []
+        self._built_version: object = None
+
+    def _predictor_version(self) -> object:
+        """Opaque token that changes when predictions may have changed —
+        `version()` where available (the GP bumps it only on posterior
+        updates, so the O(queue) re-cost doesn't run on every pop),
+        falling back to the observation count."""
+        v = getattr(self.predictor, "version", None)
+        if callable(v):
+            return v()
+        n = getattr(self.predictor, "n_observed", None)
+        return n() if callable(n) else 0
+
+    def _maybe_rebuild(self):
+        if self.predictor is None or not self._heap:
+            return
+        v = self._predictor_version()
+        if v != self._built_version:
+            self._heap = [(self.sign * self.cost(item[0]), tick, item)
+                          for _, tick, item in self._heap]
+            heapq.heapify(self._heap)
+            self._built_version = v
+
+    def push(self, req, attempt):
+        heapq.heappush(self._heap,
+                       (self.sign * self.cost(req), next(self._tick),
+                        (req, attempt)))
+
+    def pop(self, worker=None):
+        self._maybe_rebuild()
+        return heapq.heappop(self._heap)[2] if self._heap else None
+
+    def pending(self):
+        return [item for _, _, item in sorted(self._heap)]
+
+    def __len__(self):
+        return len(self._heap)
+
+
+@register_policy("sjf")
+class SJFPolicy(_CostOrderedPolicy):
+    """Shortest predicted job first."""
+    name = "sjf"
+    sign = 1.0
+
+
+@register_policy("lpt")
+class LPTPolicy(_CostOrderedPolicy):
+    """Longest predicted job first."""
+    name = "lpt"
+    sign = -1.0
+
+
+@register_policy("pack")
+class PackingPolicy(_CostOrderedPolicy):
+    """Cost-aware allocation packing.
+
+    LPT ordering, but a worker with finite `budget_left` gets the longest
+    task that fits its remaining allocation (plus `init_margin` for server
+    startup).  If nothing fits, the shortest task is handed out anyway —
+    progress beats idling, and the time *limit* still bounds the overrun.
+    This generalises HQ's split between the time request (packing hint)
+    and the time limit (kill bound).
+    """
+
+    name = "pack"
+    sign = -1.0
+
+    def __init__(self, predictor=None, init_margin: float = 1.0):
+        super().__init__(predictor)
+        self.init_margin = init_margin
+
+    def pop(self, worker=None):
+        self._maybe_rebuild()
+        if not self._heap:
+            return None
+        if worker is None or worker.budget_left is None:
+            return heapq.heappop(self._heap)[2]
+        budget = worker.budget_left - self.init_margin
+        order = sorted(self._heap)             # cost desc (sign = -1)
+        for entry in order:                    # longest task that fits
+            if -entry[0] <= budget:
+                self._heap.remove(entry)
+                heapq.heapify(self._heap)
+                return entry[2]
+        entry = order[-1]                      # nothing fits: shortest
+        self._heap.remove(entry)
+        heapq.heapify(self._heap)
+        return entry[2]
+
+
+@register_policy("steal")
+class WorkStealingPolicy(SchedulingPolicy):
+    """Locality-aware work stealing.
+
+    Each worker owns a local deque.  A request whose model already has an
+    affinity (a worker that ran it before, hence holds a warm server under
+    persistent-server semantics) is queued locally on that worker; others
+    go to a shared global deque.  A worker pops its own queue first, then
+    takes a global task (preferring one whose model it has warm), then
+    steals from the back of the most loaded peer — the classic stealing
+    end, so locality of the victim's imminent work is preserved.
+    """
+
+    name = "steal"
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._local: Dict[int, Deque[QueueItem]] = {}
+        self._global: Deque[QueueItem] = deque()
+        self._affinity: Dict[str, int] = {}    # model name -> worker id
+
+    def push(self, req, attempt):
+        wid = self._affinity.get(req.model_name)
+        if wid is not None and wid in self._local:
+            self._local[wid].append((req, attempt))
+        else:
+            self._global.append((req, attempt))
+
+    def pop(self, worker=None):
+        if worker is None:                     # anonymous consumer
+            if self._global:
+                return self._global.popleft()
+            for q in self._local.values():
+                if q:
+                    return q.popleft()
+            return None
+        mine = self._local.setdefault(worker.wid, deque())
+        if mine:
+            return mine.popleft()
+        if self._global:                       # prefer a warm-model task
+            for i, (req, attempt) in enumerate(self._global):
+                if req.model_name in worker.warm_models:
+                    del self._global[i]
+                    self._affinity[req.model_name] = worker.wid
+                    return req, attempt
+            req, attempt = self._global.popleft()
+            self._affinity[req.model_name] = worker.wid
+            return req, attempt
+        victim = max((q for w, q in self._local.items() if w != worker.wid),
+                     key=len, default=None)
+        if victim:
+            req, attempt = victim.pop()        # steal from the back
+            self._affinity[req.model_name] = worker.wid
+            return req, attempt
+        return None
+
+    def pending(self):
+        out = list(self._global)
+        for q in self._local.values():
+            out.extend(q)
+        return out
+
+    def __len__(self):
+        return len(self._global) + sum(len(q) for q in self._local.values())
+
+    def remove_worker(self, wid):
+        """Reflow a gone worker's local tasks to the FRONT of the global
+        queue (they arrived earliest) and drop its affinities, so nothing
+        starves waiting for a worker that will never pop again."""
+        q = self._local.pop(wid, None)
+        if q:
+            self._global.extendleft(reversed(q))
+        self._affinity = {m: w for m, w in self._affinity.items()
+                          if w != wid}

@@ -1,0 +1,264 @@
+"""Online runtime predictors for UQ task scheduling.
+
+The paper's central scheduling difficulty is that UQ task runtimes are
+"potentially unpredictable" — GS2 runs vary from minutes to hours with the
+seven physics inputs.  HQ's *time request* is a static per-workload hint;
+these predictors replace it with estimates that improve online as tasks
+complete:
+
+  * `QuantileEstimator` — a running per-model quantile tracker.  Its p50
+    is the cost estimate; its p95 feeds the executor's straggler-mitigation
+    threshold (replacing the ad-hoc scan over completed results).
+  * `GPRuntimePredictor` — a Gaussian process ON THE INPUT PARAMETERS,
+    reusing `repro.uq.gp`.  It learns the runtime surface t(theta) from
+    completed tasks: fit once at `min_fit` observations, then condition
+    incrementally (`gp.condition`, one Cholesky rebuild, no re-training)
+    and re-fit hyperparameters every `refit_every` completions.  Runtimes
+    are modelled in log-space (positive, heavy-tailed).
+
+Both are thread-safe: the live `Executor` feeds completions from worker
+threads while the monitor thread queries quantiles.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.sched.registry import register_predictor
+
+if TYPE_CHECKING:                              # hint-only: keeps repro.sched
+    from repro.core.task import EvalRequest    # import-cycle-free
+
+
+@runtime_checkable
+class RuntimePredictor(Protocol):
+    """What a scheduling policy / executor needs from a predictor."""
+
+    def predict(self, req: EvalRequest) -> Optional[float]:
+        """Expected compute seconds for `req`; None if unknown."""
+        ...
+
+    def observe(self, req: EvalRequest, compute_t: float) -> None:
+        """Feed one completed task's measured compute time."""
+        ...
+
+    def quantile(self, q: float, model_name: Optional[str] = None
+                 ) -> Optional[float]:
+        """Runtime quantile over completions (pooled, or one model's)."""
+        ...
+
+
+def flatten_parameters(parameters: Any) -> Optional[List[float]]:
+    """Best-effort flatten of an UM-Bridge parameter payload ([[...]] lists)
+    into a fixed feature vector; None if it contains non-numeric leaves."""
+    out: List[float] = []
+
+    def walk(v) -> bool:
+        if isinstance(v, (int, float)):
+            out.append(float(v))
+            return True
+        if isinstance(v, (list, tuple)):
+            return all(walk(u) for u in v)
+        try:                                   # numpy / jax scalars & arrays
+            import numpy as _np
+            arr = _np.asarray(v, dtype=float)
+            out.extend(float(x) for x in arr.ravel())
+            return True
+        except Exception:                      # noqa: BLE001
+            return False
+
+    return out if walk(parameters) else None
+
+
+class _RunningQuantiles:
+    """Bounded sorted window of observations with linear-interp quantiles."""
+
+    def __init__(self, window: int):
+        self.window = window
+        self._ordered: List[float] = []        # sorted values
+        self._fifo: List[float] = []           # arrival order (for eviction)
+        self.count = 0
+
+    def add(self, x: float):
+        self.count += 1
+        self._fifo.append(x)
+        bisect.insort(self._ordered, x)
+        if len(self._fifo) > self.window:
+            old = self._fifo.pop(0)
+            del self._ordered[bisect.bisect_left(self._ordered, old)]
+
+    def quantile(self, q: float) -> Optional[float]:
+        s = self._ordered
+        if not s:
+            return None
+        i = min(max(q, 0.0), 1.0) * (len(s) - 1)
+        lo, hi = int(math.floor(i)), int(math.ceil(i))
+        return s[lo] + (s[hi] - s[lo]) * (i - lo)
+
+
+@register_predictor("quantile")
+class QuantileEstimator:
+    """Per-model running quantile estimator.
+
+    `predict` returns the model's p50 (the single best constant guess under
+    absolute loss); `quantile` exposes arbitrary quantiles — the executor's
+    straggler monitor asks for p95.
+    """
+
+    def __init__(self, window: int = 512, predict_quantile: float = 0.5,
+                 min_observed: int = 3):
+        self.window = window
+        self.predict_quantile = predict_quantile
+        self.min_observed = min_observed
+        self._lock = threading.Lock()
+        self._per_model: Dict[str, _RunningQuantiles] = {}
+        self._pooled = _RunningQuantiles(window)
+
+    def observe(self, req: EvalRequest, compute_t: float) -> None:
+        with self._lock:
+            rq = self._per_model.get(req.model_name)
+            if rq is None:
+                rq = self._per_model[req.model_name] = \
+                    _RunningQuantiles(self.window)
+            rq.add(compute_t)
+            self._pooled.add(compute_t)
+
+    def predict(self, req: EvalRequest) -> Optional[float]:
+        with self._lock:
+            rq = self._per_model.get(req.model_name)
+            if rq is None or rq.count < self.min_observed:
+                return None
+            return rq.quantile(self.predict_quantile)
+
+    def quantile(self, q: float, model_name: Optional[str] = None
+                 ) -> Optional[float]:
+        with self._lock:
+            rq = (self._per_model.get(model_name) if model_name
+                  else self._pooled)
+            return rq.quantile(q) if rq else None
+
+    def n_observed(self, model_name: Optional[str] = None) -> int:
+        with self._lock:
+            if model_name is None:
+                return self._pooled.count
+            rq = self._per_model.get(model_name)
+            return rq.count if rq else 0
+
+    def version(self) -> object:
+        """Changes whenever predictions may have changed (every obs)."""
+        return self.n_observed()
+
+
+@register_predictor("gp")
+class GPRuntimePredictor:
+    """GP regression of log-runtime on the task's input parameters.
+
+    This is the predictor the paper's premise calls for: GS2 runtimes vary
+    *with the inputs*, so a surrogate over theta (the same trick the paper
+    plays for the physics QoI with its GP surrogate) recovers per-task cost
+    estimates no static time request can express.
+
+    Falls back to the per-model quantile estimate until `min_fit`
+    observations with a consistent feature dimension have arrived, and for
+    requests whose parameters cannot be flattened.
+    """
+
+    def __init__(self, min_fit: int = 8, refit_every: int = 32,
+                 condition_every: int = 8, max_points: int = 256,
+                 kind: str = "rbf", fit_steps: int = 100, window: int = 512):
+        self.min_fit = min_fit
+        self.refit_every = refit_every
+        # batch size for incremental conditioning: every posterior size is
+        # a fresh XLA compile of gp.predict, so absorbing completions in
+        # batches (not one-by-one) keeps compile churn ~1/condition_every
+        self.condition_every = condition_every
+        self.max_points = max_points
+        self.kind = kind
+        self.fit_steps = fit_steps
+        self._lock = threading.Lock()
+        self._fallback = QuantileEstimator(window=window)
+        self._xs: List[List[float]] = []       # feature rows (fixed dim)
+        self._ys: List[float] = []             # log(compute_t + eps)
+        self._dim: Optional[int] = None
+        self._post = None                      # gp.GPPosterior
+        self._in_post = 0                      # rows of _xs in the posterior
+        self._since_refit = 0
+        self._post_version = 0                 # bumped on posterior installs
+        self.n_fits = 0
+
+    # -- RuntimePredictor -----------------------------------------------
+    def observe(self, req: EvalRequest, compute_t: float) -> None:
+        self._fallback.observe(req, compute_t)
+        feats = flatten_parameters(req.parameters)
+        if feats is None:
+            return
+        from repro.uq import gp
+        import numpy as np
+        fit_data = cond_args = None
+        with self._lock:
+            if self._dim is None:
+                self._dim = len(feats)
+            if len(feats) != self._dim:
+                return                         # heterogeneous payload: skip
+            self._xs.append(feats)
+            self._ys.append(math.log(max(compute_t, 1e-6)))
+            self._since_refit += 1
+            if len(self._xs) < self.min_fit:
+                return
+            if self._post is None or self._since_refit >= self.refit_every:
+                if len(self._xs) > self.max_points:    # keep the most recent
+                    del self._xs[:-self.max_points]
+                    del self._ys[:-self.max_points]
+                fit_data = (np.asarray(self._xs, dtype=float),
+                            np.asarray(self._ys, dtype=float))
+                self._since_refit = 0          # claim the refit
+            elif len(self._xs) - self._in_post >= self.condition_every:
+                cond_args = (self._post, self._xs[self._in_post:],
+                             self._ys[self._in_post:])
+                self._in_post = len(self._xs)
+        # the expensive JAX work runs OUTSIDE the lock so concurrent
+        # predict()/observe() calls are never stalled behind a refit;
+        # a stale-by-one posterior install is harmless (best-effort)
+        if fit_data is not None:
+            new_post = gp.fit(fit_data[0], fit_data[1], kind=self.kind,
+                              steps=self.fit_steps)
+            with self._lock:
+                self._post = new_post
+                self._in_post = len(fit_data[0])
+                self._post_version += 1
+                self.n_fits += 1
+        elif cond_args is not None:
+            new_post = gp.condition(cond_args[0], cond_args[1], cond_args[2])
+            with self._lock:
+                if self._post is cond_args[0]: # drop if a refit won the race
+                    self._post = new_post
+                    self._post_version += 1
+
+    def predict(self, req: EvalRequest) -> Optional[float]:
+        feats = flatten_parameters(req.parameters)
+        with self._lock:
+            post = self._post
+            dim_ok = feats is not None and self._dim == len(feats or [])
+        if post is None or not dim_ok:
+            return self._fallback.predict(req)
+        from repro.uq import gp
+        mean, _ = gp.predict(post, [feats])
+        return float(math.exp(float(mean[0, 0])))
+
+    def version(self) -> object:
+        """Changes only when predictions may have changed: per posterior
+        install once fitted, per observation while on the fallback."""
+        with self._lock:
+            if self._post is None:
+                return ("fallback", self._fallback.n_observed())
+            return ("post", self._post_version)
+
+    def quantile(self, q: float, model_name: Optional[str] = None
+                 ) -> Optional[float]:
+        return self._fallback.quantile(q, model_name)
+
+    def n_observed(self, model_name: Optional[str] = None) -> int:
+        return self._fallback.n_observed(model_name)

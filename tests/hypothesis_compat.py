@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim.
+
+The container does not ship `hypothesis`; an unconditional import made
+four test modules fail COLLECTION, taking all their non-property tests
+down with them.  Importing `given`/`settings`/`st` from here instead
+degrades gracefully: with hypothesis installed the real objects are
+re-exported; without it, property tests become cleanly-skipped zero-arg
+stubs and every other test in the module still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Stands in for `strategies`: any attribute is a factory whose
+        result can itself be composed (st.lists(st.floats(...)))."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: _AnyStrategy()
+
+    st = _AnyStrategy()

@@ -1,0 +1,449 @@
+"""repro.sched tests: registry resolution, policy ordering/invariants,
+predictor convergence, and the deterministic simulator-vs-executor seam."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EvalRequest, Executor, LambdaModel, LoadBalancer,
+                        backends, metrics, simulate_policy)
+from repro.core.simulator import Workload
+from repro.sched import (FCFSPolicy, GPRuntimePredictor, PackingPolicy,
+                         QuantileEstimator, SJFPolicy, WorkStealingPolicy,
+                         WorkerView, make_policy, make_predictor)
+
+
+def _req(cost=None, model="m", params=None, task_id=""):
+    return EvalRequest(model, params if params is not None else [[0.0]],
+                       time_request=cost, task_id=task_id)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def test_registry_resolves_names():
+    for name in ("fcfs", "sjf", "lpt", "pack", "steal"):
+        assert make_policy(name).name == name
+    assert isinstance(make_predictor("quantile"), QuantileEstimator)
+    assert isinstance(make_predictor("gp"), GPRuntimePredictor)
+    assert make_predictor("none") is None and make_predictor(None) is None
+
+
+def test_registry_unknown_raises():
+    with pytest.raises(KeyError):
+        make_policy("nope")
+    with pytest.raises(KeyError):
+        make_predictor("nope")
+
+
+def test_registry_instance_passthrough_binds_predictor():
+    pol = SJFPolicy()
+    pred = QuantileEstimator()
+    assert make_policy(pol, pred) is pol
+    assert pol.predictor is pred
+    other = QuantileEstimator()
+    make_policy(pol, other)                    # existing binding wins
+    assert pol.predictor is pred
+
+
+# --------------------------------------------------------------------------
+# policy ordering
+# --------------------------------------------------------------------------
+def test_fcfs_preserves_arrival_order():
+    p = FCFSPolicy()
+    reqs = [_req(task_id=f"t{i}") for i in range(5)]
+    for r in reqs:
+        p.push(r, 1)
+    assert [p.pop()[0].task_id for _ in range(5)] == [r.task_id for r in reqs]
+
+
+def test_sjf_and_lpt_order_by_cost():
+    for name, expected in (("sjf", [1.0, 3.0, 5.0]), ("lpt", [5.0, 3.0, 1.0])):
+        p = make_policy(name)
+        for c in (5.0, 1.0, 3.0):
+            p.push(_req(cost=c), 1)
+        assert [p.pop()[0].time_request for _ in range(3)] == expected
+
+
+def test_cost_fallback_chain():
+    p = SJFPolicy()
+    assert p.cost(_req(cost=7.0)) == 7.0       # time_request hint
+    assert p.cost(_req()) == 0.0               # nothing known
+    pred = QuantileEstimator(min_observed=1)
+    pred.observe(_req(), 2.0)
+    p2 = SJFPolicy(predictor=pred)
+    assert p2.cost(_req(cost=99.0)) == 2.0     # predictor beats the hint
+
+
+def test_pack_respects_worker_budget():
+    p = PackingPolicy(init_margin=0.0)
+    for c in (50.0, 10.0, 30.0):
+        p.push(_req(cost=c), 1)
+    view = WorkerView(wid=0, budget_left=35.0)
+    assert p.pop(view)[0].time_request == 30.0     # longest that fits
+    assert p.pop(view)[0].time_request == 10.0
+    # nothing fits a tiny budget: hand out the shortest anyway (progress)
+    assert p.pop(WorkerView(wid=0, budget_left=1.0))[0].time_request == 50.0
+    assert len(p) == 0
+
+
+def test_pack_without_budget_is_lpt():
+    p = PackingPolicy()
+    for c in (10.0, 50.0, 30.0):
+        p.push(_req(cost=c), 1)
+    assert [p.pop()[0].time_request for _ in range(3)] == [50.0, 30.0, 10.0]
+
+
+def test_steal_warm_model_preferred_from_global():
+    p = WorkStealingPolicy()
+    p.push(_req(model="b", task_id="b0"), 1)
+    p.push(_req(model="a", task_id="a0"), 1)
+    warm_a = WorkerView(wid=0, warm_models=frozenset({"a"}))
+    # the warm model jumps the FIFO global queue for this worker
+    assert p.pop(warm_a)[0].task_id == "a0"
+    assert p.pop(warm_a)[0].task_id == "b0"
+
+
+def test_steal_locality_and_stealing():
+    p = WorkStealingPolicy()
+    w0 = WorkerView(wid=0)
+    w1 = WorkerView(wid=1)
+    p.push(_req(model="a", task_id="a0"), 1)
+    assert p.pop(w0)[0].task_id == "a0"        # affinity a -> w0
+    p.push(_req(model="a", task_id="a-local"), 1)   # routed to w0's deque
+    assert len(p) == 1
+    # global is empty, so w1 STEALS w0's local task
+    assert p.pop(w1)[0].task_id == "a-local"
+    assert p.pop(w0) is None and p.pop(w1) is None
+    # affinity followed the thief: next "a" task routes to w1's deque
+    p.push(_req(model="a", task_id="a2"), 1)
+    assert p.pop(w1)[0].task_id == "a2"
+
+
+def test_steal_remove_worker_reflows_local_queue():
+    p = WorkStealingPolicy()
+    w0, w1 = WorkerView(wid=0), WorkerView(wid=1)
+    p.push(_req(model="a", task_id="a0"), 1)
+    assert p.pop(w0)[0].task_id == "a0"        # affinity a -> w0
+    p.push(_req(model="a", task_id="a1"), 1)   # lands in w0's deque
+    p.push(_req(model="b", task_id="b0"), 1)   # global
+    p.remove_worker(0)                         # w0 died
+    # a1 reflowed to the FRONT of global (it arrived first), affinity gone
+    assert p.pop(w1)[0].task_id == "a1"
+    p.push(_req(model="a", task_id="a2"), 1)
+    assert "a2" in {p.pending()[i][0].task_id for i in range(len(p))}
+    assert len(p) == 2                         # b0 + a2, nothing stranded
+
+
+def test_cost_policies_reorder_on_new_observations():
+    """A queue pushed up front is re-costed once the predictor learns."""
+    pred = QuantileEstimator(min_observed=1)
+    p = SJFPolicy(predictor=pred)
+    p.push(_req(model="slow", task_id="s"), 1)
+    p.push(_req(model="fast", task_id="f"), 1)
+    # at push time nothing is known -> FIFO would pop "s" first
+    pred.observe(_req(model="slow"), 50.0)
+    pred.observe(_req(model="fast"), 1.0)
+    assert p.pop()[0].task_id == "f"           # learned: fast first
+    assert p.pop()[0].task_id == "s"
+
+
+# --------------------------------------------------------------------------
+# predictors
+# --------------------------------------------------------------------------
+def test_quantile_estimator_convergence():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=1.0, sigma=0.5, size=400)
+    est = QuantileEstimator(window=512)
+    for s in samples:
+        est.observe(_req(model="m"), float(s))
+    p50, p95 = est.predict(_req(model="m")), est.quantile(0.95, "m")
+    assert p50 == pytest.approx(float(np.quantile(samples, 0.5)), rel=0.05)
+    assert p95 == pytest.approx(float(np.quantile(samples, 0.95)), rel=0.05)
+    assert est.quantile(0.95) == pytest.approx(p95)    # pooled == only model
+    assert est.predict(_req(model="unseen")) is None
+
+
+def test_quantile_estimator_per_model():
+    est = QuantileEstimator(min_observed=3)
+    for _ in range(5):
+        est.observe(_req(model="short"), 1.0)
+        est.observe(_req(model="long"), 40.0)
+    assert est.predict(_req(model="short")) == pytest.approx(1.0)
+    assert est.predict(_req(model="long")) == pytest.approx(40.0)
+
+
+def test_gp_predictor_learns_runtime_surface():
+    rng = np.random.default_rng(0)
+
+    def true_t(x):
+        return 0.5 + 2.0 * x[0] ** 2 + 0.5 * x[1]
+
+    gp = GPRuntimePredictor(min_fit=8, refit_every=16, fit_steps=60)
+    for x in rng.uniform(0, 1, size=(40, 2)):
+        gp.observe(_req(params=[list(map(float, x))]), true_t(x))
+    assert gp.n_fits >= 1
+    errs = []
+    for x in rng.uniform(0.1, 0.9, size=(8, 2)):
+        pred = gp.predict(_req(params=[list(map(float, x))]))
+        errs.append(abs(pred - true_t(x)) / true_t(x))
+    assert float(np.mean(errs)) < 0.10         # within 10 % on average
+
+
+def test_gp_predictor_falls_back_gracefully():
+    gp = GPRuntimePredictor(min_fit=8)
+    assert gp.predict(_req()) is None          # nothing observed
+    for _ in range(4):
+        gp.observe(_req(params=[[1.0]]), 3.0)
+    assert gp.predict(_req(params=[[1.0]])) == pytest.approx(3.0)  # quantile
+    assert gp.predict(_req(params="not-numeric")) == pytest.approx(3.0)
+
+
+# --------------------------------------------------------------------------
+# deterministic simulator: the acceptance-criterion assertions
+# --------------------------------------------------------------------------
+def _bimodal_workload(seed=3, n=40):
+    rng = np.random.default_rng(seed)
+    rts = np.array([40.0] * 8 + [2.0] * (n - 8))
+    rng.shuffle(rts)
+    return Workload("bimodal", runtimes=tuple(float(r) for r in rts),
+                    slurm_alloc=120.0, hq_alloc=900.0,
+                    time_request=60.0, time_limit=300.0)
+
+
+def test_sim_pack_beats_fcfs_on_bimodal():
+    w = _bimodal_workload()
+    spec = backends.get("hq")
+    mk = {}
+    for pol in ("fcfs", "pack"):
+        recs = simulate_policy(spec, w, n_workers=4, policy=pol, seed=3,
+                               hints="oracle")
+        assert len(recs) == w.n_tasks
+        mk[pol] = metrics.makespan(recs)
+    assert mk["pack"] < mk["fcfs"], mk
+
+
+def test_sim_repeated_seeded_runs_identical():
+    w = _bimodal_workload()
+    spec = backends.get("hq")
+    for pol in ("fcfs", "sjf", "pack", "steal"):
+        a = simulate_policy(spec, w, n_workers=3, policy=pol, seed=11,
+                            hints="oracle")
+        b = simulate_policy(spec, w, n_workers=3, policy=pol, seed=11,
+                            hints="oracle")
+        assert a == b
+
+
+def test_sim_no_task_lost_or_duplicated():
+    w = _bimodal_workload()
+    for backend in ("hq", "slurm"):
+        for pol in ("fcfs", "sjf", "lpt", "pack", "steal"):
+            recs = simulate_policy(backends.get(backend), w, n_workers=4,
+                                   policy=pol, seed=5, hints="oracle")
+            ids = [r.task_id for r in recs]
+            assert len(ids) == w.n_tasks and len(set(ids)) == w.n_tasks
+
+
+def test_sim_online_predictor_improves_over_fcfs():
+    """pack+quantile: no hints at all, costs learned from completions of a
+    two-model campaign — still beats FCFS makespan on bimodal."""
+    rng = np.random.default_rng(3)
+    n, n_long = 40, 8
+    rts = np.array([40.0] * n_long + [2.0] * (n - n_long))
+    names = np.array(["long"] * n_long + ["short"] * (n - n_long))
+    order = rng.permutation(n)
+    rts, names = rts[order], list(names[order])
+    w = Workload("bimodal2", runtimes=tuple(float(r) for r in rts),
+                 slurm_alloc=120.0, hq_alloc=900.0,
+                 time_request=60.0, time_limit=300.0)
+    spec = backends.get("hq")
+    fcfs = simulate_policy(spec, w, n_workers=4, policy="fcfs", seed=3,
+                           hints=None, model_names=names)
+    pack = simulate_policy(spec, w, n_workers=4, policy="pack",
+                           predictor="quantile", seed=3, hints=None,
+                           model_names=names)
+    assert metrics.makespan(pack) < metrics.makespan(fcfs)
+
+
+def test_sim_and_executor_share_policy_classes():
+    """The acceptance criterion: the SAME policy objects drive both the
+    simulator and the live executor — no forked policy logic."""
+    pol_cls = type(make_policy("pack"))
+    assert pol_cls is PackingPolicy
+    with Executor({"toy": _toy_factory}, n_workers=1, policy="pack") as ex:
+        assert type(ex.policy) is pol_cls
+    sim_pol = make_policy("pack")
+    recs = simulate_policy(backends.get("hq"), _bimodal_workload(),
+                           n_workers=2, policy=sim_pol, seed=0,
+                           hints="oracle")
+    assert recs and len(sim_pol) == 0          # the instance was the queue
+
+
+# --------------------------------------------------------------------------
+# live executor under non-FCFS policies
+# --------------------------------------------------------------------------
+def _toy_factory():
+    time.sleep(0.01)
+    return LambdaModel("toy", lambda p, c: [[float(p[0][0]) * 2]], 1, 1)
+
+
+@pytest.mark.parametrize("policy", ["sjf", "lpt", "pack", "steal"])
+def test_executor_no_task_lost_under_requeue(policy):
+    """Injected failures + retries under non-FCFS orderings: every task
+    completes exactly once with the right value."""
+    with Executor({"toy": _toy_factory}, n_workers=3, policy=policy,
+                  predictor="quantile", max_attempts=3) as ex:
+        reqs = [EvalRequest("toy", [[i]], time_request=float(i % 5),
+                            config={"fail_attempts": 1} if i % 4 == 0 else {})
+                for i in range(24)]
+        res = ex.run_all(reqs, timeout=60)
+        assert [r.value[0][0] for r in res] == [2.0 * i for i in range(24)]
+        assert all(r.status == "ok" for r in res)
+        assert len({r.task_id for r in res}) == 24
+
+
+def test_executor_worker_death_under_steal_policy():
+    """Crash recovery with per-worker queues: the dead worker's local
+    tasks reflow and every task still completes."""
+    def slow():
+        return LambdaModel("s", lambda p, c: (time.sleep(0.1),
+                                              [[float(p[0][0])]])[1], 1, 1)
+    with Executor({"s": slow}, n_workers=2, policy="steal") as ex:
+        ids = [ex.submit(EvalRequest("s", [[i]])) for i in range(8)]
+        time.sleep(0.05)
+        ex.kill_worker(0)
+        res = [ex.result(t, timeout=30) for t in ids]
+        assert all(r.status == "ok" for r in res)
+        assert ex.n_workers() == 1
+
+
+def test_executor_policy_instance_predictor_wins():
+    """A policy instance arriving with its own predictor: completions
+    feed THAT predictor, not a second one built from the kwarg."""
+    own = QuantileEstimator()
+    pol = SJFPolicy(predictor=own)
+    with Executor({"toy": _toy_factory}, n_workers=2, policy=pol,
+                  predictor="gp") as ex:
+        assert ex.predictor is own
+        ex.run_all([EvalRequest("toy", [[i]]) for i in range(6)])
+        assert own.n_observed("toy") >= 6
+
+
+def test_executor_pack_with_allocation_budget():
+    with Executor({"toy": _toy_factory}, n_workers=2, policy="pack",
+                  allocation_s=120.0) as ex:
+        res = ex.run_all([EvalRequest("toy", [[i]], time_request=5.0)
+                          for i in range(6)])
+        assert all(r.status == "ok" for r in res)
+        assert ex.workers[0].view().budget_left is not None
+
+
+def test_sim_allocation_renewal_reselects_worker():
+    """A short allocation forces renewals; tasks must not be parked on a
+    renewing worker while another is free, and determinism must hold."""
+    w = Workload("renew", runtimes=tuple([30.0] * 8),
+                 slurm_alloc=60.0, hq_alloc=70.0,   # fits ~2 tasks per alloc
+                 time_request=30.0, time_limit=60.0)
+    spec = backends.get("hq")
+    a = simulate_policy(spec, w, n_workers=2, policy="fcfs", seed=5)
+    b = simulate_policy(spec, w, n_workers=2, policy="fcfs", seed=5)
+    assert a == b and len(a) == 8
+    # workers renew in parallel: total makespan far below serial worst case
+    per_worker = sorted(r.worker for r in a)
+    assert len(set(per_worker)) == 2           # both workers kept busy
+
+
+def test_executor_no_duplicate_under_speculation():
+    def var():
+        return LambdaModel(
+            "v", lambda p, c: (time.sleep(p[0][0]), [[p[0][0]]])[1], 1, 1)
+    with Executor({"v": var}, n_workers=3, policy="sjf",
+                  predictor="quantile", straggler_factor=3.0,
+                  straggler_min_completed=5) as ex:
+        reqs = [EvalRequest("v", [[0.02]]) for _ in range(15)]
+        reqs.append(EvalRequest("v", [[0.6]]))
+        res = ex.run_all(reqs, timeout=60)
+        assert all(r.status == "ok" for r in res)
+        assert len({r.task_id for r in res}) == len(reqs)
+
+
+def test_executor_dependencies_respected_under_lpt():
+    order = []
+
+    def dep():
+        return LambdaModel(
+            "d", lambda p, c: (order.append(p[0][0]), [[p[0][0]]])[1], 1, 1)
+    with Executor({"d": dep}, n_workers=2, policy="lpt") as ex:
+        # LPT would run the "biggest" first; dependencies must still gate
+        a = EvalRequest("d", [[1]], time_request=1.0)
+        b = EvalRequest("d", [[2]], time_request=50.0,
+                        depends_on=(a.task_id,))
+        c = EvalRequest("d", [[3]], time_request=99.0,
+                        depends_on=(b.task_id,))
+        for r in (c, b, a):
+            ex.submit(r)
+        ex.result(c.task_id, 10)
+    assert order == [1, 2, 3]
+
+
+def test_executor_snapshot_restore_with_policy():
+    with Executor({"toy": _toy_factory}, n_workers=1, policy="sjf") as ex:
+        ids = [ex.submit(EvalRequest("toy", [[i]], time_request=float(i)))
+               for i in range(8)]
+        ex.result(ids[0], 10)
+        snap = ex.snapshot()
+    ex2 = Executor.restore(snap, {"toy": _toy_factory}, n_workers=2,
+                           policy="sjf")
+    try:
+        res = [ex2.result(t, 30) for t in ids]
+        assert all(r.status == "ok" for r in res)
+    finally:
+        ex2.shutdown()
+
+
+def test_executor_predictor_feedback_loop():
+    with Executor({"toy": _toy_factory}, n_workers=2, policy="sjf",
+                  predictor="quantile") as ex:
+        ex.run_all([EvalRequest("toy", [[i]]) for i in range(10)])
+        assert ex.predictor.n_observed("toy") >= 10
+        assert ex.predictor.predict(EvalRequest("toy", [[0]])) is not None
+
+
+# --------------------------------------------------------------------------
+# server-init accounting (the satellite fix)
+# --------------------------------------------------------------------------
+def test_server_init_not_clobbered_on_reuse():
+    with Executor({"toy": _toy_factory}, n_workers=1) as ex:
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(5)])
+        inits = sorted((r.init_t for r in res), reverse=True)
+        assert inits[0] > 0.0                  # first dispatch paid warmup
+        assert all(i == 0.0 for i in inits[1:])    # reuses report 0
+        server = next(iter(ex.workers[0].servers.values()))
+        assert server.init_t > 0.0             # stored first-init survives
+        m = ex.metrics()
+        assert m["server_inits"] == 1
+        assert m["server_init_total_t"] == pytest.approx(server.init_t)
+
+
+def test_metrics_cumulative_init_fresh_servers():
+    with Executor({"toy": _toy_factory}, n_workers=2,
+                  persistent_servers=False) as ex:
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(8)])
+        m = ex.metrics()
+        assert m["server_inits"] == 8
+        assert m["server_init_total_t"] == pytest.approx(
+            sum(r.init_t for r in res))
+        assert m["results_by_status"] == {"ok": 8}
+
+
+# --------------------------------------------------------------------------
+# balancer facade passthrough
+# --------------------------------------------------------------------------
+def test_balancer_exposes_policy_and_predictor():
+    with LoadBalancer("hq", n_workers=2, policy="pack",
+                      predictor="quantile") as lb:
+        lb.register_model("toy", _toy_factory)
+        assert lb.policy is not None and lb.policy.name == "pack"
+        assert isinstance(lb.predictor, QuantileEstimator)
+        assert lb.evaluate("toy", [[4]])[0][0] == 8.0
+        assert lb.predictor.n_observed("toy") >= 1
