@@ -1,0 +1,129 @@
+"""Benchmark: static worker pools vs autoalloc on bursty arrival traces.
+
+The elasticity claim behind HQ's autoalloc: on campaign-style UQ usage
+(bursts of evaluations separated by think-time gaps), a fixed pool either
+idles nodes through every gap (big pool) or drags the makespan out (small
+pool); an autoallocator that submits bulk allocations when backlog *cost*
+rises and drains them when they idle should spend fewer node-seconds than
+the best fixed pool at a bounded makespan penalty.
+
+Each row is one pool configuration on the same seeded bursty trace,
+averaged over several seeds (everything deterministic per seed):
+
+  * ``static-N`` — one allocation of N workers held for the whole
+    campaign (what `Executor(n_workers=N)` without autoalloc does);
+  * ``autoalloc`` — zero standing capacity; `AutoAllocator` submits
+    4-worker/600 s allocations from backlog cost and drains idle ones.
+
+Headline: autoalloc node-seconds vs the best-makespan static row, and
+the makespan penalty paid for the saving (acceptance: saving > 0 at
+penalty <= 10 %).
+
+CI-feasible: pure-python discrete-event simulation.
+
+    PYTHONPATH=src python benchmarks/elasticity.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.cluster import AutoAllocConfig, bursty_trace, simulate_cluster
+from repro.core import backends
+
+SEEDS = (3, 7, 13)
+STATIC_COUNTS = (2, 4, 8)
+
+
+def make_trace(seed: int, quick: bool = False):
+    if quick:
+        return bursty_trace(n_bursts=2, burst_size=10, gap_s=300.0,
+                            runtime_s=10.0, seed=seed)
+    return bursty_trace(n_bursts=4, burst_size=24, gap_s=600.0,
+                        runtime_s=20.0, seed=seed)
+
+
+def autoalloc_config(quick: bool = False) -> AutoAllocConfig:
+    return AutoAllocConfig(
+        workers_per_alloc=4, walltime_s=300.0 if quick else 600.0,
+        backlog_high_s=40.0, backlog_low_s=10.0,
+        max_pending=2, max_allocations=6, min_allocations=0,
+        idle_drain_s=30.0, hysteresis_s=5.0)
+
+
+def run(seeds: Tuple[int, ...] = SEEDS, quick: bool = False) -> List[Dict]:
+    spec = backends.get("hq")
+    rows: List[Dict] = []
+    configs = [(f"static-{n}", {"n_workers": n}) for n in STATIC_COUNTS]
+    configs.append(("autoalloc", {"autoalloc": autoalloc_config(quick)}))
+    for label, kw in configs:
+        mk, ns, util, nalloc = [], [], [], []
+        for seed in seeds:
+            trace = make_trace(seed, quick)
+            # a static pool must request walltime covering the campaign
+            if "n_workers" in kw:
+                span = max(tt.t for tt in trace)
+                kw = dict(kw, walltime_s=span + 1200.0)
+            res = simulate_cluster(spec, trace, seed=seed, **kw)
+            s = res.summary()
+            assert s["n_ok"] == s["n_tasks"], (label, seed, s)
+            mk.append(s["makespan"])
+            ns.append(s["node_seconds"])
+            util.append(s["utilization"])
+            nalloc.append(s["n_allocations"])
+        rows.append({
+            "pool": label,
+            "makespan_mean": float(np.mean(mk)),
+            "node_seconds_mean": float(np.mean(ns)),
+            "utilization_mean": float(np.mean(util)),
+            "allocations_mean": float(np.mean(nalloc)),
+        })
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    """Headline: autoalloc vs the best-makespan static pool."""
+    static = [r for r in rows if r["pool"].startswith("static")]
+    auto = next(r for r in rows if r["pool"] == "autoalloc")
+    best = min(static, key=lambda r: r["makespan_mean"])
+    return {
+        "best_static": best["pool"],
+        "node_seconds_saving":
+            1.0 - auto["node_seconds_mean"] / best["node_seconds_mean"],
+        "makespan_penalty":
+            auto["makespan_mean"] / best["makespan_mean"] - 1.0,
+        "utilization_gain":
+            auto["utilization_mean"] - best["utilization_mean"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny trace + one seed (CI smoke)")
+    args = ap.parse_args()
+    seeds = SEEDS[:1] if args.quick else SEEDS
+    rows = run(seeds=seeds, quick=args.quick)
+    cols = ("pool", "makespan_mean", "node_seconds_mean",
+            "utilization_mean", "allocations_mean")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "|".join("---" for _ in cols) + "|")
+    for r in rows:
+        print("| " + " | ".join(
+            f"{r[c]:.2f}" if isinstance(r[c], float) else str(r[c])
+            for c in cols) + " |")
+    print()
+    d = derived(rows)
+    print(f"best static pool     : {d['best_static']}")
+    print(f"node-seconds saving  : {d['node_seconds_saving']:+.1%}")
+    print(f"makespan penalty     : {d['makespan_penalty']:+.1%}")
+    print(f"utilization gain     : {d['utilization_gain']:+.2f}")
+    ok = d["node_seconds_saving"] > 0.0 and d["makespan_penalty"] <= 0.10
+    print(f"elasticity claim (saving>0 at <=10% penalty): "
+          f"{'PASS' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

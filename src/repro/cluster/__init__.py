@@ -1,0 +1,17 @@
+"""Allocation lifecycle, auto-allocation, and multi-node brokered dispatch.
+
+The elasticity layer the paper's HyperQueue setup relies on: bulk
+allocations with a full lifecycle (`Allocation`), an autoallocator that
+tracks backlog *cost* in seconds of queued work (`AutoAllocator`), and a
+cluster-level broker holding one scheduling policy per allocation
+(`Broker`, registered as ``policy="broker"``).  The same objects drive
+the deterministic `simulate_cluster` discrete-event mode and the live
+`Executor` (``Executor(..., autoalloc=AutoAllocConfig(...))``).
+"""
+from repro.cluster.allocation import (DRAINING, EXPIRED, PENDING, QUEUED,
+                                      RUNNING, Allocation)
+from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
+from repro.cluster.broker import Broker
+from repro.cluster.sim import ClusterResult, simulate_cluster
+from repro.cluster.traces import (TraceTask, bimodal_trace, bursty_trace,
+                                  trace_span)

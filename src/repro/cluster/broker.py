@@ -1,0 +1,287 @@
+"""Multi-node brokered dispatch: one scheduling policy per allocation.
+
+The ROADMAP's multi-node follow-on to `repro.sched`: where
+`WorkStealingPolicy` keeps an affinity map from model to *worker*, the
+`Broker` generalises it to the cluster level — one `SchedulingPolicy`
+instance per allocation (node group), a routing policy between them, and
+migration of queued tasks off draining allocations.
+
+The Broker IS a `SchedulingPolicy` (push/pop/pending/len), so it slots
+into every dispatch layer unchanged: the live `Executor` uses it as its
+queue (workers carry their `alloc_id` in the `WorkerView`), and the
+deterministic `simulate_cluster` loop drives the same object on a
+virtual clock.  Registered as ``policy="broker"`` for name-based config.
+
+Routing, in order:
+  1. model affinity — an open allocation that has run this model before
+     holds warm servers for it (the cluster-level warm-start the paper's
+     ~1 s per-job server init makes worth chasing);
+  2. least-loaded — the open allocation with the fewest queued tasks
+     per worker (O(1) by design: routing runs under the dispatch lock);
+  3. nowhere — no open allocation: the task parks in an unrouted buffer
+     that flushes the moment capacity appears (autoalloc bootstrap).
+
+Pops serve the worker's own allocation queue first; an idle worker then
+*steals* from the most backlogged other allocation, moving the model's
+affinity with the stolen task (exactly the single-node stealing rule,
+lifted one level).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.cluster.allocation import RUNNING, Allocation
+from repro.sched.policy import QueueItem, SchedulingPolicy, WorkerView
+from repro.sched.registry import make_policy, register_policy
+
+
+@register_policy("broker")
+class Broker(SchedulingPolicy):
+    """Cluster-level queue: allocations, per-allocation policies, routing.
+
+    `policy` names the per-allocation scheduling policy (any registered
+    name, or a zero-arg factory returning a fresh instance); every
+    sub-policy shares the broker's predictor, so online cost estimates
+    sharpen cluster-wide.
+    """
+
+    name = "broker"
+
+    def __init__(self, predictor=None, policy: Any = "fcfs"):
+        super().__init__(predictor)
+        if isinstance(policy, SchedulingPolicy):
+            raise TypeError(
+                "Broker needs one policy PER allocation: pass a registered "
+                "name or a zero-arg factory, not a shared instance")
+        if policy == "broker":
+            raise TypeError(
+                "a Broker's per-allocation policy cannot itself be a "
+                "broker — tasks would route into the inner broker's "
+                "unrouted buffer and never pop")
+        self._sub_spec = policy
+        self._allocs: Dict[int, Allocation] = {}
+        self._queues: Dict[int, SchedulingPolicy] = {}
+        self._affinity: Dict[str, int] = {}        # model -> alloc_id
+        self._unrouted: Deque[QueueItem] = deque()
+        self._ids = itertools.count()
+        # incremental backlog-cost ledger: every enqueue/dequeue adjusts
+        # the running total in O(1); a full rebuild happens only when the
+        # predictor's version token changes
+        self.default_cost = 1.0
+        self._item_costs: Dict[Tuple[str, int], Tuple[float, int]] = {}
+        self._cost_total = 0.0
+        self._cost_version: object = None
+
+    # -- construction helpers -------------------------------------------
+    def _make_queue(self) -> SchedulingPolicy:
+        if callable(self._sub_spec) and not isinstance(self._sub_spec, str):
+            q = self._sub_spec().bind(self.predictor)
+        else:
+            q = make_policy(self._sub_spec, self.predictor)
+        if isinstance(q, Broker):              # factories can sneak one in
+            raise TypeError("per-allocation policy cannot be a broker")
+        return q
+
+    def bind(self, predictor) -> "Broker":
+        super().bind(predictor)
+        for q in self._queues.values():
+            q.bind(self.predictor)
+        return self
+
+    # -- allocation management ------------------------------------------
+    def next_alloc_id(self) -> int:
+        return next(self._ids)
+
+    def allocations(self) -> List[Allocation]:
+        return sorted(self._allocs.values(), key=lambda a: a.alloc_id)
+
+    def allocation(self, alloc_id: int) -> Optional[Allocation]:
+        return self._allocs.get(alloc_id)
+
+    def add_allocation(self, alloc: Allocation) -> Allocation:
+        self._allocs[alloc.alloc_id] = alloc
+        self._queues[alloc.alloc_id] = self._make_queue()
+        self._flush_unrouted()
+        return alloc
+
+    def drain_allocation(self, alloc_id: int, now: float) -> None:
+        """No new tasks; migrate its queued work to the rest of the
+        cluster (running tasks are the owner's problem — the executor /
+        simulator terminates the group once they finish)."""
+        alloc = self._allocs.get(alloc_id)
+        if alloc is None:
+            return
+        alloc.drain(now)
+        self._migrate_off(alloc_id)
+
+    def remove_allocation(self, alloc_id: int, now: float) -> None:
+        """Allocation expired or was torn down: migrate queued tasks and
+        forget it (warm-server affinities die with the node group)."""
+        alloc = self._allocs.get(alloc_id)
+        if alloc is None:
+            return
+        alloc.terminate(now)
+        self._migrate_off(alloc_id)
+        self._queues.pop(alloc_id, None)
+        del self._allocs[alloc_id]             # caller keeps it for records
+
+    def _migrate_off(self, alloc_id: int) -> None:
+        q = self._queues.get(alloc_id)
+        self._affinity = {m: a for m, a in self._affinity.items()
+                          if a != alloc_id}
+        if q is None:
+            return
+        items = []
+        item = q.pop()
+        while item is not None:
+            items.append(item)
+            item = q.pop()
+        for req, attempt in items:
+            self._note_dequeue(req, attempt)   # re-enters via _route_push
+            self._route_push(req, attempt)
+
+    # -- routing ---------------------------------------------------------
+    def _open_ids(self) -> List[int]:
+        return [a.alloc_id for a in self.allocations() if a.open]
+
+    def _load(self, alloc_id: int) -> float:
+        """Queued tasks per worker — O(1), deliberately NOT cost-based:
+        routing and stealing run on every push / idle-worker poll under
+        the dispatch lock, where an O(pending) predictor sweep would
+        stall dispatch (backlog_cost caches for the same reason)."""
+        q = self._queues.get(alloc_id)
+        if q is None:
+            return 0.0
+        return len(q) / max(self._allocs[alloc_id].n_workers, 1)
+
+    def _route(self, req) -> Optional[int]:
+        open_ids = self._open_ids()
+        if not open_ids:
+            return None
+        aff = self._affinity.get(req.model_name)
+        if aff is not None and aff in open_ids:
+            return aff
+        chosen = min(open_ids, key=lambda i: (self._load(i), i))
+        self._affinity.setdefault(req.model_name, chosen)
+        return chosen
+
+    def _route_push(self, req, attempt: int) -> None:
+        self._note_enqueue(req, attempt)
+        target = self._route(req)
+        if target is None:
+            self._unrouted.append((req, attempt))
+        else:
+            self._queues[target].push(req, attempt)
+
+    def _flush_unrouted(self) -> None:
+        if not self._unrouted or not self._open_ids():
+            return
+        items, self._unrouted = list(self._unrouted), deque()
+        for req, attempt in items:
+            self._note_dequeue(req, attempt)   # re-enters via _route_push
+            self._route_push(req, attempt)
+
+    # -- SchedulingPolicy protocol ---------------------------------------
+    def push(self, req, attempt: int) -> None:
+        self._route_push(req, attempt)
+
+    def pop(self, worker: Optional[WorkerView] = None
+            ) -> Optional[QueueItem]:
+        item = self._pop_inner(worker)
+        if item is not None:
+            self._note_dequeue(item[0], item[1])
+        return item
+
+    def _pop_inner(self, worker: Optional[WorkerView]
+                   ) -> Optional[QueueItem]:
+        self._flush_unrouted()
+        if worker is None or worker.alloc_id is None:
+            # anonymous consumer (snapshot draining, legacy pools): any task
+            for i in self._open_ids():
+                item = self._queues[i].pop()
+                if item is not None:
+                    return item
+            return self._unrouted.popleft() if self._unrouted else None
+        alloc = self._allocs.get(worker.alloc_id)
+        if alloc is None or alloc.state != RUNNING:
+            return None                        # draining/expired: no new work
+        item = self._queues[worker.alloc_id].pop(worker)
+        if item is not None:
+            return item
+        return self._steal(worker)
+
+    def _steal(self, worker: WorkerView) -> Optional[QueueItem]:
+        victims = [i for i in self._open_ids() if i != worker.alloc_id
+                   and len(self._queues[i])]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda i: (self._load(i), -i))
+        item = self._queues[victim].pop()
+        if item is None:
+            return None
+        req, attempt = item
+        self._affinity[req.model_name] = worker.alloc_id
+        return req, attempt
+
+    def pending(self) -> List[QueueItem]:
+        out: List[QueueItem] = list(self._unrouted)
+        for i in sorted(self._queues):
+            out.extend(self._queues[i].pending())
+        return out
+
+    def __len__(self) -> int:
+        return len(self._unrouted) + sum(len(q)
+                                         for q in self._queues.values())
+
+    def remove_worker(self, wid: int) -> None:
+        for q in self._queues.values():
+            q.remove_worker(wid)
+
+    # -- autoalloc instrumentation ---------------------------------------
+    def queued_on(self, alloc_id: int) -> int:
+        q = self._queues.get(alloc_id)
+        return len(q) if q is not None else 0
+
+    def backlog_cost(self, default: float = 1.0) -> float:
+        """Total queued seconds of work cluster-wide (predictor estimate,
+        else time_request hint, else `default` per task) — the signal the
+        `AutoAllocator` scales on.
+
+        Maintained incrementally (the executor's monitor asks every 50 ms
+        under the dispatch lock, where an O(queue) sweep of GP predictions
+        would stall dispatch); the only O(queue) rebuild is when the
+        predictor version token changes — the GP bumps it on posterior
+        installs, not on every observation."""
+        self.default_cost = default
+        v = self._predictor_version()
+        if v != self._cost_version:
+            self._cost_version = v
+            self._item_costs = {}
+            self._cost_total = 0.0
+            for req, attempt in self.pending():
+                self._note_enqueue(req, attempt)
+        return max(self._cost_total, 0.0)
+
+    def _note_enqueue(self, req, attempt: int) -> None:
+        key = (req.task_id, attempt)
+        entry = self._item_costs.get(key)
+        if entry is not None:                  # duplicate copy: reuse cost
+            c, n = entry
+            self._item_costs[key] = (c, n + 1)
+        else:
+            c = self.cost(req) or self.default_cost
+            self._item_costs[key] = (c, 1)
+        self._cost_total += c
+
+    def _note_dequeue(self, req, attempt: int) -> None:
+        entry = self._item_costs.get((req.task_id, attempt))
+        if entry is None:
+            return
+        c, n = entry
+        self._cost_total -= c
+        if n <= 1:
+            del self._item_costs[(req.task_id, attempt)]
+        else:
+            self._item_costs[(req.task_id, attempt)] = (c, n - 1)

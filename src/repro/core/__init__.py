@@ -6,7 +6,9 @@ tolerance, straggler mitigation and elastic scaling."""
 from repro.core import backends, metrics
 from repro.core.balancer import LoadBalancer
 from repro.core.executor import Executor
-from repro.core.metrics import TaskRecord, summarize, slr, makespan
+from repro.core.metrics import (AllocationRecord, TaskRecord,
+                                allocation_utilization, makespan,
+                                node_seconds, slr, summarize)
 from repro.core.simulator import (Workload, simulate, simulate_policy,
                                   eval_records)
 from repro.core.task import EvalRequest, EvalResult, LambdaModel, Model

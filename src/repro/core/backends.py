@@ -24,7 +24,24 @@ Mechanism summary (paper §II-C):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
+
+# Schedulers bucket long requests, so queue wait saturates at the
+# partition's max walltime (4 h on the testbed's shared queue): a 600 h
+# bulk allocation does not wait 150x longer than a 4 h job.
+QUEUE_WAIT_SATURATION_S = 14400.0
+
+
+def lognormal(rng, median: float, sigma: float) -> float:
+    """One seeded lognormal draw parameterised by its median (the form
+    every overhead model in this repo uses); degenerate cases collapse
+    to the median so sigma=0 specs stay exactly deterministic."""
+    if median <= 0:
+        return 0.0
+    if sigma <= 0:
+        return median
+    return float(median * math.exp(sigma * rng.standard_normal()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +68,30 @@ class BackendSpec:
     # --- policy ---------------------------------------------------------
     uses_time_request: bool = False  # HQ packs by expected runtime
     preliminary_jobs: int = 0        # readiness-check jobs before first eval
+
+    def queue_wait_median(self, alloc_request_s: float,
+                          n_cpus: int = 1) -> float:
+        """Median queue wait for one allocation request: floor + coef *
+        min(walltime, saturation)^power * cpus^cpu_power.  The single
+        overhead model shared by `simulate`, `simulate_policy`, and the
+        `repro.cluster` allocation lifecycle."""
+        return (self.queue_wait_floor
+                + self.queue_wait_coef
+                * min(alloc_request_s, QUEUE_WAIT_SATURATION_S)
+                ** self.queue_wait_power
+                * n_cpus ** self.queue_wait_cpu_power)
+
+    def env_reinit_median(self, slurm_alloc_s: float) -> float:
+        """Median environment re-initialisation cost for a per-job
+        allocation of the given length."""
+        return (self.env_reinit_floor
+                + self.env_reinit_frac_of_alloc * slurm_alloc_s)
+
+    def draw_queue_wait(self, rng, alloc_request_s: float,
+                        n_cpus: int = 1) -> float:
+        """One seeded queue-wait sample for an allocation request."""
+        return lognormal(rng, self.queue_wait_median(alloc_request_s, n_cpus),
+                         self.queue_wait_sigma)
 
     def describe(self) -> str:
         alloc = "bulk" if self.bulk_allocation else "per-job"

@@ -43,11 +43,15 @@ class LoadBalancer:
 
     def __init__(self, backend: str = "hq", n_workers: int = 2, *,
                  policy: Any = "fcfs", predictor: Any = None,
+                 cluster: Any = None, autoalloc: Any = None,
                  **executor_kw):
         """`policy` / `predictor` select the `repro.sched` scheduling
         policy and online runtime predictor by registered name (or
-        instance) and are passed straight through to the `Executor` —
-        e.g. ``LoadBalancer("hq", policy="pack", predictor="gp")``."""
+        instance); `cluster` / `autoalloc` hand over a `repro.cluster`
+        `Broker` / `AutoAllocConfig` for allocation-backed elasticity.
+        All four pass straight through to the `Executor` — e.g.
+        ``LoadBalancer("hq", policy="pack", predictor="gp",
+        autoalloc=AutoAllocConfig(walltime_s=600))``."""
         assert backend in ("hq", "slurm"), backend
         self.backend = backend
         self._factories: Dict[str, Callable[[], Model]] = {}
@@ -56,6 +60,10 @@ class LoadBalancer:
         self._executor_kw.setdefault("persistent_servers", backend == "hq")
         self._executor_kw["policy"] = policy
         self._executor_kw["predictor"] = predictor
+        if cluster is not None:
+            self._executor_kw["cluster"] = cluster
+        if autoalloc is not None:
+            self._executor_kw["autoalloc"] = autoalloc
         self._n_workers = n_workers
         self.executor: Optional[Executor] = None
 

@@ -21,9 +21,12 @@ Production features beyond the paper's prototype:
   * straggler mitigation: speculative re-issue of tasks running longer
     than `straggler_factor` x the p95 of completed runtimes, first result
     wins (generalising HQ's time-request/time-limit split);
-  * elastic scaling: `scale_to(n)` while running; an optional autoscaler
-    grows the pool when backlog exceeds `autoscale_backlog` (HQ's
-    worker-per-alloc on-demand allocation);
+  * elastic scaling: `scale_to(n)` while running; worker groups are
+    allocation-backed (`repro.cluster`) — an optional `AutoAllocator`
+    submits and drains whole allocations from backlog *cost* (seconds of
+    queued work), reproducing HQ's autoalloc; the legacy count-based
+    `autoscale_backlog` kwarg is an alias routed through the same
+    allocator;
   * dependent tasks: requests with `depends_on` wait until their
     predecessors complete (MCMC-style chains, adaptive GP loops);
   * time limits: tasks observed to exceed `time_limit` are marked
@@ -57,25 +60,26 @@ class _Server:
 
 
 class Worker(threading.Thread):
-    def __init__(self, pool: "Executor", wid: int):
+    def __init__(self, pool: "Executor", wid: int, alloc=None):
         super().__init__(name=f"worker-{wid}", daemon=True)
         self.pool = pool
         self.wid = wid
+        self.alloc = alloc                     # owning repro.cluster Allocation
         self.alive = True
         self.servers: Dict[str, _Server] = {}
         self.crashed = False
 
     def view(self) -> WorkerView:
-        """What the scheduling policy may know about this worker.  The
-        allocation budget is populated only when the executor was given
-        an `allocation_s` (emulating HQ's bulk-allocation length) —
-        without one, budget-aware packing degrades to plain LPT order."""
-        budget = None
-        if self.pool.allocation_s is not None:
-            budget = max(self.pool.allocation_s
-                         - (time.monotonic() - self.pool._t0), 0.0)
+        """What the scheduling policy may know about this worker.  Every
+        worker belongs to an `Allocation`; the budget is that group's
+        remaining walltime (None when unbounded — budget-aware packing
+        then degrades to plain LPT order, as documented)."""
+        budget = alloc_id = None
+        if self.alloc is not None:
+            budget = self.alloc.budget_left(time.monotonic())
+            alloc_id = self.alloc.alloc_id
         return WorkerView(wid=self.wid, warm_models=frozenset(self.servers),
-                          budget_left=budget)
+                          budget_left=budget, alloc_id=alloc_id)
 
     def _get_server(self, name: str) -> Tuple[_Server, float]:
         """Return (server, init seconds paid by THIS dispatch: 0 on reuse)."""
@@ -102,7 +106,7 @@ class Worker(threading.Thread):
             req, attempt = item
             if self.pool._already_done(req.task_id):
                 continue
-            self.pool._mark_running(req, self)
+            self.pool._mark_running(req, self, attempt)
             dispatch_t = time.monotonic()
             try:
                 if self.crashed:
@@ -145,11 +149,17 @@ class Executor:
     flag maps onto `policy="sjf"` (ordering by the static time request,
     exactly the old inline-heap behaviour).
 
-    `allocation_s` emulates HQ's bulk-allocation length for the live
-    pool: workers then advertise their remaining budget to the policy,
-    which is what makes `policy="pack"` allocation-aware here (without
-    it, pack orders like LPT — budget fitting only applies where a
-    budget exists, as in `simulate_policy`).
+    Worker groups are allocation-backed (`repro.cluster.Allocation`):
+    `allocation_s` bounds the initial group's walltime (workers then
+    advertise their remaining budget to the policy, which is what makes
+    `policy="pack"` allocation-aware here).  `cluster=` accepts a
+    configured `Broker` (one policy per allocation, cluster-level
+    routing) and `autoalloc=` an `AutoAllocConfig` / `AutoAllocator`
+    that submits and drains allocations from backlog cost — the same
+    objects `simulate_cluster` drives on a virtual clock.  The legacy
+    count-based `autoscale_backlog` is an alias routed through that
+    allocator (one single-worker allocation per step, and idle groups
+    can now be drained — the old loop could only grow).
     """
 
     def __init__(self, model_factories: Dict[str, Callable[[], Model]],
@@ -163,7 +173,12 @@ class Executor:
                  autoscale_backlog: Optional[int] = None,
                  max_workers: int = 32,
                  allocation_s: Optional[float] = None,
+                 cluster: Any = None,
+                 autoalloc: Any = None,
                  name: str = "hq"):
+        from repro.cluster.allocation import Allocation
+        from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
+        from repro.cluster.broker import Broker
         self.model_factories = dict(model_factories)
         self.persistent_servers = persistent_servers
         self.max_attempts = max_attempts
@@ -177,27 +192,83 @@ class Executor:
 
         if pack_by_cost and policy in (None, "fcfs"):
             policy = "sjf"
-        self.policy: SchedulingPolicy = make_policy(policy,
-                                                    make_predictor(predictor))
+        pred = make_predictor(predictor)
+        wants_cluster = (cluster is not None or autoalloc is not None
+                         or autoscale_backlog is not None)
+        if cluster is not None:
+            if not isinstance(cluster, Broker):
+                raise TypeError(f"cluster= expects a Broker, got {cluster!r}")
+            self.policy: SchedulingPolicy = cluster.bind(pred)
+        elif wants_cluster and not isinstance(policy, Broker):
+            if isinstance(policy, SchedulingPolicy):
+                raise TypeError(
+                    "autoalloc/autoscale need one policy instance PER "
+                    "allocation: pass the policy by registered name (or a "
+                    "Broker via cluster=), not a shared instance")
+            # policy="broker" here means "use brokered dispatch", not
+            # "nest a broker per allocation" — map it to the default
+            self.policy = Broker(predictor=pred,
+                                 policy="fcfs" if policy == "broker"
+                                 else policy)
+        else:
+            self.policy = make_policy(policy, pred)
         # completions feed the predictor the policy actually READS — if a
         # policy instance arrived with its own, that binding wins and any
         # `predictor=` kwarg is superseded (no split-brain feedback loop)
         self.predictor = self.policy.predictor
         self.allocation_s = allocation_s
+        self._cluster_mode = isinstance(self.policy, Broker)
+
+        if autoalloc is not None:
+            self.autoalloc = (autoalloc if isinstance(autoalloc,
+                                                      AutoAllocator)
+                              else AutoAllocator(
+                                  autoalloc if isinstance(autoalloc,
+                                                          AutoAllocConfig)
+                                  else AutoAllocConfig(**autoalloc)))
+        elif autoscale_backlog is not None:
+            # deprecated count-based path, now an alias reproducing the
+            # old ABSOLUTE "backlog() > N tasks" trigger exactly:
+            # count_tasks ignores cost hints, per_worker=False skips the
+            # capacity division the legacy loop never did; served by
+            # single-worker allocations up to max_workers
+            self.autoalloc = AutoAllocator(AutoAllocConfig(
+                workers_per_alloc=1, walltime_s=None,
+                backlog_high_s=float(autoscale_backlog),
+                backlog_low_s=1.0, per_worker=False, count_tasks=True,
+                max_pending=max_workers,
+                max_allocations=max(max_workers - n_workers + 1, 1),
+                min_allocations=1, idle_drain_s=30.0, hysteresis_s=0.05))
+        else:
+            self.autoalloc = None
+        if self.autoalloc is not None:
+            # the allocator must see the pool cap or it churns grants the
+            # monitor can only cancel (zero-headroom submit loops)
+            self.autoalloc.worker_cap = max_workers
 
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self._waiting: List[Tuple[EvalRequest, int]] = []   # unmet deps
-        self._running: Dict[str, Tuple[EvalRequest, Worker, float]] = {}
+        # task_id -> (request, worker, start time, attempt number)
+        self._running: Dict[str, Tuple[EvalRequest, Worker, float, int]] = {}
         self._results: Dict[str, EvalResult] = {}
         self._requests: Dict[str, EvalRequest] = {}
         self._init_total_t = 0.0               # cumulative server-init cost
         self._init_count = 0
         self._t0 = time.monotonic()
         self.workers: List[Worker] = []
+        self._retired_allocs: List[Any] = []   # for allocation_records()
         self._stopping = False
+        # the initial worker group: one allocation, granted immediately
+        # (thread startup is the live analogue of the queue wait)
+        alloc_id = (self.policy.next_alloc_id() if self._cluster_mode else 0)
+        self._initial_alloc = Allocation(alloc_id, n_workers, allocation_s)
+        self._initial_alloc.submit(self._t0, 0.0)
+        self._initial_alloc.tick(self._t0)
+        if self._cluster_mode:
+            self.policy.add_allocation(self._initial_alloc)
         for i in range(n_workers):
-            self._add_worker()
+            self._add_worker(self._initial_alloc)
         self._monitor = threading.Thread(target=self._monitor_loop,
                                          daemon=True)
         self._monitor.start()
@@ -225,9 +296,10 @@ class Executor:
             return task_id in self._results and \
                 self._results[task_id].status == "ok"
 
-    def _mark_running(self, req: EvalRequest, worker: Worker):
+    def _mark_running(self, req: EvalRequest, worker: Worker, attempt: int):
         with self._lock:
-            self._running[req.task_id] = (req, worker, time.monotonic())
+            self._running[req.task_id] = (req, worker, time.monotonic(),
+                                          attempt)
 
     def _note_server_init(self, init_t: float):
         with self._lock:
@@ -242,9 +314,21 @@ class Executor:
             except Exception:  # noqa: BLE001 — prediction is best-effort
                 pass
         with self._cv:
-            self._running.pop(req.task_id, None)
+            entry = self._running.pop(req.task_id, None)
+            # busy billing happens HERE, under the lock, keyed on still
+            # being in _running: a task whose allocation expired was
+            # already billed (partial, up to the kill) and removed by
+            # _retire_allocation, so no double count is possible
+            if entry is not None:
+                w = entry[1]
+                if w.alloc is not None and w.alloc.state != "expired":
+                    w.alloc.note_busy(res.cpu_time)
             prev = self._results.get(req.task_id)
-            if prev is None or prev.status != "ok":    # first success wins
+            # first success wins; "failed" is TERMINAL (recorded only once
+            # every attempt is spent — e.g. an allocation-expiry kill at
+            # max_attempts, after which the orphaned thread may still
+            # finish; matching simulate_cluster, its late result is void)
+            if prev is None or prev.status not in ("ok", "failed"):
                 self._results[req.task_id] = res
             self._release_dependents()
             self._cv.notify_all()
@@ -255,7 +339,10 @@ class Executor:
             self._running.pop(req.task_id, None)
             if self._already_done(req.task_id):
                 return
-            if attempt < self.max_attempts:
+            # attempts are bounded by BOTH the executor-wide limit and the
+            # request's own max_attempts (which simulate_cluster honours —
+            # live and sim must agree on when a task is spent)
+            if attempt < min(self.max_attempts, req.max_attempts):
                 self._cv.notify_all()
                 self._push(req, attempt + 1)
             else:
@@ -282,11 +369,11 @@ class Executor:
             if worker in self.workers:
                 self.workers.remove(worker)
             self.policy.remove_worker(worker.wid)
-            dead = [tid for tid, (_, w, _) in self._running.items()
+            dead = [tid for tid, (_, w, _, _) in self._running.items()
                     if w is worker]
             for tid in dead:
-                req, _, _ = self._running.pop(tid)
-                self._push(req, 1)
+                req, _, _, attempt = self._running.pop(tid)
+                self._push(req, attempt)       # the crash was not its fault
             self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -335,22 +422,47 @@ class Executor:
     # ------------------------------------------------------------------
     # elasticity / fault injection / introspection
     # ------------------------------------------------------------------
-    def _add_worker(self):
+    def _add_worker(self, alloc=None):
         wid = getattr(self, "_wid_counter", 0)
         self._wid_counter = wid + 1
-        w = Worker(self, wid)
+        w = Worker(self, wid, alloc=alloc if alloc is not None
+                   else self._initial_alloc)
         self.workers.append(w)
         w.start()
 
     def scale_to(self, n: int):
+        """Resize the pool by hand (autoalloc-managed groups are the
+        allocator's business — scale those via its config).  New workers
+        join the oldest OPEN allocation; if every group has been drained
+        away (autoalloc with min_allocations=0), a fresh unbounded one is
+        brought up — workers must never be pinned to a retired group the
+        broker no longer routes to."""
+        from repro.cluster.allocation import Allocation
         with self._lock:
             n = min(n, self.max_workers)
+            target = self._initial_alloc
+            if self._cluster_mode:
+                open_allocs = [a for a in self.policy.allocations()
+                               if a.state == "running"]
+                if open_allocs:
+                    target = open_allocs[0]
+                elif len(self.workers) < n:    # all groups gone: new one
+                    now = time.monotonic()
+                    target = Allocation(self.policy.next_alloc_id(), 0,
+                                        None)
+                    target.submit(now, 0.0)
+                    target.tick(now)
+                    self.policy.add_allocation(target)
+            now = time.monotonic()
             while len(self.workers) < n:
-                self._add_worker()
+                self._add_worker(target)
+                target.resize(target.n_workers + 1, now)
             while len(self.workers) > n:
                 w = self.workers.pop()
                 w.alive = False
                 self.policy.remove_worker(w.wid)
+                if w.alloc is not None:        # time-weighted billing
+                    w.alloc.resize(w.alloc.n_workers - 1, now)
 
     def kill_worker(self, idx: int = 0):
         """Fault injection: hard-kill one worker (tests, chaos drills)."""
@@ -365,14 +477,68 @@ class Executor:
     def n_workers(self) -> int:
         return len([w for w in self.workers if w.alive])
 
+    def _cluster_step(self):
+        """Allocation lifecycle + autoalloc decisions (monitor thread).
+        The SAME `Broker`/`AutoAllocator` objects `simulate_cluster`
+        steps on a virtual clock run here against `time.monotonic()`."""
+        from repro.cluster.allocation import DRAINING, QUEUED, RUNNING
+        now = time.monotonic()
+        with self._cv:
+            broker = self.policy
+            if self.autoalloc is not None:
+                busy: Dict[int, int] = {a.alloc_id: 0
+                                        for a in broker.allocations()}
+                for _req, w, _t, _a in self._running.values():
+                    if w.alloc is not None:
+                        busy[w.alloc.alloc_id] = \
+                            busy.get(w.alloc.alloc_id, 0) + 1
+                self.autoalloc.step(now, broker, busy)
+            for alloc in list(broker.allocations()):
+                prev = alloc.state
+                state = alloc.tick(now)
+                if prev == QUEUED and state == RUNNING:
+                    # the documented pool cap binds autoalloc too: grant
+                    # only the headroom, cancel a grant that gets none
+                    headroom = max(self.max_workers - len(self.workers), 0)
+                    if headroom < alloc.n_workers:
+                        alloc.resize(headroom, now)
+                    if alloc.n_workers == 0:
+                        self._retire_allocation(alloc, now)
+                        continue
+                    for _ in range(alloc.n_workers):
+                        self._add_worker(alloc)
+                elif prev in (RUNNING, DRAINING) and state == "expired":
+                    self._retire_allocation(alloc, now)
+                elif state == DRAINING and not any(
+                        w.alloc is alloc
+                        for _r, w, _t, _a in self._running.values()):
+                    alloc.terminate(now)       # drained dry: stop billing
+                    self._retire_allocation(alloc, now)
+            self._cv.notify_all()
+
+    def _retire_allocation(self, alloc, now: float):
+        """Kill an allocation's worker group; its running tasks count a
+        failed attempt exactly as `simulate_cluster`'s walltime kill does
+        (requeue with attempt+1, 'failed' past max_attempts — `_fail`
+        implements precisely that), and the broker migrates its queue."""
+        for w in [w for w in self.workers if w.alloc is alloc]:
+            w.alive = False
+            self.workers.remove(w)
+            self.policy.remove_worker(w.wid)
+            for tid in [tid for tid, (_, rw, _, _) in self._running.items()
+                        if rw is w]:
+                req, _, t_start, attempt = self._running[tid]
+                alloc.note_busy(now - t_start)     # partial work burned
+                self._fail(req, attempt, "allocation expired", w)
+        self.policy.remove_allocation(alloc.alloc_id, now)
+        self._retired_allocs.append(alloc)
+
     def _monitor_loop(self):
         while not self._stopping:
             time.sleep(0.05)
-            # autoscaling
-            if self.autoscale_backlog is not None:
-                if self.backlog() > self.autoscale_backlog and \
-                        len(self.workers) < self.max_workers:
-                    self.scale_to(len(self.workers) + 1)
+            # allocation-backed elasticity (cluster mode)
+            if self._cluster_mode:
+                self._cluster_step()
             # straggler re-issue (speculative execution): the p95 comes
             # from the online predictor when one is configured, else from
             # a scan over completed results
@@ -388,7 +554,7 @@ class Executor:
                             p95 = done[int(0.95 * (len(done) - 1))]
                         cutoff = self.straggler_factor * max(p95, 1e-3)
                         now = time.monotonic()
-                        for tid, (req, w, t_start) in list(
+                        for tid, (req, w, t_start, _) in list(
                                 self._running.items()):
                             if now - t_start > cutoff and \
                                     not req.config.get("_speculated"):
@@ -403,7 +569,7 @@ class Executor:
         with self._lock:
             pending = [req for req, _ in self.policy.pending()]
             pending += [req for req, _ in self._waiting]
-            pending += [req for req, _, _ in self._running.values()]
+            pending += [req for req, _, _, _ in self._running.values()]
             return {
                 "completed": {tid: {"value": r.value, "status": r.status}
                               for tid, r in self._results.items()},
@@ -414,6 +580,9 @@ class Executor:
                     "task_id": r.task_id,
                     "time_request": r.time_request,
                     "time_limit": r.time_limit,
+                    "n_cpus": r.n_cpus,
+                    "max_attempts": r.max_attempts,
+                    "deadline": r.deadline,
                     "depends_on": list(r.depends_on),
                 } for r in pending],
             }
@@ -449,7 +618,26 @@ class Executor:
                 "waiting_on_deps": len(self._waiting),
                 "workers_alive": self.n_workers(),
                 "results_by_status": by_status,
+                "allocations_open": (len([a for a in
+                                          self.policy.allocations()
+                                          if a.open])
+                                     if self._cluster_mode else 1),
+                "allocations_total": (len(self.policy.allocations())
+                                      + len(self._retired_allocs)
+                                      if self._cluster_mode else 1),
             }
+
+    def allocation_records(self) -> List[Any]:
+        """`AllocationRecord`s for every allocation this executor owned
+        (retired ones first) — feeds `metrics.node_seconds` /
+        `metrics.allocation_utilization` exactly like `simulate_cluster`."""
+        now = time.monotonic()
+        with self._lock:
+            live = (self.policy.allocations() if self._cluster_mode
+                    else [self._initial_alloc])
+            out = [a.record() for a in self._retired_allocs]
+            out += [a.record(now) for a in live]   # provisional billing
+            return sorted(out, key=lambda r: r.alloc_id)
 
     def records(self) -> List[TaskRecord]:
         with self._lock:
@@ -464,9 +652,14 @@ class Executor:
 
     def shutdown(self):
         self._stopping = True
+        now = time.monotonic()
         with self._cv:
             for w in self.workers:
                 w.alive = False
+            allocs = (self.policy.allocations() if self._cluster_mode
+                      else [self._initial_alloc])
+            for a in allocs:
+                a.terminate(now)               # close the billing window
             self._cv.notify_all()
         for w in self.workers:
             w.join(timeout=1.0)

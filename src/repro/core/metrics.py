@@ -46,6 +46,56 @@ class TaskRecord:
         return max((self.end_t - self.submit_t) - self.cpu_time, 0.0)
 
 
+@dataclasses.dataclass
+class AllocationRecord:
+    """One bulk allocation's lifetime (the `repro.cluster` analogue of
+    `TaskRecord`).
+
+    start_t/end_t are NaN while the allocation never reached that point
+    (e.g. cancelled while still queued); `node_seconds`/`utilization`
+    treat those as zero node-seconds held.
+    """
+    alloc_id: int
+    n_workers: int                   # group size at record time
+    submit_t: float
+    start_t: float                   # nodes granted (NaN if never)
+    end_t: float                     # nodes released (NaN if still held)
+    state: str = "expired"           # final lifecycle state
+    queue_wait: float = 0.0
+    busy_t: float = 0.0              # summed worker-busy seconds
+    # time-weighted billed node-seconds (resize-aware); negative means
+    # "not provided, derive from n_workers x held_s"
+    node_s: float = -1.0
+
+    @property
+    def held_s(self) -> float:
+        """Wall seconds the node group was actually held."""
+        if math.isnan(self.start_t) or math.isnan(self.end_t):
+            return 0.0
+        return max(self.end_t - self.start_t, 0.0)
+
+    @property
+    def node_seconds(self) -> float:
+        if self.node_s >= 0.0:
+            return self.node_s
+        return self.n_workers * self.held_s
+
+
+def node_seconds(allocs: Sequence[AllocationRecord]) -> float:
+    """Total node-seconds billed across allocations: what an elastic
+    policy is trying to minimise at bounded makespan cost."""
+    return sum(a.node_seconds for a in allocs)
+
+
+def allocation_utilization(allocs: Sequence[AllocationRecord]) -> float:
+    """Busy fraction of billed node-seconds, in [0, 1]; 0 if nothing was
+    ever held (so idle static pools read as the waste they are)."""
+    total = node_seconds(allocs)
+    if total <= 0:
+        return 0.0
+    return min(sum(a.busy_t for a in allocs) / total, 1.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class BenchmarkSummary:
     name: str

@@ -22,12 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.backends import BackendSpec
+from repro.core.backends import BackendSpec, lognormal as _lognormal
 from repro.core.metrics import TaskRecord
 from repro.core.task import EvalRequest
 from repro.sched import make_policy, make_predictor
@@ -53,14 +52,6 @@ class Workload:
 PRELIM_COMPUTE = 0.05                # readiness-probe compute seconds
 
 
-def _lognormal(rng: np.random.Generator, median: float, sigma: float) -> float:
-    if median <= 0:
-        return 0.0
-    if sigma <= 0:
-        return median
-    return float(median * math.exp(sigma * rng.standard_normal()))
-
-
 def simulate(spec: BackendSpec, workload: Workload, queue_depth: int,
              seed: int = 0, node_cores: int = 128,
              include_preliminary: bool = True) -> List[TaskRecord]:
@@ -72,16 +63,8 @@ def simulate(spec: BackendSpec, workload: Workload, queue_depth: int,
                      else workload.slurm_alloc)
     alloc_request = (workload.hq_alloc if spec.bulk_allocation
                      else workload.slurm_alloc)
-    # queue wait grows superlinearly with requested walltime and with core
-    # count, but saturates at the partition's max (4 h on the testbed's
-    # shared queue): schedulers bucket long requests, so a 600 h HQ bulk
-    # allocation does not wait 150x longer than a 4 h job.
-    wait_median = (spec.queue_wait_floor
-                   + spec.queue_wait_coef
-                   * min(alloc_request, 14400.0) ** spec.queue_wait_power
-                   * workload.n_cpus ** spec.queue_wait_cpu_power)
-    env_median = (spec.env_reinit_floor
-                  + spec.env_reinit_frac_of_alloc * workload.slurm_alloc)
+    wait_median = spec.queue_wait_median(alloc_request, workload.n_cpus)
+    env_median = spec.env_reinit_median(workload.slurm_alloc)
 
     # ---- bulk allocation (HQ): one queue wait up front -----------------
     if spec.bulk_allocation:
@@ -186,12 +169,8 @@ def simulate_policy(spec: BackendSpec, workload: Workload,
                      else workload.slurm_alloc)
     alloc_request = (workload.hq_alloc if spec.bulk_allocation
                      else workload.slurm_alloc)
-    wait_median = (spec.queue_wait_floor
-                   + spec.queue_wait_coef
-                   * min(alloc_request, 14400.0) ** spec.queue_wait_power
-                   * workload.n_cpus ** spec.queue_wait_cpu_power)
-    env_median = (spec.env_reinit_floor
-                  + spec.env_reinit_frac_of_alloc * workload.slurm_alloc)
+    wait_median = spec.queue_wait_median(alloc_request, workload.n_cpus)
+    env_median = spec.env_reinit_median(workload.slurm_alloc)
 
     runtimes = {}
     for i, r in enumerate(workload.runtimes):

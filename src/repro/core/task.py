@@ -97,6 +97,9 @@ class EvalRequest:
     max_attempts: int = 3
     # dependency edges (MCMC-style chains): ids that must finish first
     depends_on: Sequence[str] = ()
+    # absolute completion deadline on the scheduler's clock (drives the
+    # "edf" policy; None = no SLO, sorts after every deadlined task)
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         if not self.task_id:

@@ -6,8 +6,8 @@ layers that need an answer — the live `Executor`, the UM-Bridge
 Pick by name (`policy="pack", predictor="gp"`) or pass configured
 instances; register new ones with `@register_policy` / `@register_predictor`.
 """
-from repro.sched.policy import (FCFSPolicy, LPTPolicy, PackingPolicy,
-                                SchedulingPolicy, SJFPolicy,
+from repro.sched.policy import (EDFPolicy, FCFSPolicy, LPTPolicy,
+                                PackingPolicy, SchedulingPolicy, SJFPolicy,
                                 WorkStealingPolicy, WorkerView)
 from repro.sched.predictor import (GPRuntimePredictor, QuantileEstimator,
                                    RuntimePredictor, flatten_parameters)

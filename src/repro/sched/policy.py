@@ -54,6 +54,7 @@ class WorkerView:
     wid: int = -1
     warm_models: frozenset = frozenset()       # models with a live server
     budget_left: Optional[float] = None        # seconds left in allocation
+    alloc_id: Optional[int] = None             # owning allocation (cluster)
 
 
 class SchedulingPolicy:
@@ -80,6 +81,18 @@ class SchedulingPolicy:
         if req.time_request:
             return float(req.time_request)
         return 0.0
+
+    def _predictor_version(self) -> object:
+        """Opaque token that changes when predictions may have changed —
+        `version()` where available (the GP bumps it only on posterior
+        updates, so O(queue) re-costing doesn't run on every pop),
+        falling back to the observation count.  Shared by the cost-
+        ordered heaps and the broker's backlog-cost cache."""
+        v = getattr(self.predictor, "version", None)
+        if callable(v):
+            return v()
+        n = getattr(self.predictor, "n_observed", None)
+        return n() if callable(n) else 0
 
     # -- queue protocol -------------------------------------------------
     def push(self, req: EvalRequest, attempt: int) -> None:
@@ -138,17 +151,6 @@ class _CostOrderedPolicy(SchedulingPolicy):
         super().__init__(predictor)
         self._heap: List[Tuple[float, int, QueueItem]] = []
         self._built_version: object = None
-
-    def _predictor_version(self) -> object:
-        """Opaque token that changes when predictions may have changed —
-        `version()` where available (the GP bumps it only on posterior
-        updates, so the O(queue) re-cost doesn't run on every pop),
-        falling back to the observation count."""
-        v = getattr(self.predictor, "version", None)
-        if callable(v):
-            return v()
-        n = getattr(self.predictor, "n_observed", None)
-        return n() if callable(n) else 0
 
     def _maybe_rebuild(self):
         if self.predictor is None or not self._heap:
@@ -226,6 +228,34 @@ class PackingPolicy(_CostOrderedPolicy):
         self._heap.remove(entry)
         heapq.heapify(self._heap)
         return entry[2]
+
+
+@register_policy("edf")
+class EDFPolicy(SchedulingPolicy):
+    """Earliest-deadline-first: SLO-aware ordering once requests carry a
+    `deadline` (absolute seconds on the scheduler's clock).  Deadline-less
+    requests sort after every deadlined one, FIFO among themselves —
+    best-effort work never starves an SLO."""
+
+    name = "edf"
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._heap: List[Tuple[float, int, QueueItem]] = []
+
+    def push(self, req, attempt):
+        key = req.deadline if getattr(req, "deadline", None) is not None \
+            else float("inf")
+        heapq.heappush(self._heap, (key, next(self._tick), (req, attempt)))
+
+    def pop(self, worker=None):
+        return heapq.heappop(self._heap)[2] if self._heap else None
+
+    def pending(self):
+        return [item for _, _, item in sorted(self._heap)]
+
+    def __len__(self):
+        return len(self._heap)
 
 
 @register_policy("steal")

@@ -2,10 +2,10 @@
 
 Mirrors the `BackendSpec` idiom in `repro.core.backends` (the `BACKENDS`
 dict + `get`): call sites name a policy ("fcfs", "sjf", "lpt", "pack",
-"steal") or predictor ("quantile", "gp", "none") by string, or pass a
-configured instance straight through.  Downstream work (multi-node
-brokers, autoscaler policies, surrogate-offload routing) plugs in with
-`@register_policy("my-policy")` — no core-module edits.
+"steal", "edf", or the cluster-level "broker") or predictor ("quantile",
+"gp", "none") by string, or pass a configured instance straight through.
+Downstream work (surrogate-offload routing, SLO-aware admission) plugs
+in with `@register_policy("my-policy")` — no core-module edits.
 """
 from __future__ import annotations
 

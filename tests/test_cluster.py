@@ -1,0 +1,706 @@
+"""repro.cluster tests: allocation lifecycle, broker routing/migration,
+autoalloc hysteresis, simulate_cluster determinism + elasticity, the
+live-executor seam, and the satellite fixes (snapshot round-trip, EDF)."""
+import time
+
+import pytest
+
+from repro.cluster import (AutoAllocConfig, AutoAllocator, Allocation,
+                           Broker, bursty_trace, bimodal_trace,
+                           simulate_cluster)
+from repro.core import (EvalRequest, Executor, LambdaModel, backends,
+                        metrics)
+from repro.sched import EDFPolicy, make_policy
+
+
+def _req(cost=None, model="m", task_id="", deadline=None):
+    return EvalRequest(model, [[0.0]], time_request=cost, task_id=task_id,
+                       deadline=deadline)
+
+
+# --------------------------------------------------------------------------
+# allocation lifecycle
+# --------------------------------------------------------------------------
+def test_allocation_lifecycle_states():
+    a = Allocation(0, n_workers=2, walltime_s=100.0)
+    assert a.state == "pending" and a.budget_left(0.0) == 100.0
+    a.submit(10.0, queue_wait=5.0)
+    assert a.state == "queued" and a.grant_t == 15.0 and a.expiry_t == 115.0
+    assert a.tick(12.0) == "queued"            # still in the SLURM queue
+    assert a.tick(15.0) == "running" and a.ready_t == 15.0
+    assert a.budget_left(65.0) == pytest.approx(50.0)
+    a.drain(70.0)
+    assert a.state == "draining" and not a.open
+    assert a.tick(115.0) == "expired"          # walltime still enforced
+    assert a.end_t == 115.0
+    assert a.node_seconds() == pytest.approx(2 * 100.0)
+
+
+def test_allocation_drain_while_queued_cancels():
+    a = Allocation(1, 4, 300.0).submit(0.0, queue_wait=60.0)
+    a.drain(10.0)                              # cancelled before grant
+    assert a.state == "expired" and a.node_seconds() == 0.0
+
+
+def test_allocation_terminate_early_stops_billing():
+    a = Allocation(2, 2, 1000.0).submit(0.0, 0.0)
+    a.tick(0.0)
+    a.note_busy(30.0)
+    a.terminate(50.0)                          # drained dry at t=50
+    assert a.node_seconds() == pytest.approx(100.0)
+    rec = a.record()
+    assert rec.busy_t == pytest.approx(30.0) and rec.state == "expired"
+
+
+def test_allocation_unbounded_budget_is_none():
+    a = Allocation(3, 1, None).submit(0.0, 0.0)
+    a.tick(0.0)
+    assert a.budget_left(1e6) is None          # pack degrades to LPT
+
+
+# --------------------------------------------------------------------------
+# broker: routing, migration, stealing
+# --------------------------------------------------------------------------
+def _running_alloc(broker, n_workers=1, walltime=1000.0, t=0.0):
+    a = Allocation(broker.next_alloc_id(), n_workers, walltime)
+    a.submit(t, 0.0)
+    a.tick(t)
+    broker.add_allocation(a)
+    return a
+
+
+def test_broker_registered_and_rejects_shared_instance():
+    assert type(make_policy("broker")) is Broker
+    with pytest.raises(TypeError):
+        Broker(policy=make_policy("sjf"))
+    with pytest.raises(TypeError):
+        Broker(policy="broker")                # no brokers-in-brokers
+    with pytest.raises(TypeError):
+        b = Broker(policy=Broker)              # factory sneaking one in
+        _running_alloc(b)
+
+
+def test_broker_backlog_cost_tracks_composition_changes():
+    """Pop a cheap task, push an expensive one: the total must move even
+    though the queue length is unchanged (regression: a (len, version)
+    cache key missed exactly this)."""
+    from repro.sched import WorkerView
+    b = Broker()
+    a = _running_alloc(b)
+    b.push(_req(cost=1.0, task_id="cheap"), 1)
+    assert b.backlog_cost() == pytest.approx(1.0)
+    assert b.pop(WorkerView(wid=0, alloc_id=a.alloc_id))[0].task_id \
+        == "cheap"
+    b.push(_req(cost=500.0, task_id="dear"), 1)
+    assert b.backlog_cost() == pytest.approx(500.0)
+    # cost survives routing moves: drain to a second allocation
+    a2 = _running_alloc(b)
+    b.drain_allocation(a.alloc_id, now=1.0)
+    assert b.queued_on(a2.alloc_id) == 1
+    assert b.backlog_cost() == pytest.approx(500.0)
+    assert b.pop(WorkerView(wid=1, alloc_id=a2.alloc_id)) is not None
+    assert b.backlog_cost() == pytest.approx(0.0)
+
+
+def test_executor_broker_policy_with_autoalloc_serves():
+    """policy='broker' + autoalloc must not nest brokers (regression:
+    tasks once parked in an inner unrouted buffer forever)."""
+    cfg = AutoAllocConfig(workers_per_alloc=1, walltime_s=None,
+                          backlog_high_s=3.0, max_allocations=2,
+                          min_allocations=1, idle_drain_s=30.0,
+                          hysteresis_s=0.05)
+    with Executor({"toy": _toy_factory}, n_workers=1, policy="broker",
+                  autoalloc=cfg) as ex:
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(6)], 30)
+        assert [r.value[0][0] for r in res] == [2.0 * i for i in range(6)]
+
+
+def test_sim_cluster_honors_allocator_via_autoalloc_kwarg():
+    """An AutoAllocator instance passed as autoalloc= must be used, not
+    silently replaced with a default config."""
+    spec = backends.get("hq")
+    allocator = AutoAllocator(_elastic_cfg(workers_per_alloc=3),
+                              spec=spec, seed=2)
+    trace = bursty_trace(n_bursts=1, burst_size=6, runtime_s=5.0, seed=2)
+    res = simulate_cluster(spec, trace, autoalloc=allocator, seed=2)
+    assert all(r.status == "ok" for r in res.records)
+    assert all(a.n_workers == 3 for a in res.allocations)
+    with pytest.raises(TypeError):
+        simulate_cluster(spec, trace, autoalloc=42, seed=2)
+
+
+def test_broker_unrouted_buffer_flushes_on_capacity():
+    b = Broker()
+    b.push(_req(task_id="t0"), 1)              # no allocation yet
+    assert len(b) == 1 and b.backlog_cost(default=2.0) == 2.0
+    a = _running_alloc(b)
+    assert b.queued_on(a.alloc_id) == 1        # flushed on add
+    from repro.sched import WorkerView
+    item = b.pop(WorkerView(wid=0, alloc_id=a.alloc_id))
+    assert item[0].task_id == "t0"
+
+
+def test_broker_affinity_and_least_loaded_routing():
+    b = Broker()
+    a0 = _running_alloc(b)
+    a1 = _running_alloc(b)
+    b.push(_req(cost=10.0, model="gs2", task_id="g0"), 1)
+    first = a0.alloc_id if b.queued_on(a0.alloc_id) else a1.alloc_id
+    b.push(_req(cost=10.0, model="gs2", task_id="g1"), 1)
+    assert b.queued_on(first) == 2             # affinity: same model sticks
+    b.push(_req(cost=1.0, model="eig", task_id="e0"), 1)
+    other = a1.alloc_id if first == a0.alloc_id else a0.alloc_id
+    assert b.queued_on(other) == 1             # new model -> least loaded
+
+
+def test_broker_drain_migrates_queue():
+    b = Broker()
+    a0 = _running_alloc(b)
+    a1 = _running_alloc(b)
+    for i in range(3):
+        b.push(_req(model="m", task_id=f"t{i}"), 1)
+    src = a0 if b.queued_on(a0.alloc_id) else a1
+    dst = a1 if src is a0 else a0
+    assert b.queued_on(src.alloc_id) == 3
+    b.drain_allocation(src.alloc_id, now=10.0)
+    assert src.state == "draining"
+    assert b.queued_on(src.alloc_id) == 0      # migrated, nothing stranded
+    assert b.queued_on(dst.alloc_id) == 3
+    assert len(b) == 3
+
+
+def test_broker_remove_last_allocation_parks_tasks_unrouted():
+    b = Broker()
+    a0 = _running_alloc(b)
+    b.push(_req(task_id="t0"), 1)
+    b.remove_allocation(a0.alloc_id, now=5.0)
+    assert b.allocation(a0.alloc_id) is None
+    assert len(b) == 1                         # parked, not lost
+    a1 = _running_alloc(b)
+    assert b.queued_on(a1.alloc_id) == 1
+
+
+def test_broker_cluster_level_stealing_moves_affinity():
+    from repro.sched import WorkerView
+    b = Broker()
+    a0 = _running_alloc(b)
+    a1 = _running_alloc(b)
+    b.push(_req(cost=5.0, model="gs2", task_id="g0"), 1)
+    loaded = a0 if b.queued_on(a0.alloc_id) else a1
+    idle = a1 if loaded is a0 else a0
+    # a worker of the idle allocation steals from the loaded one
+    item = b.pop(WorkerView(wid=9, alloc_id=idle.alloc_id))
+    assert item[0].task_id == "g0"
+    b.push(_req(cost=5.0, model="gs2", task_id="g1"), 1)
+    assert b.queued_on(idle.alloc_id) == 1     # affinity followed the thief
+
+    # draining allocations are handed nothing
+    b.drain_allocation(idle.alloc_id, now=1.0)
+    assert b.pop(WorkerView(wid=9, alloc_id=idle.alloc_id)) is None
+
+
+# --------------------------------------------------------------------------
+# autoallocator decisions
+# --------------------------------------------------------------------------
+def _cfg(**kw):
+    base = dict(workers_per_alloc=1, walltime_s=100.0, backlog_high_s=30.0,
+                backlog_low_s=5.0, max_pending=2, max_allocations=4,
+                min_allocations=0, idle_drain_s=10.0, hysteresis_s=5.0)
+    base.update(kw)
+    return AutoAllocConfig(**base)
+
+
+def test_autoalloc_bootstraps_cold_cluster():
+    b = Broker()
+    aa = AutoAllocator(_cfg())
+    b.push(_req(cost=1.0), 1)                  # tiny backlog, below watermark
+    actions = aa.step(0.0, b, {})
+    assert [a for a, _ in actions] == ["submit"]
+
+
+def test_autoalloc_grows_on_backlog_cost_not_count():
+    b = Broker()
+    aa = AutoAllocator(_cfg())
+    _running_alloc(b)
+    # ONE task of 500 s is over the watermark even though the count is 1
+    b.push(_req(cost=500.0), 1)
+    assert [a for a, _ in aa.step(0.0, b, {0: 1})] == ["submit"]
+    # many tiny tasks under the watermark trigger nothing
+    b2 = Broker()
+    aa2 = AutoAllocator(_cfg())
+    _running_alloc(b2)
+    for i in range(20):
+        b2.push(_req(cost=1.0, task_id=f"s{i}"), 1)
+    assert aa2.step(0.0, b2, {0: 1}) == []
+
+
+def test_autoalloc_max_pending_cap():
+    b = Broker()
+    aa = AutoAllocator(_cfg(max_pending=1, hysteresis_s=0.0))
+    # a pending (queued, not yet granted) allocation counts against the cap
+    queued = Allocation(b.next_alloc_id(), 1, 100.0).submit(0.0, 50.0)
+    b.add_allocation(queued)
+    b.push(_req(cost=500.0), 1)
+    assert aa.step(1.0, b, {}) == []           # capped
+    queued.tick(60.0)                          # granted now
+    assert [a for a, _ in aa.step(60.0, b, {queued.alloc_id: 1})] \
+        == ["submit"]
+
+
+def test_autoalloc_drains_idle_allocation():
+    b = Broker()
+    aa = AutoAllocator(_cfg(idle_drain_s=10.0, hysteresis_s=0.0))
+    a0 = _running_alloc(b)
+    aa.step(0.0, b, {a0.alloc_id: 0})          # idle starts being tracked
+    assert a0.state == "running"
+    aa.step(9.0, b, {a0.alloc_id: 0})          # not idle long enough
+    assert a0.state == "running"
+    aa.step(10.0, b, {a0.alloc_id: 0})
+    assert a0.state == "draining"
+    assert aa.decisions[-1]["action"] == "drain"
+
+
+def test_autoalloc_busy_resets_idle_clock():
+    b = Broker()
+    aa = AutoAllocator(_cfg(idle_drain_s=10.0, hysteresis_s=0.0))
+    a0 = _running_alloc(b)
+    aa.step(0.0, b, {a0.alloc_id: 0})
+    aa.step(8.0, b, {a0.alloc_id: 1})          # got busy again
+    aa.step(12.0, b, {a0.alloc_id: 0})         # idle clock restarted at 12
+    assert a0.state == "running"
+    aa.step(22.0, b, {a0.alloc_id: 0})
+    assert a0.state == "draining"
+
+
+def test_autoalloc_respects_min_allocations():
+    b = Broker()
+    aa = AutoAllocator(_cfg(min_allocations=1, hysteresis_s=0.0))
+    a0 = _running_alloc(b)
+    for t in (0.0, 20.0, 40.0):
+        aa.step(t, b, {a0.alloc_id: 0})
+    assert a0.state == "running"               # never drained below the floor
+
+
+def test_autoalloc_hysteresis_no_flapping():
+    """Oscillating backlog (over the high watermark one step, empty the
+    next) must not produce one decision per oscillation: the hysteresis
+    window bounds the decision rate."""
+    b = Broker()
+    aa = AutoAllocator(_cfg(hysteresis_s=10.0, max_allocations=64,
+                            max_pending=64, idle_drain_s=2.0))
+    _running_alloc(b)
+    from repro.sched import WorkerView
+    big = 0
+    for step in range(100):                    # 100 s of 1 Hz oscillation
+        t = float(step)
+        if step % 2 == 0:
+            b.push(_req(cost=500.0, task_id=f"osc-{big}"), 1)
+            big += 1
+        else:
+            while True:                        # drain the queue entirely
+                item = b.pop(WorkerView(wid=0, alloc_id=0))
+                if item is None:
+                    break
+        aa.step(t, b, {a.alloc_id: 0 for a in b.allocations()})
+    # without hysteresis this would be ~50 submits; the window caps it
+    assert len(aa.decisions) <= 100 / 10.0 + 1, len(aa.decisions)
+
+
+# --------------------------------------------------------------------------
+# simulate_cluster: determinism, renewal, elasticity
+# --------------------------------------------------------------------------
+def _elastic_cfg(**kw):
+    base = dict(workers_per_alloc=2, walltime_s=300.0, backlog_high_s=30.0,
+                backlog_low_s=5.0, max_pending=2, max_allocations=4,
+                min_allocations=0, idle_drain_s=20.0, hysteresis_s=5.0)
+    base.update(kw)
+    return AutoAllocConfig(**base)
+
+
+def test_sim_cluster_static_deterministic():
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=30, seed=4)
+    a = simulate_cluster(spec, trace, n_workers=3, seed=9)
+    b = simulate_cluster(spec, trace, n_workers=3, seed=9)
+    assert a.records == b.records and a.allocations == b.allocations
+    assert len(a.records) == 30
+    assert all(r.status == "ok" for r in a.records)
+
+
+def test_sim_cluster_renewal_and_drain_deterministic():
+    """Short walltimes force expiry + renewal while the trace continues;
+    idle gaps force drains.  Same seed -> identical records, allocation
+    records, and decision log."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=3, burst_size=10, gap_s=400.0,
+                         runtime_s=15.0, seed=2)
+    kw = dict(autoalloc=_elastic_cfg(), seed=7)
+    a = simulate_cluster(spec, trace, **kw)
+    b = simulate_cluster(spec, trace, **kw)
+    assert a.records == b.records
+    assert a.allocations == b.allocations
+    assert a.decisions == b.decisions
+    assert len(a.allocations) >= 3             # renewed across bursts
+    assert {d["action"] for d in a.decisions} == {"submit", "drain"}
+    ids = [r.task_id for r in a.records]
+    assert len(ids) == len(set(ids)) == len(trace)
+
+
+def test_sim_cluster_walltime_kill_requeues():
+    """A task still running at allocation expiry is killed and restarted
+    on renewed capacity (attempts > 1), not lost."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=4, burst_span_s=1.0,
+                         runtime_s=40.0, jitter=0.0, seed=0)
+    cfg = _elastic_cfg(workers_per_alloc=1, walltime_s=60.0,
+                       idle_drain_s=50.0)
+    res = simulate_cluster(spec, trace, autoalloc=cfg, seed=3,
+                           max_attempts=6)
+    assert all(r.status == "ok" for r in res.records)
+    assert len(res.records) == 4
+    assert max(r.attempts for r in res.records) > 1
+    assert len(res.allocations) > 1            # capacity was renewed
+
+
+def test_sim_cluster_unservable_tasks_get_lost_records():
+    """A static pool whose only allocation expires with work queued must
+    surface the loss as 'lost' records, never shrink the record set."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=6, burst_span_s=1.0,
+                         runtime_s=50.0, jitter=0.0, seed=0)
+    res = simulate_cluster(spec, trace, n_workers=1, walltime_s=60.0,
+                           seed=0)
+    assert len(res.records) == 6               # every task accounted for
+    by_status = {}
+    for r in res.records:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    assert by_status.get("lost", 0) >= 1
+    s = res.summary()
+    assert s["n_tasks"] == 6 and s["n_ok"] < 6  # loss is visible
+
+
+def test_allocation_resize_bills_time_weighted():
+    """scale_to-style resizes must not rewrite already-billed history:
+    1 worker for 100 s then 4 workers for 10 s is 140 node-seconds, not
+    4 x 110."""
+    a = Allocation(0, 1, None).submit(0.0, 0.0)
+    a.tick(0.0)
+    a.resize(4, 100.0)
+    a.terminate(110.0)
+    assert a.node_seconds() == pytest.approx(1 * 100.0 + 4 * 10.0)
+    assert a.record().node_s == pytest.approx(140.0)
+    assert metrics.node_seconds([a.record()]) == pytest.approx(140.0)
+
+
+def test_executor_max_workers_caps_autoalloc():
+    """The documented pool cap binds allocator-granted groups too."""
+    cfg = AutoAllocConfig(workers_per_alloc=8, walltime_s=None,
+                          backlog_high_s=1.0, backlog_low_s=0.5,
+                          max_pending=8, max_allocations=8,
+                          min_allocations=1, idle_drain_s=30.0,
+                          hysteresis_s=0.05)
+    with Executor({"toy": _slow_factory}, n_workers=1, autoalloc=cfg,
+                  max_workers=3) as ex:
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(40)]
+        peak = 0
+        res = []
+        for t in ids:
+            res.append(ex.result(t, 60))
+            peak = max(peak, ex.n_workers())
+        assert all(r.status == "ok" for r in res)
+        assert peak <= 3, peak
+
+
+def test_sim_cluster_elasticity_claim():
+    """The acceptance criterion, at test size: autoalloc spends fewer
+    node-seconds than the best static pool at <= 10 % makespan penalty."""
+    spec = backends.get("hq")
+    statics = {}
+    for n in (2, 4, 8):
+        trace = bursty_trace(n_bursts=3, burst_size=12, gap_s=500.0,
+                             runtime_s=15.0, seed=5)
+        span = max(t.t for t in trace)
+        res = simulate_cluster(spec, trace, n_workers=n,
+                               walltime_s=span + 1200.0, seed=5)
+        assert all(r.status == "ok" for r in res.records)
+        statics[n] = res.summary()
+    trace = bursty_trace(n_bursts=3, burst_size=12, gap_s=500.0,
+                         runtime_s=15.0, seed=5)
+    auto = simulate_cluster(spec, trace, autoalloc=_elastic_cfg(),
+                            seed=5).summary()
+    best = min(statics.values(), key=lambda s: s["makespan"])
+    assert auto["node_seconds"] < best["node_seconds"]
+    assert auto["makespan"] <= 1.10 * best["makespan"]
+
+
+def test_sim_cluster_same_objects_as_executor():
+    """No forked decision logic: explicitly constructed Broker and
+    AutoAllocator instances drive the simulator; the executor accepts
+    the same types (instance-level for the allocator)."""
+    spec = backends.get("hq")
+    broker = Broker(policy="pack")
+    allocator = AutoAllocator(_elastic_cfg(), spec=spec, seed=1)
+    trace = bursty_trace(n_bursts=2, burst_size=8, gap_s=300.0,
+                         runtime_s=10.0, seed=1)
+    res = simulate_cluster(spec, trace, broker=broker, allocator=allocator,
+                           seed=1)
+    assert all(r.status == "ok" for r in res.records)
+    assert res.decisions is not None and len(allocator.decisions) > 0
+    assert len(broker) == 0                    # the instance WAS the queue
+
+    allocator2 = AutoAllocator(_elastic_cfg(min_allocations=1,
+                                            hysteresis_s=0.05,
+                                            backlog_high_s=3.0,
+                                            idle_drain_s=30.0))
+    with Executor({"toy": _toy_factory}, n_workers=1, policy="pack",
+                  autoalloc=allocator2) as ex:
+        assert ex.autoalloc is allocator2      # same object, live clock
+        assert isinstance(ex.policy, Broker)
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(8)])
+        assert all(r.status == "ok" for r in res)
+
+
+# --------------------------------------------------------------------------
+# live executor: allocation-backed elasticity
+# --------------------------------------------------------------------------
+def _toy_factory():
+    time.sleep(0.01)
+    return LambdaModel("toy", lambda p, c: [[float(p[0][0]) * 2]], 1, 1)
+
+
+def _slow_factory():
+    return LambdaModel(
+        "toy", lambda p, c: (time.sleep(0.03), [[float(p[0][0]) * 2]])[1],
+        1, 1)
+
+
+def test_executor_autoalloc_grows_and_drains():
+    cfg = AutoAllocConfig(workers_per_alloc=2, walltime_s=None,
+                          backlog_high_s=3.0, backlog_low_s=1.0,
+                          max_pending=4, max_allocations=4,
+                          min_allocations=1, idle_drain_s=0.2,
+                          hysteresis_s=0.05)
+    with Executor({"toy": _slow_factory}, n_workers=1, autoalloc=cfg) as ex:
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(40)]
+        res = [ex.result(t, 60) for t in ids]
+        assert [r.value[0][0] for r in res] == [2.0 * i for i in range(40)]
+        grew = ex.metrics()["allocations_total"] > 1
+        assert grew                            # backlog cost forced growth
+        # generous deadline: drains need several monitor passes and CI
+        # machines can starve the monitor thread for whole seconds
+        deadline = time.monotonic() + 30.0
+        while ex.n_workers() > 1 and time.monotonic() < deadline:
+            time.sleep(0.05)                   # idle drain shrinks back
+        assert ex.n_workers() == 1
+        assert any(d["action"] == "drain" for d in ex.autoalloc.decisions)
+    recs = ex.allocation_records()
+    assert metrics.node_seconds(recs) > 0
+    assert 0.0 < metrics.allocation_utilization(recs) <= 1.0
+
+
+def test_executor_autoscale_backlog_alias_routes_through_autoalloc():
+    with Executor({"toy": _slow_factory}, n_workers=1, autoscale_backlog=3,
+                  max_workers=4) as ex:
+        assert ex.autoalloc is not None        # alias, not the old loop
+        assert isinstance(ex.policy, Broker)
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(30)]
+        res = [ex.result(t, 30) for t in ids]
+        assert all(r.status == "ok" for r in res)
+        assert ex.n_workers() > 1
+        assert ex.n_workers() <= 4             # max_workers still honoured
+
+
+def test_autoalloc_absolute_backlog_mode():
+    """per_worker=False (the autoscale_backlog alias semantics): the
+    watermark sees TOTAL queued seconds, undivided by capacity."""
+    b = Broker()
+    aa = AutoAllocator(_cfg(backlog_high_s=3.0, per_worker=False))
+    _running_alloc(b, n_workers=4)             # plenty of capacity
+    for i in range(10):
+        b.push(_req(cost=1.0, task_id=f"a{i}"), 1)
+    # 10 total > 3 triggers even though 10/4 = 2.5 per worker would not
+    assert [a for a, _ in aa.step(0.0, b, {0: 4})] == ["submit"]
+
+
+def test_executor_autoscale_alias_grows_wide_pools():
+    """The legacy trigger was an ABSOLUTE count: a 4-worker pool with
+    backlog 10 > 3 must still grow (per-worker division would stall)."""
+    with Executor({"toy": _slow_factory}, n_workers=4, autoscale_backlog=3,
+                  max_workers=6) as ex:
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(60)]
+        res = [ex.result(t, 60) for t in ids]
+        assert all(r.status == "ok" for r in res)
+        assert ex.metrics()["allocations_total"] > 1
+        assert ex.n_workers() <= 6
+
+
+def test_executor_scale_to_after_full_drain_still_serves():
+    """scale_to must never pin workers to a retired allocation: after
+    autoalloc drains every group, manual scale-up brings up a fresh open
+    group whose workers actually receive work."""
+    cfg = AutoAllocConfig(workers_per_alloc=1, walltime_s=None,
+                          backlog_high_s=3.0, backlog_low_s=1.0,
+                          max_allocations=2, min_allocations=0,
+                          idle_drain_s=0.1, hysteresis_s=0.05)
+    with Executor({"toy": _toy_factory}, n_workers=1, autoalloc=cfg) as ex:
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(4)], 30)
+        assert all(r.status == "ok" for r in res)
+        deadline = time.monotonic() + 30.0     # idle drain removes ALL groups
+        while ex.n_workers() > 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert ex.n_workers() == 0
+        ex.scale_to(2)                         # must create an OPEN group
+        assert ex.n_workers() == 2
+        res = ex.run_all([EvalRequest("toy", [[i]]) for i in range(6)], 30)
+        assert [r.value[0][0] for r in res] == [2.0 * i for i in range(6)]
+
+
+def test_executor_walltime_kill_counts_attempts_like_sim():
+    """Retiring an expired allocation charges the running task an attempt
+    (sim semantics): at max_attempts=1 the kill records a 'failed' result
+    instead of resetting the counter and retrying forever."""
+    def sleepy():
+        return LambdaModel(
+            "s", lambda p, c: (time.sleep(3.0), [[1.0]])[1], 1, 1)
+    with Executor({"s": sleepy}, n_workers=1, policy="broker",
+                  allocation_s=0.3, max_attempts=1) as ex:
+        tid = ex.submit(EvalRequest("s", [[0.0]]))
+        res = ex.result(tid, timeout=2.0)      # well before the 3 s sleep
+        assert res.status == "failed"
+        assert "allocation expired" in res.error
+        assert res.attempts == 1
+
+
+def test_executor_at_cap_does_not_churn_allocations():
+    """An allocator at the worker cap must stop submitting, not cycle
+    submit -> zero-headroom cancel every hysteresis period."""
+    cfg = AutoAllocConfig(workers_per_alloc=2, walltime_s=None,
+                          backlog_high_s=1.0, backlog_low_s=0.5,
+                          max_pending=8, max_allocations=8,
+                          min_allocations=1, idle_drain_s=30.0,
+                          hysteresis_s=0.05)
+    with Executor({"toy": _slow_factory}, n_workers=1, autoalloc=cfg,
+                  max_workers=1) as ex:
+        assert ex.autoalloc.worker_cap == 1
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(20)]
+        res = [ex.result(t, 30) for t in ids]
+        assert all(r.status == "ok" for r in res)
+        assert ex.metrics()["allocations_total"] == 1   # no phantom grants
+        assert not any(d["action"] == "submit"
+                       for d in ex.autoalloc.decisions)
+
+
+def test_executor_respects_request_max_attempts():
+    """Live parity with the sim: the request's own max_attempts bounds
+    retries (jointly with the executor-wide limit)."""
+    with Executor({"toy": _toy_factory}, n_workers=2, max_attempts=5) as ex:
+        res = ex.run_all([EvalRequest("toy", [[1]], max_attempts=2,
+                                      config={"fail_attempts": 99})], 30)[0]
+        assert res.status == "failed"
+        assert res.attempts == 2
+
+
+def test_executor_cluster_snapshot_restore():
+    """Checkpoint-restart straight through the broker's multi-queue."""
+    with Executor({"toy": _toy_factory}, n_workers=1, policy="broker") as ex:
+        ids = [ex.submit(EvalRequest("toy", [[i]])) for i in range(8)]
+        ex.result(ids[0], 10)
+        snap = ex.snapshot()
+    ex2 = Executor.restore(snap, {"toy": _toy_factory}, n_workers=2,
+                           policy="broker")
+    try:
+        res = [ex2.result(t, 30) for t in ids]
+        assert all(r.status == "ok" for r in res)
+    finally:
+        ex2.shutdown()
+
+
+# --------------------------------------------------------------------------
+# satellite: snapshot round-trip preserves ALL request fields + deps
+# --------------------------------------------------------------------------
+def test_snapshot_roundtrip_preserves_all_request_fields():
+    with Executor({"toy": _toy_factory}, n_workers=1) as ex:
+        blocked = EvalRequest(
+            "toy", [[7.0]], config={"a": 1}, time_request=12.5,
+            time_limit=99.0, n_cpus=4, max_attempts=7, deadline=123.0,
+            task_id="rich", depends_on=("never-finishes",))
+        ex.submit(blocked)                     # parked on unmet deps
+        snap = ex.snapshot()
+    payload = next(p for p in snap["pending"] if p["task_id"] == "rich")
+    assert payload["n_cpus"] == 4              # the fields that were dropped
+    assert payload["max_attempts"] == 7
+    assert payload["deadline"] == 123.0
+    assert payload["time_request"] == 12.5
+    assert payload["time_limit"] == 99.0
+    assert payload["depends_on"] == ["never-finishes"]
+    assert payload["config"] == {"a": 1}
+
+    ex2 = Executor.restore(snap, {"toy": _toy_factory}, n_workers=1)
+    try:
+        with ex2._lock:
+            restored = ex2._requests["rich"]
+        for field in ("n_cpus", "max_attempts", "deadline", "time_request",
+                      "time_limit", "config"):
+            assert getattr(restored, field) == getattr(blocked, field), field
+        assert list(restored.depends_on) == list(blocked.depends_on)
+        assert ex2.backlog() == 0              # still gated on the dep
+    finally:
+        ex2.shutdown()
+
+
+def test_snapshot_roundtrip_waiting_deps_release():
+    """A restored waiting task runs once its dependency completes."""
+    with Executor({"toy": _toy_factory}, n_workers=1) as ex:
+        a = EvalRequest("toy", [[1.0]], task_id="dep-a")
+        b = EvalRequest("toy", [[2.0]], task_id="dep-b",
+                        depends_on=("dep-a",))
+        ex.submit(b)                           # waits: a not submitted yet
+        snap = ex.snapshot()
+    ex2 = Executor.restore(snap, {"toy": _toy_factory}, n_workers=1)
+    try:
+        ex2.submit(a)
+        res = ex2.result("dep-b", 30)
+        assert res.status == "ok" and res.value[0][0] == 4.0
+    finally:
+        ex2.shutdown()
+
+
+# --------------------------------------------------------------------------
+# satellite: EDF policy
+# --------------------------------------------------------------------------
+def test_edf_orders_by_deadline_none_last():
+    p = make_policy("edf")
+    assert type(p) is EDFPolicy
+    p.push(_req(task_id="late", deadline=300.0), 1)
+    p.push(_req(task_id="none1"), 1)
+    p.push(_req(task_id="soon", deadline=10.0), 1)
+    p.push(_req(task_id="none2"), 1)
+    p.push(_req(task_id="mid", deadline=100.0), 1)
+    order = [p.pop()[0].task_id for _ in range(5)]
+    assert order == ["soon", "mid", "late", "none1", "none2"]
+    assert p.pop() is None
+
+
+def test_edf_pending_snapshot_and_len():
+    p = EDFPolicy()
+    for i, d in enumerate((50.0, None, 5.0)):
+        p.push(_req(task_id=f"t{i}", deadline=d), 1)
+    assert len(p) == 3
+    assert [r.task_id for r, _ in p.pending()] == ["t2", "t0", "t1"]
+
+
+def test_edf_in_live_executor():
+    with Executor({"toy": _toy_factory}, n_workers=2, policy="edf") as ex:
+        now = time.monotonic()
+        reqs = [EvalRequest("toy", [[i]], deadline=now + 60.0 - i)
+                for i in range(10)]
+        res = ex.run_all(reqs, timeout=30)
+        assert all(r.status == "ok" for r in res)
+
+
+def test_edf_as_broker_sub_policy():
+    """The per-allocation policy instances ride the new registry entry."""
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=20, seed=6)
+    res = simulate_cluster(spec, trace, policy="edf", n_workers=2, seed=6)
+    assert all(r.status == "ok" for r in res.records)
