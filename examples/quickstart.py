@@ -30,7 +30,7 @@ def gp_model_factory():
 
     def fn(parameters, config):
         mean, var = gp_lib.predict(post, np.asarray(parameters, np.float32))
-        return [[float(mean[0, 0]), float(var[0])]]
+        return [[float(mean[0, 0]), float(var[0, 0])]]
 
     return LambdaModel("gp-surrogate", fn, 7, 2,
                        warmup_fn=lambda: fn([thetas[0].tolist()], None))

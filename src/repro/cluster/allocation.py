@@ -46,11 +46,16 @@ class Allocation:
     """
 
     def __init__(self, alloc_id: int, n_workers: int,
-                 walltime_s: Optional[float] = None):
+                 walltime_s: Optional[float] = None, *,
+                 virtual: bool = False):
         self.alloc_id = alloc_id
         self.n_workers = n_workers
         self.walltime_s = (float(walltime_s) if walltime_s is not None
                            else math.inf)
+        # virtual allocations model a zero-cost service (the GP-surrogate
+        # path): no node-seconds are ever billed and no busy time accrues,
+        # so elasticity metrics stay about REAL capacity
+        self.virtual = virtual
         self.state = PENDING
         self.queue_wait = 0.0
         self.submit_t: Optional[float] = None
@@ -130,6 +135,8 @@ class Allocation:
         return max(self.expiry_t - now, 0.0)
 
     def note_busy(self, seconds: float) -> None:
+        if self.virtual:
+            return
         self.busy_t += max(float(seconds), 0.0)
 
     def resize(self, n_workers: int, now: float) -> None:
@@ -145,8 +152,11 @@ class Allocation:
         self.n_workers = max(int(n_workers), 0)
 
     def node_seconds(self, until: Optional[float] = None) -> float:
-        """Node-seconds actually billed (0 until granted / if cancelled);
-        `until` bills a still-held group provisionally up to the present."""
+        """Node-seconds actually billed (0 until granted / if cancelled;
+        always 0 for virtual allocations); `until` bills a still-held
+        group provisionally up to the present."""
+        if self.virtual:
+            return 0.0
         end = self.end_t if self.end_t is not None else until
         if self.ready_t is None or end is None:
             return 0.0

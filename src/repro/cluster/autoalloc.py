@@ -87,19 +87,23 @@ class AutoAllocator:
         (the whole backlog if no capacity is open — that is what triggers
         bootstrap); raw totals under ``per_worker=False``; queued-task
         count (hints ignored) under ``count_tasks=True``."""
-        cost = (float(len(broker)) if self.config.count_tasks
+        cost = (float(broker.backlog_count()) if self.config.count_tasks
                 else broker.backlog_cost(default=self.config.
                                          default_task_cost))
         if not self.config.per_worker:
             return cost
-        capacity = sum(a.n_workers for a in broker.allocations() if a.open)
+        # virtual (surrogate) allocations are not real capacity: scaling
+        # decisions are about node groups that cost node-seconds
+        capacity = sum(a.n_workers for a in broker.allocations()
+                       if a.open and not a.virtual)
         return cost / max(capacity, 1)
 
     def _grow_headroom(self, broker: Broker) -> int:
         """Workers a new allocation may bring up (inf-ish without a cap)."""
         if self.worker_cap is None:
             return self.config.workers_per_alloc
-        planned = sum(a.n_workers for a in broker.allocations() if a.open)
+        planned = sum(a.n_workers for a in broker.allocations()
+                      if a.open and not a.virtual)
         return min(self.config.workers_per_alloc,
                    max(self.worker_cap - planned, 0))
 
@@ -134,7 +138,9 @@ class AutoAllocator:
         cfg = self.config
         busy = busy_workers or {}
         actions: List[Tuple[str, Allocation]] = []
-        allocs = broker.allocations()
+        # the virtual surrogate allocation is invisible to elasticity: it
+        # must neither count against max_allocations nor be idle-drained
+        allocs = [a for a in broker.allocations() if not a.virtual]
         open_allocs = [a for a in allocs if a.open]
         pending = [a for a in allocs if a.state == "queued"]
         backlog_s = self.backlog_per_worker(broker)

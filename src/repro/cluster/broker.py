@@ -49,7 +49,8 @@ class Broker(SchedulingPolicy):
 
     name = "broker"
 
-    def __init__(self, predictor=None, policy: Any = "fcfs"):
+    def __init__(self, predictor=None, policy: Any = "fcfs",
+                 surrogate: Any = None):
         super().__init__(predictor)
         if isinstance(policy, SchedulingPolicy):
             raise TypeError(
@@ -73,6 +74,14 @@ class Broker(SchedulingPolicy):
         self._item_costs: Dict[Tuple[str, int], Tuple[float, int]] = {}
         self._cost_total = 0.0
         self._cost_version: object = None
+        # surrogate-offload routing (ROADMAP follow-on): the GP surrogate
+        # is modelled as a zero-queue-wait VIRTUAL allocation so the
+        # drivers (simulate_cluster, live Executor) bring up its server
+        # through the ordinary allocation lifecycle
+        self.surrogate = None
+        self._surrogate_id: Optional[int] = None
+        if surrogate is not None:
+            self.attach_surrogate(surrogate)
 
     # -- construction helpers -------------------------------------------
     def _make_queue(self) -> SchedulingPolicy:
@@ -89,6 +98,30 @@ class Broker(SchedulingPolicy):
         for q in self._queues.values():
             q.bind(self.predictor)
         return self
+
+    def attach_surrogate(self, offload) -> Allocation:
+        """Register a `repro.sched.offload.SurrogateOffload` as a virtual
+        allocation: zero queue wait (submitted at t=0, granted on the
+        first tick), unbounded walltime, zero node-second billing.  Tasks
+        the engine trusts are routed to its private queue; the owning
+        driver spawns its (virtual) workers exactly as for any other
+        allocation — no forked lifecycle code."""
+        if self.surrogate is not None:
+            raise ValueError("a surrogate is already attached")
+        self.surrogate = offload
+        alloc = Allocation(self.next_alloc_id(),
+                           getattr(offload, "n_virtual_workers", 1),
+                           None, virtual=True)
+        alloc.submit(0.0, 0.0)                 # zero-queue-wait by design
+        self._surrogate_id = alloc.alloc_id
+        self._allocs[alloc.alloc_id] = alloc
+        self._queues[alloc.alloc_id] = make_policy("fcfs", self.predictor)
+        return alloc
+
+    def _surrogate_open(self) -> bool:
+        sid = self._surrogate_id
+        return (self.surrogate is not None and sid in self._allocs
+                and self._allocs[sid].open)
 
     # -- allocation management ------------------------------------------
     def next_alloc_id(self) -> int:
@@ -144,7 +177,11 @@ class Broker(SchedulingPolicy):
 
     # -- routing ---------------------------------------------------------
     def _open_ids(self) -> List[int]:
-        return [a.alloc_id for a in self.allocations() if a.open]
+        """Open REAL allocations — the virtual surrogate allocation is
+        never a routing / stealing / least-loaded target; tasks reach it
+        only through the offload decision."""
+        return [a.alloc_id for a in self.allocations()
+                if a.open and not a.virtual]
 
     def _load(self, alloc_id: int) -> float:
         """Queued tasks per worker — O(1), deliberately NOT cost-based:
@@ -168,7 +205,17 @@ class Broker(SchedulingPolicy):
         return chosen
 
     def _route_push(self, req, attempt: int) -> None:
-        self._note_enqueue(req, attempt)
+        # surrogate offload first: a trusted task never queues for real
+        # capacity.  Its (predicted) cost is deliberately kept OUT of the
+        # backlog ledger — the autoallocator must not size real node
+        # groups for work the surrogate serves in milliseconds.  The cost
+        # (possibly a GP inference) is computed ONCE and reused by the
+        # ledger: push runs under the dispatch lock.
+        cost = self.cost(req)
+        if self._surrogate_open() and self.surrogate.decide(req, cost=cost):
+            self._queues[self._surrogate_id].push(req, attempt)
+            return
+        self._note_enqueue(req, attempt, cost=cost)
         target = self._route(req)
         if target is None:
             self._unrouted.append((req, attempt))
@@ -198,7 +245,13 @@ class Broker(SchedulingPolicy):
                    ) -> Optional[QueueItem]:
         self._flush_unrouted()
         if worker is None or worker.alloc_id is None:
-            # anonymous consumer (snapshot draining, legacy pools): any task
+            # anonymous consumer (snapshot draining, legacy pools): any
+            # task — surrogate queue first, it is milliseconds of work
+            if self._surrogate_id is not None and \
+                    self._surrogate_id in self._queues:
+                item = self._queues[self._surrogate_id].pop()
+                if item is not None:
+                    return item
             for i in self._open_ids():
                 item = self._queues[i].pop()
                 if item is not None:
@@ -213,6 +266,9 @@ class Broker(SchedulingPolicy):
         return self._steal(worker)
 
     def _steal(self, worker: WorkerView) -> Optional[QueueItem]:
+        thief = self._allocs.get(worker.alloc_id)
+        if thief is not None and thief.virtual:
+            return None                        # surrogate serves only its own
         victims = [i for i in self._open_ids() if i != worker.alloc_id
                    and len(self._queues[i])]
         if not victims:
@@ -244,6 +300,16 @@ class Broker(SchedulingPolicy):
         q = self._queues.get(alloc_id)
         return len(q) if q is not None else 0
 
+    def backlog_count(self) -> int:
+        """Queued tasks waiting for REAL capacity (the surrogate's
+        private queue is excluded, exactly as `backlog_cost` excludes its
+        costs) — the count the legacy count-based autoscale trigger
+        should scale on."""
+        n = len(self)
+        if self._surrogate_id is not None:
+            n -= self.queued_on(self._surrogate_id)
+        return n
+
     def backlog_cost(self, default: float = 1.0) -> float:
         """Total queued seconds of work cluster-wide (predictor estimate,
         else time_request hint, else `default` per task) — the signal the
@@ -260,18 +326,26 @@ class Broker(SchedulingPolicy):
             self._cost_version = v
             self._item_costs = {}
             self._cost_total = 0.0
-            for req, attempt in self.pending():
+            # rebuild over REAL queues only: surrogate-routed work is
+            # never in the ledger (see _route_push)
+            items: List[QueueItem] = list(self._unrouted)
+            for i in sorted(self._queues):
+                if i != self._surrogate_id:
+                    items.extend(self._queues[i].pending())
+            for req, attempt in items:
                 self._note_enqueue(req, attempt)
         return max(self._cost_total, 0.0)
 
-    def _note_enqueue(self, req, attempt: int) -> None:
+    def _note_enqueue(self, req, attempt: int,
+                      cost: Optional[float] = None) -> None:
         key = (req.task_id, attempt)
         entry = self._item_costs.get(key)
         if entry is not None:                  # duplicate copy: reuse cost
             c, n = entry
             self._item_costs[key] = (c, n + 1)
         else:
-            c = self.cost(req) or self.default_cost
+            c = (cost if cost is not None else self.cost(req)) \
+                or self.default_cost
             self._item_costs[key] = (c, 1)
         self._cost_total += c
 

@@ -120,7 +120,9 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     reqs: List[EvalRequest] = []
     for i, tt in enumerate(arrivals):
         req = EvalRequest(model_name=tt.model_name,
-                          parameters=[[float(i)]],
+                          parameters=(tt.parameters
+                                      if tt.parameters is not None
+                                      else [[float(i)]]),
                           time_request=tt.time_request,
                           n_cpus=tt.n_cpus,
                           task_id=f"trace-{i}",
@@ -227,7 +229,11 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 attempts=w.attempt, status="ok"))
             n_final += 1
             w.alloc.note_busy(w.init + w.compute)
-            if broker.predictor is not None:
+            # surrogate completions are milliseconds of GP predict: they
+            # must not teach the runtime predictor what the REAL model
+            # costs at this theta
+            if broker.predictor is not None and \
+                    not req.config.get("_surrogate"):
                 broker.predictor.observe(req, w.compute)
             w.busy, w.req = False, None
 
@@ -276,9 +282,20 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 continue
             req, attempt = item
             w.req, w.attempt, w.busy = req, attempt, True
-            w.compute = runtimes[req.task_id]
-            w.init = 0.0 if req.model_name in w.warm else spec.server_init
-            w.warm.add(req.model_name)
+            if req.config.get("_surrogate"):
+                # offloaded: one GP predict instead of the forward model —
+                # no model server, no warm-start bookkeeping.  Count the
+                # served evaluation where the live path counts inside
+                # evaluate() — same-object stats parity.
+                w.compute = getattr(broker.surrogate, "latency_s", 0.05)
+                w.init = 0.0
+                if hasattr(broker.surrogate, "note_served"):
+                    broker.surrogate.note_served()
+            else:
+                w.compute = runtimes[req.task_id]
+                w.init = (0.0 if req.model_name in w.warm
+                          else spec.server_init)
+                w.warm.add(req.model_name)
             w.start_t = now + spec.dispatch_latency
             w.end_t = w.start_t + w.init + w.compute
 

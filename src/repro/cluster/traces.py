@@ -30,6 +30,11 @@ class TraceTask:
     model_name: str = "model"
     time_request: Optional[float] = None   # HQ-style hint (None = unknown)
     n_cpus: int = 1
+    # the task's physics input theta (UM-Bridge [[...]] shape); None keeps
+    # the synthetic per-index payload `simulate_cluster` generates.  Real
+    # parameters are what runtime predictors and the surrogate-offload
+    # trust gate discriminate on.
+    parameters: Optional[List[List[float]]] = None
 
 
 def bursty_trace(n_bursts: int = 4, burst_size: int = 24,

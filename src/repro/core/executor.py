@@ -35,6 +35,7 @@ Production features beyond the paper's prototype:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import threading
 import time
@@ -108,28 +109,56 @@ class Worker(threading.Thread):
                 continue
             self.pool._mark_running(req, self, attempt)
             dispatch_t = time.monotonic()
+            surrogate = (self.pool._surrogate()
+                         if req.config.get("_surrogate") else None)
+            surrogate_failed = False
             try:
                 if self.crashed:
                     raise RuntimeError(f"worker-{self.wid} crashed")
                 fail_n = int(req.config.get("fail_attempts", 0))
                 if attempt <= fail_n:
                     raise RuntimeError("injected failure")
-                server, init_t = self._get_server(req.model_name)
-                t0 = time.monotonic()
-                value = server.model(req.parameters, req.config)
-                compute_t = time.monotonic() - t0
-                server.n_evals += 1
+                if surrogate is not None:
+                    # offload path: one GP predict, no model server
+                    t0 = time.monotonic()
+                    try:
+                        value = surrogate.evaluate(req.parameters)
+                    except Exception:
+                        surrogate_failed = True
+                        raise
+                    compute_t = time.monotonic() - t0
+                    init_t = 0.0
+                    wname = f"{self.name}-surrogate"
+                else:
+                    server, init_t = self._get_server(req.model_name)
+                    t0 = time.monotonic()
+                    value = server.model(req.parameters, req.config)
+                    compute_t = time.monotonic() - t0
+                    server.n_evals += 1
+                    wname = self.name
                 status = "ok"
                 if req.time_limit and compute_t > req.time_limit:
                     status = "timeout"
                 res = EvalResult(
                     task_id=req.task_id, value=value, status=status,
-                    worker=self.name, attempts=attempt,
+                    worker=wname, attempts=attempt,
                     submit_t=req.submit_t, dispatch_t=dispatch_t,
                     start_t=dispatch_t, end_t=time.monotonic(),
                     compute_t=compute_t, init_t=init_t)
                 self.pool._complete(req, res)
             except Exception as e:  # noqa: BLE001 — any task failure requeues
+                if surrogate_failed:
+                    # a broken SURROGATE must not fail the task: PIN the
+                    # retry to the real path (just dropping the flag is
+                    # not enough — the requeue re-decides and would
+                    # re-route to the same broken surrogate) and refund
+                    # the "CPU seconds avoided" credit.  Failures raised
+                    # before evaluate() (worker crash, injected failure)
+                    # are NOT the surrogate's fault: the retry may still
+                    # take the offload the gates approved.
+                    req.config.pop("_surrogate", None)
+                    req.config["_no_surrogate"] = True
+                    surrogate.rollback(req)
                 self.pool._fail(req, attempt, repr(e), self)
                 if self.crashed:
                     self.alive = False
@@ -306,13 +335,35 @@ class Executor:
             self._init_total_t += init_t
             self._init_count += 1
 
+    def _surrogate(self):
+        """The surrogate-offload engine, when the policy carries one
+        (`SurrogateOffloadPolicy` or a `Broker` with ``surrogate=``)."""
+        return getattr(self.policy, "surrogate", None)
+
     def _complete(self, req: EvalRequest, res: EvalResult):
-        if res.status == "ok" and self.predictor is not None:
-            # outside the scheduler lock: a GP refit must not stall dispatch
-            try:
-                self.predictor.observe(req, res.compute_t)
-            except Exception:  # noqa: BLE001 — prediction is best-effort
-                pass
+        # derived from the RESULT, not req.config: the shared config is
+        # re-stamped by every re-push decision (speculation, requeues)
+        # and may have changed while this attempt was in flight
+        offloaded = res.worker.endswith("-surrogate")
+        if res.status == "ok" and not offloaded:
+            # outside the scheduler lock: a GP refit must not stall
+            # dispatch.  Offloaded completions are skipped: milliseconds
+            # of GP predict must not teach the runtime predictor what the
+            # REAL model costs at this theta.
+            if self.predictor is not None:
+                try:
+                    self.predictor.observe(req, res.compute_t)
+                except Exception:  # noqa: BLE001 — prediction is best-effort
+                    pass
+            sur = self._surrogate()
+            if sur is not None:
+                # a real run is ground truth for the QoI surrogate too:
+                # conditioning on it widens the trusted region
+                try:
+                    sur.observe(req.parameters, res.value,
+                                model_name=req.model_name)
+                except Exception:  # noqa: BLE001 — enrichment is best-effort
+                    pass
         with self._cv:
             entry = self._running.pop(req.task_id, None)
             # busy billing happens HERE, under the lock, keyed on still
@@ -374,6 +425,12 @@ class Executor:
             for tid in dead:
                 req, _, _, attempt = self._running.pop(tid)
                 self._push(req, attempt)       # the crash was not its fault
+            if worker.alloc is not None and worker.alloc.virtual \
+                    and worker.alloc.state == "running":
+                # the surrogate queue is served ONLY by virtual workers
+                # (routing/stealing exclude it): a dead one must be
+                # replaced or trusted tasks would queue there forever
+                self._add_worker(worker.alloc)
             self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -443,10 +500,10 @@ class Executor:
             target = self._initial_alloc
             if self._cluster_mode:
                 open_allocs = [a for a in self.policy.allocations()
-                               if a.state == "running"]
+                               if a.state == "running" and not a.virtual]
                 if open_allocs:
                     target = open_allocs[0]
-                elif len(self.workers) < n:    # all groups gone: new one
+                elif self._n_real_workers() < n:   # all groups gone: new one
                     now = time.monotonic()
                     target = Allocation(self.policy.next_alloc_id(), 0,
                                         None)
@@ -454,11 +511,15 @@ class Executor:
                     target.tick(now)
                     self.policy.add_allocation(target)
             now = time.monotonic()
-            while len(self.workers) < n:
+            while self._n_real_workers() < n:
                 self._add_worker(target)
                 target.resize(target.n_workers + 1, now)
-            while len(self.workers) > n:
-                w = self.workers.pop()
+            while self._n_real_workers() > n:
+                # shrink pops the newest REAL worker; the virtual
+                # surrogate server is not capacity and stays up
+                w = next(w for w in reversed(self.workers)
+                         if w.alloc is None or not w.alloc.virtual)
+                self.workers.remove(w)
                 w.alive = False
                 self.policy.remove_worker(w.wid)
                 if w.alloc is not None:        # time-weighted billing
@@ -476,6 +537,12 @@ class Executor:
 
     def n_workers(self) -> int:
         return len([w for w in self.workers if w.alive])
+
+    def _n_real_workers(self) -> int:
+        """Workers on real allocations (virtual surrogate servers are not
+        capacity and never count against `max_workers`)."""
+        return len([w for w in self.workers
+                    if w.alloc is None or not w.alloc.virtual])
 
     def _cluster_step(self):
         """Allocation lifecycle + autoalloc decisions (monitor thread).
@@ -498,13 +565,17 @@ class Executor:
                 state = alloc.tick(now)
                 if prev == QUEUED and state == RUNNING:
                     # the documented pool cap binds autoalloc too: grant
-                    # only the headroom, cancel a grant that gets none
-                    headroom = max(self.max_workers - len(self.workers), 0)
-                    if headroom < alloc.n_workers:
-                        alloc.resize(headroom, now)
-                    if alloc.n_workers == 0:
-                        self._retire_allocation(alloc, now)
-                        continue
+                    # only the headroom, cancel a grant that gets none.
+                    # Virtual (surrogate) workers are exempt — they are
+                    # not real capacity, so they never consume the cap
+                    if not alloc.virtual:
+                        headroom = max(self.max_workers
+                                       - self._n_real_workers(), 0)
+                        if headroom < alloc.n_workers:
+                            alloc.resize(headroom, now)
+                        if alloc.n_workers == 0:
+                            self._retire_allocation(alloc, now)
+                            continue
                     for _ in range(alloc.n_workers):
                         self._add_worker(alloc)
                 elif prev in (RUNNING, DRAINING) and state == "expired":
@@ -539,27 +610,67 @@ class Executor:
             # allocation-backed elasticity (cluster mode)
             if self._cluster_mode:
                 self._cluster_step()
-            # straggler re-issue (speculative execution): the p95 comes
-            # from the online predictor when one is configured, else from
-            # a scan over completed results
+            # straggler re-issue (speculative execution)
             if self.straggler_factor > 0:
-                with self._lock:
-                    done = [r.compute_t for r in self._results.values()
-                            if r.status == "ok"]
-                    if len(done) >= self.straggler_min_completed:
-                        p95 = (self.predictor.quantile(0.95)
-                               if self.predictor is not None else None)
-                        if p95 is None:
-                            done.sort()
-                            p95 = done[int(0.95 * (len(done) - 1))]
-                        cutoff = self.straggler_factor * max(p95, 1e-3)
-                        now = time.monotonic()
-                        for tid, (req, w, t_start, _) in list(
-                                self._running.items()):
-                            if now - t_start > cutoff and \
-                                    not req.config.get("_speculated"):
-                                req.config["_speculated"] = True
-                                self._push(req, 1)
+                self._straggler_check(time.monotonic())
+
+    def _straggler_check(self, now: float):
+        """Speculatively re-issue tasks running far beyond their MODEL'S
+        p95.  A pooled p95 misfires on heterogeneous models: the fast
+        model's p95 re-issues every healthy task of a slow model, doubling
+        exactly the work that is already the bottleneck.  Per model:
+        predictor quantile first, then a scan of that model's completions,
+        then the pooled estimate (a model with too few completions of its
+        own still gets straggler protection)."""
+
+        def scan_p95(xs):
+            xs = sorted(xs)
+            return xs[int(0.95 * (len(xs) - 1))]
+
+        with self._lock:
+            min_n = self.straggler_min_completed
+            done_by_model: Dict[str, List[float]] = {}
+            for tid, r in self._results.items():
+                if r.status != "ok" or r.worker.endswith("-surrogate"):
+                    continue       # ms-scale surrogate hits would crater p95
+                r_req = self._requests.get(tid)
+                if r_req is None:
+                    continue
+                done_by_model.setdefault(r_req.model_name,
+                                         []).append(r.compute_t)
+            done = [t for ts in done_by_model.values() for t in ts]
+            if len(done) < min_n:
+                return
+            pooled = (self.predictor.quantile(0.95)
+                      if self.predictor is not None else None)
+            if pooled is None:
+                pooled = scan_p95(done)
+            # one p95 per MODEL per tick (not per running task): the
+            # scan sorts each model's completion list exactly once
+            scan_by_model = {m: scan_p95(ts)
+                             for m, ts in done_by_model.items()
+                             if len(ts) >= min_n}
+            n_obs = getattr(self.predictor, "n_observed", None)
+            for tid, (req, w, t_start, _) in list(self._running.items()):
+                p95 = None
+                if self.predictor is not None and callable(n_obs) \
+                        and n_obs(req.model_name) >= min_n:
+                    p95 = self.predictor.quantile(0.95, req.model_name)
+                if p95 is None:
+                    p95 = scan_by_model.get(req.model_name)
+                if p95 is None:
+                    p95 = pooled               # pooled fallback
+                cutoff = self.straggler_factor * max(p95, 1e-3)
+                if now - t_start > cutoff and \
+                        not req.config.get("_speculated"):
+                    req.config["_speculated"] = True
+                    # the copy must duplicate the SAME work: re-deciding
+                    # the serving path here could stamp _surrogate on the
+                    # shared config while the real attempt is in flight,
+                    # and a first-to-finish GP answer would silently
+                    # replace (and discard) the real result
+                    req.config["_no_surrogate"] = True
+                    self._push(req, 1)
 
     # ------------------------------------------------------------------
     # checkpoint / restart
@@ -609,7 +720,11 @@ class Executor:
             by_status: Dict[str, int] = {}
             for r in self._results.values():
                 by_status[r.status] = by_status.get(r.status, 0) + 1
+            sur = self._surrogate()
+            offload = (dataclasses.asdict(sur.stats())
+                       if sur is not None else None)
             return {
+                "offload": offload,
                 "server_init_total_t": self._init_total_t,
                 "server_inits": self._init_count,
                 "policy": self.policy.name,
@@ -618,12 +733,17 @@ class Executor:
                 "waiting_on_deps": len(self._waiting),
                 "workers_alive": self.n_workers(),
                 "results_by_status": by_status,
+                # real allocations only: the virtual surrogate allocation
+                # is invisible to every other capacity metric too
                 "allocations_open": (len([a for a in
                                           self.policy.allocations()
-                                          if a.open])
+                                          if a.open and not a.virtual])
                                      if self._cluster_mode else 1),
-                "allocations_total": (len(self.policy.allocations())
-                                      + len(self._retired_allocs)
+                "allocations_total": (len([a for a in
+                                           self.policy.allocations()
+                                           if not a.virtual])
+                                      + len([a for a in self._retired_allocs
+                                             if not a.virtual])
                                       if self._cluster_mode else 1),
             }
 

@@ -81,6 +81,52 @@ class AllocationRecord:
         return self.n_workers * self.held_s
 
 
+@dataclasses.dataclass
+class OffloadStats:
+    """What surrogate-offload routing did to a run (`repro.sched.offload`).
+
+    n_considered        — routing decisions taken (every push);
+    n_offloaded         — tasks sent down the surrogate path;
+    n_surrogate_evals   — surrogate evaluations actually served;
+    cpu_seconds_avoided — predicted compute seconds the offloaded tasks
+                          would have burned on the real model (estimate:
+                          the same cost the router gated on);
+    sd_histogram        — histogram of the normalised posterior sd at
+                          every variance-gated decision point
+                          ({"edges": [n_bins+1], "counts": [n_bins]}) —
+                          how often the surrogate was trusted, and by
+                          what margin.
+    """
+    n_considered: int = 0
+    n_offloaded: int = 0
+    n_surrogate_evals: int = 0
+    cpu_seconds_avoided: float = 0.0
+    sd_histogram: Dict[str, List[float]] = dataclasses.field(
+        default_factory=lambda: {"edges": [], "counts": []})
+
+    @property
+    def offload_rate(self) -> float:
+        return self.n_offloaded / self.n_considered if self.n_considered \
+            else 0.0
+
+
+def sd_histogram(sds: Sequence[float], n_bins: int = 10
+                 ) -> Dict[str, List[float]]:
+    """Fixed-width histogram of posterior-sd observations (pure python —
+    runs under the dispatch lock, so no array-library round trips)."""
+    if not sds:
+        return {"edges": [], "counts": []}
+    lo, hi = min(sds), max(sds)
+    if hi <= lo:
+        hi = lo + 1e-9
+    width = (hi - lo) / n_bins
+    counts = [0.0] * n_bins
+    for s in sds:
+        counts[min(int((s - lo) / width), n_bins - 1)] += 1.0
+    return {"edges": [lo + i * width for i in range(n_bins + 1)],
+            "counts": counts}
+
+
 def node_seconds(allocs: Sequence[AllocationRecord]) -> float:
     """Total node-seconds billed across allocations: what an elastic
     policy is trying to minimise at bounded makespan cost."""

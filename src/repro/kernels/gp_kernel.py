@@ -74,3 +74,83 @@ def gp_kernel_matrix(x1, x2, lengthscale, variance, kind: str = "rbf", *,
         interpret=interpret,
     )(x1s, x2s)
     return variance.astype(jnp.float32) * out[:n, :m]
+
+
+def _gp_predict_kernel(x1_ref, x2_ref, alpha_ref, linv_ref, mean_ref,
+                       qf_ref, *, kind):
+    """One [bs]-query tile of the batched posterior predict: assemble the
+    cross-covariance column block, then the MXU products against alpha
+    (mean) and L^-1 (posterior-variance quadratic form) — the whole
+    predict for this tile in one VMEM round-trip."""
+    x1 = x1_ref[...].astype(jnp.float32)                       # [n, d]
+    x2 = x2_ref[...].astype(jnp.float32)                       # [bs, d]
+    cross = jax.lax.dot_general(x1, x2, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    n1 = jnp.sum(x1 * x1, axis=-1)
+    n2 = jnp.sum(x2 * x2, axis=-1)
+    d2 = jnp.maximum(n1[:, None] + n2[None, :] - 2.0 * cross, 0.0)
+    if kind == "rbf":
+        k = jnp.exp(-0.5 * d2)                                 # [n, bs]
+    else:  # matern52
+        r = jnp.sqrt(d2 + 1e-12)
+        k = (1.0 + math.sqrt(5.0) * r + 5.0 / 3.0 * d2) * jnp.exp(
+            -math.sqrt(5.0) * r)
+    alpha = alpha_ref[...].astype(jnp.float32)                 # [n, m]
+    mean_ref[...] = jax.lax.dot_general(
+        k, alpha, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # [bs, m]
+    linv = linv_ref[...].astype(jnp.float32)                   # [n, n]
+    w = jax.lax.dot_general(linv, k, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    qf_ref[...] = jnp.sum(w * w, axis=0)[:, None]              # [bs, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block_s", "interpret"))
+def gp_predict(x_train, x_star, lengthscale, variance, alpha, linv,
+               kind: str = "rbf", *, block_s: int = DEFAULT_BLOCK,
+               interpret: bool = False):
+    """Batched GP posterior predict in ONE kernel launch.
+
+    x_train: [N, D]; x_star: [S, D]; alpha: [N, M]; linv: [N, N] (inverse
+    Cholesky factor of K + s2 I)
+    -> (normalised mean [S, M], quadratic form ||L^-1 ks||^2 [S]).
+
+    The covariance nonlinearity commutes with the signal variance, so the
+    kernel works on the unscaled correlation k0 and the wrapper applies
+    `variance` (mean) and `variance^2` (quadratic form) afterwards —
+    keeping the traced scalar out of the kernel body.  Padded query rows
+    produce garbage that is sliced off; padded TRAINING rows are exact
+    because alpha and linv are zero there.
+    """
+    assert kind in ("rbf", "matern52"), kind
+    n, d = x_train.shape
+    s = x_star.shape[0]
+    m_out = alpha.shape[1]
+    x1s = x_train.astype(jnp.float32) / lengthscale.astype(jnp.float32)
+    x2s = x_star.astype(jnp.float32) / lengthscale.astype(jnp.float32)
+
+    pn = (-n) % 8                                  # sublane-align the train dim
+    if pn:
+        x1s = jnp.pad(x1s, ((0, pn), (0, 0)))
+        alpha = jnp.pad(alpha, ((0, pn), (0, 0)))
+        linv = jnp.pad(linv, ((0, pn), (0, pn)))
+    bs = min(block_s, max(s, 8))
+    ps = (-s) % bs
+    if ps:
+        x2s = jnp.pad(x2s, ((0, ps), (0, 0)))
+
+    mean0, qf0 = pl.pallas_call(
+        functools.partial(_gp_predict_kernel, kind=kind),
+        grid=((s + ps) // bs,),
+        in_specs=[pl.BlockSpec((n + pn, d), lambda j: (0, 0)),
+                  pl.BlockSpec((bs, d), lambda j: (j, 0)),
+                  pl.BlockSpec((n + pn, m_out), lambda j: (0, 0)),
+                  pl.BlockSpec((n + pn, n + pn), lambda j: (0, 0))],
+        out_specs=(pl.BlockSpec((bs, m_out), lambda j: (j, 0)),
+                   pl.BlockSpec((bs, 1), lambda j: (j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((s + ps, m_out), jnp.float32),
+                   jax.ShapeDtypeStruct((s + ps, 1), jnp.float32)),
+        interpret=interpret,
+    )(x1s, x2s, alpha.astype(jnp.float32), linv.astype(jnp.float32))
+    var_f = variance.astype(jnp.float32)
+    return var_f * mean0[:s], (var_f * var_f) * qf0[:s, 0]

@@ -80,3 +80,19 @@ def gp_kernel_matrix(x1, x2, lengthscale, variance, kind: str = "rbf", *,
         return gp_kernel.gp_kernel_matrix(x1, x2, lengthscale, variance, kind,
                                           interpret=(mode == "interpret"))
     return ref.gp_kernel_matrix(x1, x2, lengthscale, variance, kind)
+
+
+def gp_predict(x_train, x_star, lengthscale, variance, alpha, linv,
+               kind: str = "rbf", *, impl: Optional[str] = None):
+    """Batched GP posterior predict: (normalised mean [S, M], quadratic
+    form ||L^-1 ks||^2 [S]) in one launch — covariance assembly, alpha
+    product and the variance quadratic form fused so queue scoring never
+    materialises Ks in HBM per task."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import gp_kernel
+        return gp_kernel.gp_predict(x_train, x_star, lengthscale, variance,
+                                    alpha, linv, kind,
+                                    interpret=(mode == "interpret"))
+    return ref.gp_predict(x_train, x_star, lengthscale, variance, alpha,
+                          linv, kind)

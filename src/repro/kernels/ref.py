@@ -374,3 +374,21 @@ def gp_kernel_matrix(x1: jax.Array, x2: jax.Array, lengthscale: jax.Array,
     else:
         raise ValueError(kind)
     return variance.astype(jnp.float32) * k
+
+
+def gp_predict(x_train: jax.Array, x_star: jax.Array, lengthscale: jax.Array,
+               variance: jax.Array, alpha: jax.Array, linv: jax.Array,
+               kind: str = "rbf") -> "tuple[jax.Array, jax.Array]":
+    """Batched GP posterior predict (XLA fallback for the Pallas kernel).
+
+    Returns (normalised mean [S, M], quadratic form [S]) where
+    mean = Ks^T alpha and qf[s] = ||L^-1 ks||^2 (nonnegative by
+    construction — the same conditioning as a triangular solve against
+    the Cholesky factor); the caller maps both back to the original
+    output scale.
+    """
+    ks = gp_kernel_matrix(x_train, x_star, lengthscale, variance, kind)
+    mean = ks.T @ alpha
+    v = linv @ ks
+    qf = jnp.sum(v * v, axis=0)
+    return mean, qf

@@ -6,6 +6,7 @@ layers that need an answer — the live `Executor`, the UM-Bridge
 Pick by name (`policy="pack", predictor="gp"`) or pass configured
 instances; register new ones with `@register_policy` / `@register_predictor`.
 """
+from repro.sched.offload import SurrogateOffload, SurrogateOffloadPolicy
 from repro.sched.policy import (EDFPolicy, FCFSPolicy, LPTPolicy,
                                 PackingPolicy, SchedulingPolicy, SJFPolicy,
                                 WorkStealingPolicy, WorkerView)

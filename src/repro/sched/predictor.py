@@ -53,7 +53,11 @@ class RuntimePredictor(Protocol):
 
 def flatten_parameters(parameters: Any) -> Optional[List[float]]:
     """Best-effort flatten of an UM-Bridge parameter payload ([[...]] lists)
-    into a fixed feature vector; None if it contains non-numeric leaves."""
+    into a fixed feature vector; None if it contains non-numeric leaves OR
+    flattens to nothing.  An empty/degenerate payload must NOT read as a
+    valid zero-length feature vector: the GP predictor locks its feature
+    dimension on the first flattenable request, and `_dim = 0` would pin
+    it to a featureless GP forever after."""
     out: List[float] = []
 
     def walk(v) -> bool:
@@ -70,7 +74,9 @@ def flatten_parameters(parameters: Any) -> Optional[List[float]]:
         except Exception:                      # noqa: BLE001
             return False
 
-    return out if walk(parameters) else None
+    if not walk(parameters) or not out:
+        return None
+    return out
 
 
 class _RunningQuantiles:

@@ -45,7 +45,10 @@ def evaluate_stream(executor: Executor, model_name: str,
 
     for i, x in enumerate(inputs):
         mean, var = gp_lib.predict(post, x[None])
-        sd = float(np.sqrt(np.asarray(var)[0]))
+        # variance is per output column [1, M]; gate on the LEAST trusted
+        # output — one confidently-wrong column must not unlock the
+        # surrogate for the whole vector
+        sd = float(np.max(np.sqrt(np.asarray(var)[0])))
         if sd <= sd_threshold:
             outputs[i] = np.asarray(mean)[0]
             continue

@@ -9,6 +9,7 @@ kernel matrix — one Cholesky, two solves.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
@@ -17,6 +18,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+
+# Bucketed padding sizes for `predict_batch`: every query batch is padded
+# up to one of these row counts (large batches are chunked at the biggest
+# bucket), so scoring queues of ANY size compiles at most
+# len(PREDICT_BUCKETS) distinct shapes per training-set size — instead of
+# one fresh XLA compile per queue length.
+PREDICT_BUCKETS = (64, 256, 1024)
+
+# (n_train, padded_s) -> number of batched-predict launches.  Tests assert
+# the bucket discipline from this counter; it is diagnostic state only.
+predict_batch_shapes: collections.Counter = collections.Counter()
 
 
 @dataclasses.dataclass
@@ -51,6 +63,12 @@ class GPPosterior:
     chol: jax.Array                  # [N, N]
     alpha: jax.Array                 # [N, M]  (K + s2 I)^-1 (y - mean)/std
     kind: str = "rbf"
+    # cached L^-1 (inverse Cholesky factor) for the batched predict path
+    # (built lazily on the first predict_batch call; condition() rebuilds
+    # the posterior so the cache naturally resets).  The quadratic form is
+    # ||L^-1 ks||^2 — same conditioning as predict()'s triangular solve,
+    # unlike an explicit (K + s2 I)^-1 which underestimates tiny variances
+    linv: Optional[jax.Array] = None
 
 
 def _kernel(params: GPParams, x1, x2, kind: str) -> jax.Array:
@@ -141,18 +159,105 @@ def _predict(params_tree, x_train, y_mean, y_std, chol, alpha, x_star, kind):
     v = jax.scipy.linalg.solve_triangular(chol, ks, lower=True)  # [N, S]
     prior = jnp.exp(params.log_variance)
     var = jnp.maximum(prior - jnp.sum(v * v, axis=0), 1e-12)    # [S]
-    var = var * jnp.mean(y_std) ** 2                            # orig scale
+    # original scale PER OUTPUT: the outputs were standardised per column,
+    # so the latent variance maps back through each column's own y_std^2 —
+    # pooling the scale (mean(y_std)^2) is wrong for every column whenever
+    # the outputs differ in magnitude (growth rate vs mode frequency)
+    var = var[:, None] * (y_std ** 2)[None, :]                  # [S, M]
     return mean, var
 
 
 def predict(post: GPPosterior, x_star: jax.Array
             ) -> Tuple[jax.Array, jax.Array]:
-    """Posterior mean [S, M] and variance [S] at x_star (eqs. 3-4)."""
+    """Posterior mean [S, M] and per-output variance [S, M] at x_star
+    (eqs. 3-4); the latent variance is shared across outputs (one kernel),
+    scaled back by each column's standardisation std."""
     x_star = jnp.asarray(x_star, jnp.float32)
     if x_star.ndim == 1:
         x_star = x_star[None]
     return _predict(post.params.tree(), post.x, post.y_mean, post.y_std,
                     post.chol, post.alpha, x_star, post.kind)
+
+
+def _ensure_linv(post: GPPosterior) -> jax.Array:
+    """Cache L^-1 on the posterior: the batched predict path trades one
+    triangular inversion at first use for a predict that is a single
+    fused launch (no per-call triangular solve)."""
+    if post.linv is None:
+        n = post.x.shape[0]
+        post.linv = jax.scipy.linalg.solve_triangular(
+            post.chol, jnp.eye(n, dtype=jnp.float32), lower=True)
+    return post.linv
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _predict_batch(params_tree, x_train, y_mean, y_std, linv, alpha,
+                   x_star, kind):
+    params = GPParams.from_tree(params_tree)
+    ls = jnp.exp(jnp.clip(params.log_lengthscale, -5.0, 5.0))
+    var = jnp.exp(jnp.clip(params.log_variance, -8.0, 8.0))
+    mean_n, qf = kops.gp_predict(x_train, x_star, ls, var, alpha, linv, kind)
+    mean = y_mean[None] + mean_n * y_std[None]                  # [S, M]
+    lat = jnp.maximum(var - qf, 1e-12)                          # [S]
+    return mean, lat[:, None] * (y_std ** 2)[None, :]           # [S, M]
+
+
+def predict_batch(post: GPPosterior, x_star: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Bucket-padded batched posterior predict: mean [S, M], variance
+    [S, M].
+
+    Same contract as `predict`, but the query batch is padded up to a
+    fixed bucket size (`PREDICT_BUCKETS`; oversize batches are chunked at
+    the largest bucket) and evaluated through the one-launch
+    `kops.gp_predict` path (Pallas on TPU, fused XLA elsewhere).  Scoring
+    a whole dispatch queue therefore hits at most len(PREDICT_BUCKETS)
+    distinct compile shapes per training-set size, instead of one fresh
+    XLA compile per queue length — the per-task `predict` calls the
+    offload router would otherwise issue.
+    """
+    x_star = jnp.asarray(x_star, jnp.float32)
+    if x_star.ndim == 1:
+        x_star = x_star[None]
+    s = x_star.shape[0]
+    if s == 0:
+        m = post.y.shape[1]
+        return (jnp.zeros((0, m), jnp.float32),
+                jnp.zeros((0, m), jnp.float32))
+    linv = _ensure_linv(post)
+    tree = post.params.tree()
+    cap = PREDICT_BUCKETS[-1]
+    means, variances = [], []
+    for lo in range(0, s, cap):
+        chunk = x_star[lo:lo + cap]
+        bucket = next(b for b in PREDICT_BUCKETS if chunk.shape[0] <= b)
+        pad = bucket - chunk.shape[0]
+        if pad:
+            chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+        predict_batch_shapes[(int(post.x.shape[0]), bucket)] += 1
+        mean, var = _predict_batch(tree, post.x, post.y_mean, post.y_std,
+                                   linv, post.alpha, chunk, post.kind)
+        means.append(mean[:bucket - pad])
+        variances.append(var[:bucket - pad])
+    if len(means) == 1:
+        return means[0], variances[0]
+    return jnp.concatenate(means), jnp.concatenate(variances)
+
+
+def recondition(post: GPPosterior, x: jax.Array, y: jax.Array
+                ) -> GPPosterior:
+    """Posterior with the SAME hyperparameters on a replacement dataset
+    (recency-capped surrogates, sliding windows): one Cholesky rebuild,
+    no re-training."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    y2 = y if y.ndim == 2 else y[:, None]
+    mean = jnp.mean(y2, axis=0)
+    std = jnp.maximum(jnp.std(y2, axis=0), 1e-8)
+    chol = _chol_factor(post.params, x, post.kind)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), (y2 - mean) / std)
+    return GPPosterior(params=post.params, x=x, y=y2, y_mean=mean,
+                       y_std=std, chol=chol, alpha=alpha, kind=post.kind)
 
 
 def condition(post: GPPosterior, x_new: jax.Array, y_new: jax.Array
@@ -163,11 +268,5 @@ def condition(post: GPPosterior, x_new: jax.Array, y_new: jax.Array
     y_new2 = jnp.asarray(y_new, jnp.float32)
     if y_new2.ndim == 1:
         y_new2 = y_new2[:, None] if x_new.shape[0] > 1 else y_new2[None, :]
-    x = jnp.concatenate([post.x, x_new])
-    y = jnp.concatenate([post.y, y_new2])
-    mean = jnp.mean(y, axis=0)
-    std = jnp.maximum(jnp.std(y, axis=0), 1e-8)
-    chol = _chol_factor(post.params, x, post.kind)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), (y - mean) / std)
-    return GPPosterior(params=post.params, x=x, y=y, y_mean=mean, y_std=std,
-                       chol=chol, alpha=alpha, kind=post.kind)
+    return recondition(post, jnp.concatenate([post.x, x_new]),
+                       jnp.concatenate([post.y, y_new2]))

@@ -127,7 +127,7 @@ def bayesian_quadrature(model_fn: Callable[[np.ndarray], Tuple[float, float]],
                                 indexing="ij"), -1).reshape(-1, 2)
     for _ in range(n_adaptive):
         _, var = gp_lib.predict(post, cand)
-        nxt = cand[int(np.argmax(np.asarray(var)))]
+        nxt = cand[int(np.argmax(np.asarray(var)[:, 0]))]   # var is [S, M=1]
         post = gp_lib.condition(post, nxt[None], np.array([eval_node(nxt)]))
 
     mean, var = gp_lib.predict(post, cand)

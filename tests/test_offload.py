@@ -1,0 +1,456 @@
+"""Surrogate-offload routing + the GP correctness fixes behind it.
+
+Regression coverage for the three bugfixes (pooled multi-output variance
+scale, `flatten_parameters` returning [] for empty payloads, pooled
+straggler p95 across heterogeneous models) plus determinism and
+trust-gating of the offload path in both the discrete-event simulator
+and the live executor, and the bucketed-shape discipline of
+`gp.predict_batch`.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import Broker, TraceTask, simulate_cluster
+from repro.core import backends, metrics
+from repro.core.executor import Executor
+from repro.core.task import EvalRequest, EvalResult, LambdaModel
+from repro.sched.offload import SurrogateOffload, SurrogateOffloadPolicy
+from repro.sched.predictor import GPRuntimePredictor, flatten_parameters
+from repro.uq import gp as gp_lib
+
+
+# --------------------------------------------------------------------------
+# bugfix 1: per-output posterior variance
+# --------------------------------------------------------------------------
+def _analytic_1pt_posterior():
+    """A hand-built single-training-point GP with output scales 1 and 10,
+    so every quantity has a closed form."""
+    params = gp_lib.GPParams.init(1)            # ls=1, sf=1, noise=0.1
+    sf, s2 = 1.0, 0.01
+    jitter = s2 + 1e-5 * (sf + 1.0)
+    x = jnp.array([[0.0]], jnp.float32)
+    y = jnp.array([[1.0, 10.0]], jnp.float32)
+    y_mean = jnp.array([0.0, 0.0], jnp.float32)
+    y_std = jnp.array([1.0, 10.0], jnp.float32)
+    k11 = sf + jitter
+    chol = jnp.array([[np.sqrt(k11)]], jnp.float32)
+    yn = (y - y_mean) / y_std                   # [[1, 1]]
+    alpha = yn / k11
+    post = gp_lib.GPPosterior(params=params, x=x, y=y, y_mean=y_mean,
+                              y_std=y_std, chol=chol, alpha=alpha)
+    return post, sf, k11
+
+
+@pytest.mark.parametrize("predict_fn", [gp_lib.predict, gp_lib.predict_batch])
+def test_multioutput_variance_matches_analytic_1pt(predict_fn):
+    """Variance must be [S, M], each column scaled by ITS OWN y_std^2 —
+    the pooled mean(y_std)^2 scale was wrong for every column."""
+    post, sf, k11 = _analytic_1pt_posterior()
+    xs = np.array([[0.0], [0.7]], np.float32)
+    mean, var = predict_fn(post, xs)
+    assert mean.shape == (2, 2) and var.shape == (2, 2)
+    kstar = np.exp(-0.5 * xs[:, 0] ** 2)
+    latent = np.maximum(sf - kstar ** 2 / k11, 1e-12)
+    expected = latent[:, None] * np.array([1.0, 100.0])[None, :]
+    np.testing.assert_allclose(np.asarray(var), expected,
+                               rtol=1e-4, atol=1e-6)
+    expected_mean = (kstar / k11)[:, None] * np.array([1.0, 10.0])[None, :]
+    np.testing.assert_allclose(np.asarray(mean), expected_mean,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_multioutput_variance_scales_per_output_after_fit():
+    """With y2 = 100*y1 the stds differ by exactly 100x, so correct
+    per-output variances differ by exactly 1e4 — pooling cannot."""
+    rng = np.random.default_rng(0)
+    x = rng.random((20, 2)).astype(np.float32)
+    y1 = np.sin(3 * x[:, 0]) + x[:, 1]
+    y = np.stack([y1, 100.0 * y1], 1)
+    post = gp_lib.fit(x, y, steps=60)
+    _, var = gp_lib.predict(post, rng.random((5, 2)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(var)[:, 1],
+                               1e4 * np.asarray(var)[:, 0], rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# bugfix 2: empty payloads must not poison the GP predictor's feature dim
+# --------------------------------------------------------------------------
+def test_flatten_parameters_empty_is_none():
+    assert flatten_parameters([]) is None
+    assert flatten_parameters([[]]) is None
+    assert flatten_parameters(((),)) is None
+    assert flatten_parameters([[1.0, 2.0]]) == [1.0, 2.0]
+    assert flatten_parameters("nope") is None
+
+
+def test_gp_predictor_not_poisoned_by_empty_payload():
+    pred = GPRuntimePredictor(min_fit=4, fit_steps=20)
+    empty = EvalRequest("m", [[]])
+    for _ in range(3):
+        pred.observe(empty, 1.0)               # degenerate: must be skipped
+    assert pred._dim is None                   # dim NOT locked to 0
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        r = EvalRequest("m", [rng.random(2).tolist()])
+        pred.observe(r, 2.0)
+    assert pred._dim == 2                      # real features won the dim
+    assert pred._post is not None              # ...and the GP actually fit
+    est = pred.predict(EvalRequest("m", [rng.random(2).tolist()]))
+    assert est == pytest.approx(2.0, rel=0.5)
+
+
+# --------------------------------------------------------------------------
+# bugfix 3: straggler threshold is per model, pooled only as fallback
+# --------------------------------------------------------------------------
+def test_straggler_threshold_is_per_model():
+    """60 fast completions + 3 slow ones: the pooled p95 is the FAST
+    runtime, so the old pooled cutoff would speculatively re-issue every
+    healthy slow-model task; the per-model cutoff must not."""
+    with Executor({}, n_workers=0, straggler_factor=3.0,
+                  straggler_min_completed=3) as ex:
+        with ex._lock:
+            for i in range(60):
+                tid = f"fast-{i}"
+                ex._requests[tid] = EvalRequest("fast", [[0.0]], task_id=tid)
+                ex._results[tid] = EvalResult(task_id=tid, status="ok",
+                                              compute_t=0.01)
+            for i in range(3):
+                tid = f"slow-{i}"
+                ex._requests[tid] = EvalRequest("slow", [[0.0]], task_id=tid)
+                ex._results[tid] = EvalResult(task_id=tid, status="ok",
+                                              compute_t=1.0)
+            now = time.monotonic()
+            slow_run = EvalRequest("slow", [[0.0]], task_id="slow-run")
+            fast_run = EvalRequest("fast", [[0.0]], task_id="fast-run")
+            # both have been running 0.5 s: far beyond 3x the fast p95
+            # (0.03 s), well within 3x the slow p95 (3 s)
+            ex._running["slow-run"] = (slow_run, None, now - 0.5, 1)
+            ex._running["fast-run"] = (fast_run, None, now - 0.5, 1)
+        ex._straggler_check(now)
+        assert fast_run.config.get("_speculated")      # true straggler
+        assert not slow_run.config.get("_speculated")  # healthy slow model
+
+
+def test_straggler_pooled_fallback_for_unknown_model():
+    """A model with too few completions of its own still gets straggler
+    protection from the pooled p95."""
+    with Executor({}, n_workers=0, straggler_factor=3.0,
+                  straggler_min_completed=3) as ex:
+        with ex._lock:
+            for i in range(10):
+                tid = f"fast-{i}"
+                ex._requests[tid] = EvalRequest("fast", [[0.0]], task_id=tid)
+                ex._results[tid] = EvalResult(task_id=tid, status="ok",
+                                              compute_t=0.01)
+            now = time.monotonic()
+            new_run = EvalRequest("new-model", [[0.0]], task_id="new-run")
+            ex._running["new-run"] = (new_run, None, now - 0.5, 1)
+        ex._straggler_check(now)
+        assert new_run.config.get("_speculated")
+
+
+# --------------------------------------------------------------------------
+# predict_batch: bucketed padding caps the compile-shape count
+# --------------------------------------------------------------------------
+def test_predict_batch_bucket_shape_discipline():
+    rng = np.random.default_rng(2)
+    x = rng.random((24, 3)).astype(np.float32)
+    y = np.stack([np.sin(2 * x[:, 0]), x[:, 1] - x[:, 2]], 1)
+    post = gp_lib.fit(x, y, steps=40)
+
+    gp_lib.predict_batch_shapes.clear()
+    total = 0
+    for size in (1, 2, 9, 40, 64, 65, 131, 300, 512):  # a queue's lifetime
+        xs = rng.random((size, 3)).astype(np.float32)
+        mean_b, var_b = gp_lib.predict_batch(post, xs)
+        assert mean_b.shape == (size, 2) and var_b.shape == (size, 2)
+        total += size
+    assert total >= 512                        # scored a 512+-task queue
+    # bucketed padding: at most 3 distinct launch shapes, never one per size
+    assert len(gp_lib.predict_batch_shapes) <= 3
+
+    xs = rng.random((37, 3)).astype(np.float32)
+    mean_b, var_b = gp_lib.predict_batch(post, xs)
+    mean_p, var_p = gp_lib.predict(post, xs)
+    np.testing.assert_allclose(np.asarray(mean_b), np.asarray(mean_p),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(var_b), np.asarray(var_p),
+                               rtol=5e-2, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# offload policy: trust gating
+# --------------------------------------------------------------------------
+def _toy_surrogate(seed=0, n=40, **kw):
+    rng = np.random.default_rng(seed)
+    xs = rng.random((n, 2)).astype(np.float32)
+    ys = np.stack([np.sin(3 * xs[:, 0]) + xs[:, 1],
+                   100.0 * np.cos(2 * xs[:, 1])], 1)
+    post = gp_lib.fit(xs, ys, steps=80)
+    kw.setdefault("runtime_budget_s", 30.0)
+    kw.setdefault("sd_threshold", 0.2)
+    return SurrogateOffload(post, **kw)
+
+
+def test_offload_gates():
+    sur = _toy_surrogate()
+    trusted_long = EvalRequest("m", [[0.5, 0.5]], time_request=100.0)
+    trusted_short = EvalRequest("m", [[0.5, 0.5]], time_request=1.0)
+    untrusted_long = EvalRequest("m", [[5.0, 5.0]], time_request=100.0)
+    unflat_long = EvalRequest("m", [["x"]], time_request=100.0)
+    assert sur.decide(trusted_long, cost=100.0)
+    assert trusted_long.config.get("_surrogate") is True
+    assert not sur.decide(trusted_short, cost=1.0)      # cost gate
+    assert not sur.decide(untrusted_long, cost=100.0)   # variance gate
+    assert not sur.decide(unflat_long, cost=100.0)      # not in theta space
+    st = sur.stats()
+    assert st.n_considered == 4 and st.n_offloaded == 1
+    assert st.cpu_seconds_avoided > 0
+    assert sum(st.sd_histogram["counts"]) == 2          # two trust checks
+    # a re-decision that says "no" clears a stale flag
+    assert not sur.decide(trusted_long, cost=1.0)
+    assert "_surrogate" not in trusted_long.config
+
+
+def test_offload_scoped_to_model():
+    """A scoped engine must neither serve another model from the wrong
+    surrogate nor condition on its completions."""
+    sur = _toy_surrogate(model_name="gs2")
+    other = EvalRequest("other", [[0.5, 0.5]], time_request=100.0)
+    mine = EvalRequest("gs2", [[0.5, 0.5]], time_request=100.0)
+    assert not sur.decide(other, cost=100.0)
+    assert sur.decide(mine, cost=100.0)
+    n_before = int(sur.posterior.x.shape[0])
+    sur.condition_every = 1
+    sur.observe([[0.5, 0.5]], [[1.0, 1.0]], model_name="other")
+    assert int(sur.posterior.x.shape[0]) == n_before   # ignored
+    sur.observe([[0.5, 0.5]], [[1.0, 1.0]], model_name="gs2")
+    assert int(sur.posterior.x.shape[0]) == n_before + 1
+
+
+def test_offload_no_surrogate_pin():
+    """`_no_surrogate` (set after a surrogate failure / by straggler
+    speculation) pins a task to the real path across re-decisions."""
+    sur = _toy_surrogate()
+    req = EvalRequest("m", [[0.5, 0.5]], time_request=100.0)
+    assert sur.decide(req, cost=100.0)
+    req.config["_no_surrogate"] = True
+    assert not sur.decide(req, cost=100.0)
+    assert "_surrogate" not in req.config
+
+
+def test_offload_credit_idempotent_across_requeues():
+    """A requeued attempt re-decides but must not double-count the task
+    or its avoided-CPU credit; a later 'no' refunds the credit."""
+    sur = _toy_surrogate()
+    req = EvalRequest("m", [[0.5, 0.5]], time_request=100.0)
+    assert sur.decide(req, cost=100.0)
+    assert sur.decide(req, cost=100.0)         # requeue after a crash
+    st = sur.stats()
+    assert st.n_offloaded == 1
+    assert st.cpu_seconds_avoided == pytest.approx(100.0 - sur.latency_s)
+    # the retry lands on the real path after all: credit refunded
+    req.config["_no_surrogate"] = True
+    assert not sur.decide(req, cost=100.0)
+    st = sur.stats()
+    assert st.n_offloaded == 0
+    assert st.cpu_seconds_avoided == pytest.approx(0.0)
+
+
+def test_offload_observe_caps_training_set():
+    """Conditioning keeps the most recent `max_points` observations —
+    the posterior must not grow (and recompile) without bound."""
+    sur = _toy_surrogate(condition_every=1, max_points=42)
+    for i in range(6):
+        x = 0.01 * i
+        sur.observe([[x, x]], [[1.0, 1.0]], model_name=None)
+    assert int(sur.posterior.x.shape[0]) == 42
+    # the newest observation survived the trim
+    assert float(sur.posterior.x[-1, 0]) == pytest.approx(0.05)
+
+
+def test_offload_unarmed_engine_is_passthrough():
+    sur = SurrogateOffload()                   # no posterior
+    req = EvalRequest("m", [[0.5, 0.5]], time_request=1000.0)
+    assert not sur.decide(req, cost=1000.0)
+    pol = SurrogateOffloadPolicy(policy="fcfs", surrogate=sur)
+    pol.push(req, 1)
+    assert len(pol) == 1 and pol.pop() == (req, 1)
+
+
+def test_offload_policy_fast_lane():
+    pol = SurrogateOffloadPolicy(policy="fcfs", surrogate=_toy_surrogate())
+    normal = EvalRequest("m", [[5.0, 5.0]], time_request=100.0)
+    offl = EvalRequest("m", [[0.5, 0.5]], time_request=100.0)
+    pol.push(normal, 1)
+    pol.push(offl, 1)
+    assert len(pol) == 2
+    # the offloaded task pops FIRST even though it arrived second
+    assert pol.pop()[0] is offl
+    assert pol.pop()[0] is normal
+
+
+# --------------------------------------------------------------------------
+# offload in the simulator: determinism + accounting
+# --------------------------------------------------------------------------
+def _offload_trace(n=30, seed=7):
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(4.0))
+        lng = rng.uniform() < 0.4
+        theta = rng.random(2) if rng.uniform() < 0.7 else 3.0 + rng.random(2)
+        out.append(TraceTask(t=t, runtime=90.0 if lng else 3.0,
+                             model_name="gs2",
+                             time_request=90.0 if lng else 3.0,
+                             parameters=[[float(theta[0]),
+                                          float(theta[1])]]))
+    return out
+
+
+def _run_sim_offload(trace, seed=0):
+    sur = _toy_surrogate(latency_s=0.05)
+    broker = Broker(policy="fcfs", surrogate=sur)
+    res = simulate_cluster(backends.get("hq"), trace, broker=broker,
+                           n_workers=3, seed=seed)
+    return res, sur
+
+
+def test_sim_offload_deterministic_and_saves_cpu():
+    trace = _offload_trace()
+    base = simulate_cluster(backends.get("hq"), trace, n_workers=3, seed=0)
+    res1, sur1 = _run_sim_offload(trace)
+    res2, sur2 = _run_sim_offload(trace)
+    key = lambda r: (r.task_id, r.start_t, r.end_t, r.worker, r.status)  # noqa: E731
+    assert [key(r) for r in res1.records] == [key(r) for r in res2.records]
+    assert sur1.stats().n_offloaded == sur2.stats().n_offloaded > 0
+    assert res1.summary()["n_ok"] == res1.summary()["n_tasks"]
+    # offloaded tasks ran at surrogate latency on the virtual allocation
+    offloaded = [r for r in res1.records if r.worker.startswith("alloc0-")]
+    assert len(offloaded) == sur1.stats().n_offloaded
+    assert all(r.cpu_time == pytest.approx(0.05) for r in offloaded)
+    # ...and the run burned strictly less CPU than the baseline
+    assert metrics.total_cpu_time(res1.records) < \
+        0.8 * metrics.total_cpu_time(base.records)
+    # the virtual allocation bills zero node-seconds
+    virt = [a for a in res1.allocations if a.alloc_id == 0]
+    assert virt and virt[0].node_seconds == 0.0
+
+
+def test_sim_offload_with_autoalloc_ignores_virtual():
+    """The autoallocator must neither drain the virtual allocation nor
+    count it as capacity."""
+    from repro.cluster import AutoAllocConfig
+    trace = _offload_trace(n=20, seed=3)
+    sur = _toy_surrogate()
+    broker = Broker(policy="fcfs", surrogate=sur)
+    res = simulate_cluster(
+        backends.get("hq"), trace, broker=broker,
+        autoalloc=AutoAllocConfig(workers_per_alloc=2, walltime_s=600.0,
+                                  backlog_high_s=20.0, backlog_low_s=5.0,
+                                  idle_drain_s=20.0, hysteresis_s=5.0),
+        seed=0)
+    assert res.summary()["n_ok"] == res.summary()["n_tasks"]
+    assert sur.stats().n_offloaded > 0
+    assert all(d["alloc_id"] != 0 for d in res.decisions)
+
+
+# --------------------------------------------------------------------------
+# offload in the live executor
+# --------------------------------------------------------------------------
+def _truth(x):
+    return [float(np.sin(3 * x[0]) + x[1]), float(100.0 * np.cos(2 * x[1]))]
+
+
+def _slow_factory():
+    def fn(parameters, config):
+        time.sleep(0.1)
+        return [_truth(np.asarray(parameters[0], float))]
+    return LambdaModel("slow", fn, 2, 2)
+
+
+def test_live_offload_policy_mode():
+    rng = np.random.default_rng(4)
+    sur = _toy_surrogate(latency_s=0.0)
+    pol = SurrogateOffloadPolicy(policy="fcfs", surrogate=sur)
+    with Executor({"slow": _slow_factory}, n_workers=2, policy=pol) as ex:
+        trusted = [EvalRequest("slow", [rng.random(2).tolist()],
+                               time_request=100.0) for _ in range(4)]
+        untrusted = [EvalRequest("slow", [[4.0, 4.0]], time_request=100.0)]
+        res = ex.run_all(trusted + untrusted, timeout=60)
+        assert all(r.status == "ok" for r in res)
+        off = [r for r in res if r.worker.endswith("-surrogate")]
+        assert len(off) == 4                   # every trusted task offloaded
+        assert not res[-1].worker.endswith("-surrogate")
+        # surrogate answers are near the truth (normalised by output scale)
+        for r, rq in zip(res[:4], trusted):
+            want = np.asarray(_truth(np.asarray(rq.parameters[0])))
+            err = np.abs(np.asarray(r.value[0]) - want) / np.array([1., 100.])
+            assert np.all(err < 0.25), (r.value, want)
+        m = ex.metrics()
+        assert m["offload"]["n_offloaded"] == 4
+        assert m["offload"]["cpu_seconds_avoided"] > 0
+
+
+def test_live_offload_broker_mode():
+    rng = np.random.default_rng(5)
+    sur = _toy_surrogate(latency_s=0.0)
+    broker = Broker(policy="fcfs", surrogate=sur)
+    with Executor({"slow": _slow_factory}, n_workers=2,
+                  cluster=broker) as ex:
+        deadline = time.monotonic() + 5.0
+        while ex.n_workers() < 3 and time.monotonic() < deadline:
+            time.sleep(0.02)                   # virtual worker spin-up
+        reqs = [EvalRequest("slow", [rng.random(2).tolist()],
+                            time_request=100.0) for _ in range(4)]
+        reqs += [EvalRequest("slow", [[4.0, 4.0]], time_request=100.0)]
+        res = ex.run_all(reqs, timeout=60)
+        assert all(r.status == "ok" for r in res)
+        off = [r for r in res if r.worker.endswith("-surrogate")]
+        assert len(off) == 4
+        # the virtual allocation billed nothing
+        virt = [a for a in ex.allocation_records() if a.alloc_id == 0]
+        assert virt and virt[0].node_seconds == 0.0
+
+
+def test_live_offload_virtual_worker_respawns_after_crash():
+    """The surrogate queue is served only by virtual workers; a crashed
+    one must be replaced or trusted tasks would strand there forever."""
+    rng = np.random.default_rng(6)
+    sur = _toy_surrogate(latency_s=0.0)
+    broker = Broker(policy="fcfs", surrogate=sur)
+    with Executor({"slow": _slow_factory}, n_workers=1,
+                  cluster=broker) as ex:
+        deadline = time.monotonic() + 5.0
+        while ex.n_workers() < 2 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        virt_idx = next(i for i, w in enumerate(ex.workers)
+                        if w.alloc is not None and w.alloc.virtual)
+        ex.kill_worker(virt_idx)
+        res = ex.run_all([EvalRequest("slow", [rng.random(2).tolist()],
+                                      time_request=100.0)
+                          for _ in range(3)], timeout=30)
+        assert all(r.status == "ok" for r in res)
+        assert sum(r.worker.endswith("-surrogate") for r in res) == 3
+
+
+def test_live_offload_real_runs_condition_surrogate():
+    """An untrusted theta runs the real model; its completion conditions
+    the GP so the SAME theta becomes trusted."""
+    sur = _toy_surrogate(latency_s=0.0, condition_every=1)
+    pol = SurrogateOffloadPolicy(policy="fcfs", surrogate=sur)
+    probe = [2.0, 2.0]
+    with Executor({"slow": _slow_factory}, n_workers=1, policy=pol) as ex:
+        sd_before = float(sur.trust_sd([probe])[0])
+        assert sd_before > sur.sd_threshold
+        r = ex.run_all([EvalRequest("slow", [probe],
+                                    time_request=100.0)], timeout=60)[0]
+        assert r.status == "ok" and not r.worker.endswith("-surrogate")
+        deadline = time.monotonic() + 5.0
+        while float(sur.trust_sd([probe])[0]) > sur.sd_threshold \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert float(sur.trust_sd([probe])[0]) <= sur.sd_threshold
