@@ -1,0 +1,94 @@
+"""Benchmark-job guard: sim/live lifecycle parity on seeded traces.
+
+The elasticity and offload benchmarks are only meaningful if the
+simulator that produces their numbers is the same machine as the live
+executor.  This check drives several seeded scenarios through BOTH
+adapters of the shared `LifecycleStepper` — `simulate_cluster` and
+`replay_live` (the real `Executor` on a virtual clock) — and fails the
+build on ANY divergence in allocation decisions, spawn/retire event
+sequences, terminal task records, or allocation billing.
+
+    PYTHONPATH=src python benchmarks/parity.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from repro.cluster import (AutoAllocConfig, bimodal_trace, bursty_trace,
+                           run_parity)
+from repro.core import backends
+
+
+def _elastic_cfg(**kw) -> AutoAllocConfig:
+    base = dict(workers_per_alloc=2, walltime_s=300.0, backlog_high_s=30.0,
+                backlog_low_s=5.0, max_pending=2, max_allocations=4,
+                min_allocations=0, idle_drain_s=20.0, hysteresis_s=5.0)
+    base.update(kw)
+    return AutoAllocConfig(**base)
+
+
+def scenarios(quick: bool) -> List[Tuple[str, Dict]]:
+    n = 20 if quick else 60
+    bursts = 2 if quick else 4
+    out: List[Tuple[str, Dict]] = [
+        ("static-pool", dict(
+            trace=bimodal_trace(n=n, seed=4), n_workers=3, seed=9)),
+        ("elastic-autoalloc", dict(
+            trace=bursty_trace(n_bursts=bursts, burst_size=8, gap_s=300.0,
+                               runtime_s=10.0, seed=1),
+            autoalloc=_elastic_cfg(), max_workers=16, seed=1)),
+        ("walltime-kill", dict(
+            trace=bursty_trace(n_bursts=1, burst_size=4, burst_span_s=1.0,
+                               runtime_s=40.0, jitter=0.0, seed=0),
+            autoalloc=_elastic_cfg(workers_per_alloc=1, walltime_s=60.0,
+                                   idle_drain_s=50.0),
+            max_attempts=6, seed=3)),
+        ("capped-grants", dict(
+            trace=bursty_trace(n_bursts=1, burst_size=16, burst_span_s=2.0,
+                               runtime_s=30.0, seed=5),
+            autoalloc=_elastic_cfg(workers_per_alloc=8, backlog_high_s=5.0,
+                                   max_allocations=8, max_pending=4),
+            max_workers=5, seed=5)),
+    ]
+    if not quick:
+        out.append(("terminal-failures", dict(
+            trace=bursty_trace(n_bursts=1, burst_size=6, burst_span_s=1.0,
+                               runtime_s=50.0, jitter=0.0, seed=0),
+            n_workers=1, walltime_s=60.0, max_attempts=1, seed=0)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller traces (CI smoke size)")
+    args = ap.parse_args(argv)
+
+    spec = backends.get("hq")
+    failures = 0
+    for name, kw in scenarios(args.quick):
+        t0 = time.perf_counter()
+        rep = run_parity(spec, **kw)
+        dt = time.perf_counter() - t0
+        n_tasks = len(rep.sim.records)
+        n_dec = len(rep.sim.decisions)
+        status = "ok" if rep.ok else f"{len(rep.divergences)} DIVERGENCES"
+        print(f"{name:<20} tasks={n_tasks:<4} decisions={n_dec:<4} "
+              f"events={len(rep.sim.events):<4} [{dt * 1e3:6.1f} ms] "
+              f"{status}")
+        if not rep.ok:
+            failures += 1
+            for d in rep.divergences[:10]:
+                print(f"    {d}")
+    verdict = "PASS" if failures == 0 else "FAIL"
+    print(f"\n{verdict}: sim and live lifecycle "
+          f"{'agree on every scenario' if failures == 0 else 'DIVERGED'} "
+          f"(one stepper, two adapters)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

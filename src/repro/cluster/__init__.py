@@ -6,12 +6,31 @@ tracks backlog *cost* in seconds of queued work (`AutoAllocator`), and a
 cluster-level broker holding one scheduling policy per allocation
 (`Broker`, registered as ``policy="broker"``).  The same objects drive
 the deterministic `simulate_cluster` discrete-event mode and the live
-`Executor` (``Executor(..., autoalloc=AutoAllocConfig(...))``).
+`Executor` (``Executor(..., autoalloc=AutoAllocConfig(...))``) — and the
+allocation-lifecycle *rules* (capped grants, walltime kills, drained-dry
+termination, autoalloc ordering) live once, in
+`repro.cluster.stepper.LifecycleStepper`, with both drivers as thin
+adapters.  `repro.cluster.parity` proves it differentially.
 """
 from repro.cluster.allocation import (DRAINING, EXPIRED, PENDING, QUEUED,
                                       RUNNING, Allocation)
 from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
 from repro.cluster.broker import Broker
 from repro.cluster.sim import ClusterResult, simulate_cluster
+from repro.cluster.stepper import LifecycleStepper
 from repro.cluster.traces import (TraceTask, bimodal_trace, bursty_trace,
                                   trace_span)
+
+# the parity harness imports repro.core.executor at module level (which
+# imports repro.cluster only lazily, inside functions) — re-export it
+# lazily so this package's import graph never depends on the executor
+# module and the layering cannot go circular
+_PARITY_EXPORTS = ("ParityReport", "VirtualClock", "compare_results",
+                   "replay_live", "run_parity")
+
+
+def __getattr__(name):
+    if name in _PARITY_EXPORTS:
+        from repro.cluster import parity
+        return getattr(parity, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

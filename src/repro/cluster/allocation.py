@@ -19,6 +19,12 @@ live `Executor` share one notion of what an allocation costs to obtain.
 Allocations are clock-agnostic: every transition takes ``now`` explicitly,
 so the same object works on the simulator's virtual clock and the live
 executor's ``time.monotonic()`` clock.
+
+This module owns the *states*; the rules for WHEN transitions are driven
+(grant-time worker spawn under the `max_workers` cap, walltime-kill
+requeue/fail, drained-dry termination, autoalloc ordering) live once in
+`repro.cluster.stepper.LifecycleStepper` — never call `tick`/`terminate`
+from a new driving loop; adapt the stepper instead.
 """
 from __future__ import annotations
 

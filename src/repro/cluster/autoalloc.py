@@ -19,7 +19,11 @@ allocation churn itself stays cheap:
 
 The allocator is pure decision logic over (now, broker state, busy map):
 the SAME instance drives the deterministic `simulate_cluster` loop and
-the live `Executor` monitor thread — no forked decision code.
+the live `Executor` monitor thread — no forked decision code.  Both
+drivers invoke `step` through `repro.cluster.stepper.LifecycleStepper`,
+which fixes its place in the tick: AFTER allocation state transitions,
+so scaling decisions always see post-grant capacity (the live path once
+stepped it first and sized against stale capacity).
 """
 from __future__ import annotations
 

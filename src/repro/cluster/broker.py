@@ -10,7 +10,9 @@ The Broker IS a `SchedulingPolicy` (push/pop/pending/len), so it slots
 into every dispatch layer unchanged: the live `Executor` uses it as its
 queue (workers carry their `alloc_id` in the `WorkerView`), and the
 deterministic `simulate_cluster` loop drives the same object on a
-virtual clock.  Registered as ``policy="broker"`` for name-based config.
+virtual clock — in both cases with allocation lifecycle transitions
+applied by the shared `repro.cluster.stepper.LifecycleStepper`.
+Registered as ``policy="broker"`` for name-based config.
 
 Routing, in order:
   1. model affinity — an open allocation that has run this model before

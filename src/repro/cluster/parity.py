@@ -1,0 +1,374 @@
+"""Differential parity harness: one trace, two drivers, one stepper.
+
+The repo's headline numbers are credible only because the simulated
+elasticity runs and the live executor exercise the same Broker /
+AutoAllocator / LifecycleStepper objects.  This module makes that claim
+*testable*: `replay_live` drives the REAL `Executor` machinery — its
+broker, allocator, shared `LifecycleStepper`, `_complete`/`_fail`
+bookkeeping and allocation records — on a virtual clock with the worker
+threads replaced by a deterministic replay loop (the harness plays the
+workers: pop, mark running, complete at ``start + init + compute`` in
+virtual seconds, using the same `BackendSpec` cost model as the
+simulator).  `run_parity` then runs the SAME seeded trace + config
+through `simulate_cluster` and `replay_live` and diffs everything the
+paper's analysis depends on:
+
+  * per-task terminal status, attempts, and timestamps (including the
+    canonical killed-task record shape: ``start_t == end_t``, zero CPU);
+  * the allocator decision log (action, allocation id, time, backlog);
+  * the stepper's spawn / kill / drain-dry / cancel event sequence;
+  * allocation records (group sizes, grant/termination times, billing).
+
+An empty divergence list is the no-forked-logic guarantee on that trace;
+`tests/test_parity.py` asserts it across static, elastic, walltime-kill,
+drained-dry and surrogate scenarios, and `benchmarks/parity.py --quick`
+keeps it honest in CI.
+
+Scope note: the harness replays *lifecycle and scheduling*, not model
+execution — completions return placeholder values, so a live run that
+conditions a real GP surrogate on completion values has no simulator
+counterpart (the sim never produces values).  Parity scenarios involving
+offload therefore use deterministic stub engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Set
+
+from repro.cluster.allocation import RUNNING, Allocation
+from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
+from repro.cluster.broker import Broker
+from repro.cluster.sim import (ClusterResult, fill_lost, next_event_time,
+                               simulate_cluster, trace_requests)
+from repro.cluster.traces import TraceTask
+from repro.core.backends import BackendSpec
+from repro.core.executor import Executor
+from repro.core.task import EvalRequest, EvalResult
+from repro.sched.policy import WorkerView
+from repro.sched.registry import make_predictor
+
+
+class VirtualClock:
+    """Monotonic virtual time: `Executor(clock=...)` reads it, the
+    replay loop advances it event by event."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float) -> float:
+        self.t = max(self.t, float(t))
+        return self.t
+
+
+class _ReplayExecutor(Executor):
+    """The real executor, minus thread startup: worker objects exist and
+    own their allocations, but the replay loop plays them."""
+
+    _threaded = False
+
+
+@dataclasses.dataclass
+class _Inflight:
+    wid: int
+    req: EvalRequest
+    attempt: int
+    mark_t: float        # dispatch decision time (busy-billing base)
+    start_t: float       # mark_t + dispatch latency
+    end_t: float
+    init: float
+    compute: float
+    wname: str
+
+
+def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
+                policy: Any = "fcfs", predictor: Any = None,
+                autoalloc: Any = None, broker: Optional[Broker] = None,
+                allocator: Optional[AutoAllocator] = None,
+                n_workers: int = 4,
+                walltime_s: Optional[float] = None,
+                max_workers: Optional[int] = None,
+                seed: int = 0, tick_s: float = 5.0,
+                max_attempts: int = 3,
+                max_t: float = 1e9) -> ClusterResult:
+    """Run one trace through a real `Executor` on a virtual clock.
+
+    Same signature and semantics as `simulate_cluster`; the difference
+    is WHICH adapter wraps the shared `LifecycleStepper`: here it is the
+    executor's own (`_cluster_step`, thread-table spawn/retire, the
+    `_complete`/`_record_expired` result paths), pumped deterministically
+    in the simulator's event order — arrivals, completions, lifecycle
+    step, dispatch."""
+    if broker is None:
+        broker = Broker(predictor=make_predictor(predictor), policy=policy)
+    if allocator is None and autoalloc is not None:
+        if isinstance(autoalloc, AutoAllocator):
+            allocator = autoalloc
+        else:
+            cfg = (autoalloc if isinstance(autoalloc, AutoAllocConfig)
+                   else AutoAllocConfig(**autoalloc))
+            allocator = AutoAllocator(cfg, spec=spec, seed=seed)
+
+    arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
+
+    clock = VirtualClock(0.0)
+    factories = {tt.model_name: _never_called for tt in arrivals}
+    ex = _ReplayExecutor(
+        factories,
+        n_workers=(0 if allocator is not None else n_workers),
+        max_attempts=max_attempts, max_workers=max_workers,
+        allocation_s=walltime_s, cluster=broker, autoalloc=allocator,
+        clock=clock, monitor_interval=None)
+
+    warm: Dict[int, Set[str]] = {}
+    inflight: Dict[int, _Inflight] = {}
+    arr_i = 0
+    now = 0.0
+    next_tick = 0.0
+    n_final = 0                                # tasks with a terminal result
+
+    max_iters = 10_000 + 1_000 * len(reqs)
+    iters = 0
+    while n_final < len(reqs):
+        iters += 1
+        if iters > max_iters:
+            raise RuntimeError(
+                f"replay_live made no progress after {max_iters} events "
+                f"({n_final}/{len(reqs)} tasks done)")
+        # ---- next event time (the sim's candidate set, shared code) ---
+        nxt = next_event_time(arrivals, arr_i,
+                              (e.end_t for e in inflight.values()),
+                              broker, allocator is not None, next_tick)
+        if nxt is None:
+            break
+        now = max(now, nxt)
+        if now > max_t:
+            break
+        clock.advance_to(now)
+        if now >= next_tick:
+            next_tick = now + tick_s
+
+        # ---- arrivals --------------------------------------------------
+        while arr_i < len(arrivals) and arrivals[arr_i].t <= now:
+            ex.submit(reqs[arr_i])             # stamps submit_t = clock()
+            arr_i += 1
+
+        # ---- completions (before walltime kills, as in the sim) -------
+        done = sorted((e for e in inflight.values() if e.end_t <= now),
+                      key=lambda e: (e.end_t, e.wid))
+        for e in done:
+            ex._complete(e.req, EvalResult(
+                task_id=e.req.task_id, value=[[0.0]], status="ok",
+                worker=e.wname, attempts=e.attempt,
+                submit_t=e.req.submit_t, dispatch_t=e.mark_t,
+                start_t=e.start_t, end_t=e.end_t,
+                compute_t=e.compute, init_t=e.init))
+            del inflight[e.wid]
+            n_final += 1
+
+        # ---- lifecycle: the executor's own stepper adapter ------------
+        ex._cluster_step()
+        # workers the stepper retired took their in-flight tasks with
+        # them: requeued (still pending, not counted) or terminally
+        # failed by the shared kill rule (a 'failed' result landed)
+        for wid in [wid for wid, e in inflight.items()
+                    if e.req.task_id not in ex._running]:
+            res = ex._results.get(inflight[wid].req.task_id)
+            if res is not None and res.status == "failed":
+                n_final += 1
+            del inflight[wid]
+
+        # ---- dispatch (sim order: by allocation, then worker id) ------
+        for w in sorted(ex.workers, key=lambda w: (w.alloc.alloc_id,
+                                                   w.wid)):
+            if w.wid in inflight or w.alloc.state != RUNNING:
+                continue
+            mine = warm.setdefault(w.wid, set())
+            view = WorkerView(wid=w.wid, warm_models=frozenset(mine),
+                              budget_left=w.alloc.budget_left(now),
+                              alloc_id=w.alloc.alloc_id)
+            with ex._cv:
+                item = ex.policy.pop(view)
+                while item is not None and \
+                        ex._already_done(item[0].task_id):
+                    item = ex.policy.pop(view)   # as Worker.run drops them
+            if item is None:
+                continue
+            req, attempt = item
+            ex._mark_running(req, w, attempt)
+            if req.config.get("_surrogate"):
+                compute = float(getattr(broker.surrogate, "latency_s",
+                                        0.05))
+                init = 0.0
+                if hasattr(broker.surrogate, "note_served"):
+                    broker.surrogate.note_served()
+                wname = f"{w.name}-surrogate"
+            else:
+                compute = runtimes[req.task_id]
+                init = 0.0 if req.model_name in mine else spec.server_init
+                mine.add(req.model_name)
+                wname = w.name
+            start = now + spec.dispatch_latency
+            inflight[w.wid] = _Inflight(
+                wid=w.wid, req=req, attempt=attempt, mark_t=now,
+                start_t=start, end_t=start + init + compute,
+                init=init, compute=compute, wname=wname)
+
+    # ---- wind down (mirrors the sim's) --------------------------------
+    end = max((r.end_t for r in ex._results.values()), default=now)
+    with ex._cv:
+        ex._stepper.release(end)
+    records = ex.records()
+    fill_lost(records, reqs, end)
+    alloc_records = sorted((a.record() for a in ex._retired_allocs),
+                           key=lambda r: r.alloc_id)
+    decisions = (list(allocator.decisions) if allocator is not None
+                 else [])
+    events = list(ex._stepper.events)
+    ex.shutdown()
+    return ClusterResult(records=records, allocations=alloc_records,
+                         decisions=decisions, events=events)
+
+
+def _never_called():
+    raise AssertionError("replay_live plays the workers itself: no model "
+                         "server is ever instantiated")
+
+
+# ---------------------------------------------------------------------------
+# the differential check
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ParityReport:
+    sim: ClusterResult
+    live: ClusterResult
+    divergences: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.divergences
+
+
+def _close(a: float, b: float, tol: float) -> bool:
+    if math.isnan(a) and math.isnan(b):
+        return True
+    return math.isclose(a, b, rel_tol=tol, abs_tol=tol)
+
+
+def compare_results(sim: ClusterResult, live: ClusterResult,
+                    tol: float = 1e-9) -> List[str]:
+    """Diff two `ClusterResult`s on everything that must agree.  Worker
+    name strings are the drivers' own (thread names vs sim labels) and
+    are deliberately not compared — except for terminal 'failed' records,
+    whose canonical shape pins the worker to ``alloc<id>``."""
+    out: List[str] = []
+
+    sim_by = {r.task_id: r for r in sim.records}
+    live_by = {r.task_id: r for r in live.records}
+    if set(sim_by) != set(live_by):
+        out.append(f"task sets differ: sim-only="
+                   f"{sorted(set(sim_by) - set(live_by))}, live-only="
+                   f"{sorted(set(live_by) - set(sim_by))}")
+    for tid in sorted(set(sim_by) & set(live_by)):
+        s, l = sim_by[tid], live_by[tid]
+        if s.status != l.status or s.attempts != l.attempts:
+            out.append(f"{tid}: status/attempts sim=({s.status},"
+                       f"{s.attempts}) live=({l.status},{l.attempts})")
+            continue
+        for f in ("submit_t", "start_t", "end_t", "cpu_time", "compute_t"):
+            if not _close(getattr(s, f), getattr(l, f), tol):
+                out.append(f"{tid}: {f} sim={getattr(s, f)} "
+                           f"live={getattr(l, f)}")
+        if s.status == "failed":
+            for r, side in ((s, "sim"), (l, "live")):
+                if r.start_t != r.end_t or r.cpu_time != 0.0 \
+                        or not r.worker.startswith("alloc"):
+                    out.append(f"{tid}: non-canonical killed record "
+                               f"({side}): {r}")
+
+    if [e[1:] for e in sim.events] != [e[1:] for e in live.events] or \
+            not all(_close(a[0], b[0], tol)
+                    for a, b in zip(sim.events, live.events)):
+        out.append(f"stepper events differ:\n  sim ={sim.events}\n"
+                   f"  live={live.events}")
+
+    if len(sim.decisions) != len(live.decisions):
+        out.append(f"decision counts differ: sim={len(sim.decisions)} "
+                   f"live={len(live.decisions)}")
+    else:
+        for i, (ds, dl) in enumerate(zip(sim.decisions, live.decisions)):
+            if ds["action"] != dl["action"] \
+                    or ds["alloc_id"] != dl["alloc_id"] \
+                    or not _close(ds["t"], dl["t"], tol) \
+                    or not _close(ds["backlog_per_worker_s"],
+                                  dl["backlog_per_worker_s"], tol):
+                out.append(f"decision {i} differs: sim={ds} live={dl}")
+
+    sim_allocs = {a.alloc_id: a for a in sim.allocations}
+    live_allocs = {a.alloc_id: a for a in live.allocations}
+    if set(sim_allocs) != set(live_allocs):
+        out.append(f"allocation id sets differ: sim={sorted(sim_allocs)} "
+                   f"live={sorted(live_allocs)}")
+    for aid in sorted(set(sim_allocs) & set(live_allocs)):
+        s, l = sim_allocs[aid], live_allocs[aid]
+        if s.n_workers != l.n_workers or s.state != l.state:
+            out.append(f"alloc {aid}: shape sim=({s.n_workers},{s.state}) "
+                       f"live=({l.n_workers},{l.state})")
+        for f in ("submit_t", "start_t", "end_t", "queue_wait", "busy_t"):
+            if not _close(getattr(s, f), getattr(l, f), tol):
+                out.append(f"alloc {aid}: {f} sim={getattr(s, f)} "
+                           f"live={getattr(l, f)}")
+        if not _close(s.node_seconds, l.node_seconds, tol):
+            out.append(f"alloc {aid}: node_seconds sim={s.node_seconds} "
+                       f"live={l.node_seconds}")
+    return out
+
+
+def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
+               policy: Any = "fcfs",
+               autoalloc: Optional[AutoAllocConfig] = None,
+               n_workers: int = 4,
+               walltime_s: Optional[float] = None,
+               max_workers: Optional[int] = None,
+               seed: int = 0, tick_s: float = 5.0,
+               max_attempts: int = 3,
+               surrogate_factory: Any = None,
+               tol: float = 1e-9) -> ParityReport:
+    """One differential run: same trace, same config, both drivers.
+
+    Fresh-but-identical Broker/AutoAllocator instances are built per
+    side (the objects are stateful, so they cannot literally be shared
+    across two runs); in static mode the sim broker is seeded with a
+    zero-queue-wait allocation matching the executor's initial group.
+    """
+    def make_broker():
+        b = Broker(policy=policy)
+        if surrogate_factory is not None:
+            b.attach_surrogate(surrogate_factory())
+        return b
+
+    def make_allocator():
+        if autoalloc is None:
+            return None
+        return AutoAllocator(autoalloc, spec=spec, seed=seed)
+
+    kw = dict(seed=seed, tick_s=tick_s, max_attempts=max_attempts,
+              max_workers=max_workers, walltime_s=walltime_s,
+              n_workers=n_workers)
+    sim_broker = make_broker()
+    if autoalloc is None:
+        # match the live executor's initial group: granted at t=0 with
+        # zero queue wait (thread startup, not a SLURM queue)
+        init = Allocation(sim_broker.next_alloc_id(), n_workers,
+                          walltime_s)
+        init.submit(0.0, 0.0)
+        sim_broker.add_allocation(init)
+    sim = simulate_cluster(spec, trace, broker=sim_broker,
+                           allocator=make_allocator(), **kw)
+    live = replay_live(spec, trace, broker=make_broker(),
+                       allocator=make_allocator(), **kw)
+    return ParityReport(sim=sim, live=live,
+                        divergences=compare_results(sim, live, tol))

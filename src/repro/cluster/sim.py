@@ -31,10 +31,12 @@ import numpy as np
 from repro.cluster.allocation import DRAINING, QUEUED, RUNNING, Allocation
 from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
 from repro.cluster.broker import Broker
+from repro.cluster.stepper import LifecycleStepper, StepperEvent
 from repro.cluster.traces import TraceTask
 from repro.core import metrics as _metrics
 from repro.core.backends import BackendSpec
-from repro.core.metrics import AllocationRecord, TaskRecord
+from repro.core.metrics import (AllocationRecord, TaskRecord,
+                                killed_task_record)
 from repro.core.task import EvalRequest
 from repro.sched.policy import WorkerView
 from repro.sched.registry import make_predictor
@@ -42,10 +44,15 @@ from repro.sched.registry import make_predictor
 
 @dataclasses.dataclass
 class ClusterResult:
-    """Everything a seeded run produced (all deterministically ordered)."""
+    """Everything a seeded run produced (all deterministically ordered).
+
+    `events` is the stepper's spawn/retire audit trail
+    (``(t, kind, alloc_id, n)``) — what the differential parity suite
+    compares between the sim and live paths."""
     records: List[TaskRecord]
     allocations: List[AllocationRecord]
     decisions: List[Dict[str, Any]]
+    events: List[StepperEvent] = dataclasses.field(default_factory=list)
 
     def summary(self) -> Dict[str, float]:
         done = [r for r in self.records if r.status == "ok"]
@@ -59,9 +66,68 @@ class ClusterResult:
         }
 
 
+def trace_requests(trace: List[TraceTask], max_attempts: int):
+    """The one trace-to-request mapping both differential drivers use
+    (`simulate_cluster` and `parity.replay_live`): time-sorted arrivals,
+    task ids ``trace-<i>``, synthetic per-index payloads where the trace
+    carries none, and ``submit_t`` pinned to the arrival time.  Returns
+    ``(arrivals, requests, runtimes)``."""
+    arrivals = sorted(trace, key=lambda tt: (tt.t,))
+    runtimes: Dict[str, float] = {}
+    reqs: List[EvalRequest] = []
+    for i, tt in enumerate(arrivals):
+        req = EvalRequest(model_name=tt.model_name,
+                          parameters=(tt.parameters
+                                      if tt.parameters is not None
+                                      else [[float(i)]]),
+                          time_request=tt.time_request,
+                          n_cpus=tt.n_cpus,
+                          task_id=f"trace-{i}",
+                          max_attempts=max_attempts)
+        req.submit_t = tt.t        # after init: 0.0 must survive as-is
+        runtimes[req.task_id] = tt.runtime
+        reqs.append(req)
+    return arrivals, reqs, runtimes
+
+
+def next_event_time(arrivals, arr_i: int, busy_ends, broker,
+                    elastic: bool, next_tick: float) -> Optional[float]:
+    """The canonical next-event candidate set shared by both drivers:
+    the next arrival, every in-flight completion, allocation grant and
+    walltime-expiry times, and — while an allocator has anything left to
+    react to — the autoalloc tick.  None means nothing can ever happen
+    (the caller stops and surfaces unserved work as 'lost')."""
+    candidates: List[float] = list(busy_ends)
+    if arr_i < len(arrivals):
+        candidates.append(arrivals[arr_i].t)
+    for a in broker.allocations():
+        if a.state == QUEUED:
+            candidates.append(a.grant_t)
+        elif a.state in (RUNNING, DRAINING) and math.isfinite(a.expiry_t):
+            candidates.append(a.expiry_t)
+    if elastic and (len(broker) or broker.allocations()
+                    or arr_i < len(arrivals)):
+        candidates.append(next_tick)
+    return min(candidates) if candidates else None
+
+
+def fill_lost(records: List[TaskRecord], reqs: List[EvalRequest],
+              end: float) -> None:
+    """Tasks a run could never finish (e.g. a static pool whose only
+    allocation expired with work still queued) MUST leave a record —
+    silent loss would read as a smaller, fully-served workload."""
+    finalized = {r.task_id for r in records}
+    for req in reqs:
+        if req.task_id not in finalized:
+            records.append(TaskRecord(
+                task_id=req.task_id, submit_t=req.submit_t,
+                start_t=end, end_t=end, cpu_time=0.0, compute_t=0.0,
+                worker="", attempts=0, status="lost"))
+
+
 class _SimWorker:
     __slots__ = ("wid", "alloc", "warm", "busy", "req", "attempt",
-                 "start_t", "end_t", "compute", "init")
+                 "mark_t", "start_t", "end_t", "compute", "init")
 
     def __init__(self, wid: int, alloc: Allocation):
         self.wid = wid
@@ -70,7 +136,8 @@ class _SimWorker:
         self.busy = False
         self.req: Optional[EvalRequest] = None
         self.attempt = 1
-        self.start_t = 0.0
+        self.mark_t = 0.0    # dispatch decision time (busy-billing base)
+        self.start_t = 0.0   # mark_t + dispatch latency
         self.end_t = 0.0
         self.compute = 0.0
         self.init = 0.0
@@ -82,6 +149,7 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                      allocator: Optional[AutoAllocator] = None,
                      n_workers: int = 4,
                      walltime_s: Optional[float] = None,
+                     max_workers: Optional[int] = None,
                      seed: int = 0, tick_s: float = 5.0,
                      max_attempts: int = 3,
                      max_t: float = 1e9) -> ClusterResult:
@@ -90,11 +158,19 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     Two modes:
       * static (``autoalloc=None``): one allocation of `n_workers` for
         `walltime_s` (None = held until the run ends) — the fixed-pool
-        baseline every elasticity comparison needs;
+        baseline every elasticity comparison needs.  A broker that
+        already carries a real allocation keeps it (the parity harness
+        injects one matching the live executor's initial group);
       * elastic (``autoalloc=AutoAllocConfig(...)`` or an
         `AutoAllocator`): allocations are submitted and drained by the
         allocator; the run starts with zero capacity and bootstraps off
         the unrouted backlog.
+
+    `max_workers` is the live executor's pool cap, enforced by the shared
+    `LifecycleStepper` (grants resized to headroom, zero-headroom grants
+    cancelled) and advertised to the allocator as its `worker_cap`; None
+    (the default) leaves the sim uncapped and any caller-set `worker_cap`
+    untouched.
 
     Pass `broker`/`allocator` instances to drive *the same objects* you
     later hand to a live `Executor` (the no-forked-logic guarantee).
@@ -115,27 +191,16 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                                 f"dict, or AutoAllocator; got {autoalloc!r}")
             allocator = AutoAllocator(cfg, spec=spec, seed=seed)
 
-    arrivals = sorted(trace, key=lambda tt: (tt.t,))
-    runtimes: Dict[str, float] = {}
-    reqs: List[EvalRequest] = []
-    for i, tt in enumerate(arrivals):
-        req = EvalRequest(model_name=tt.model_name,
-                          parameters=(tt.parameters
-                                      if tt.parameters is not None
-                                      else [[float(i)]]),
-                          time_request=tt.time_request,
-                          n_cpus=tt.n_cpus,
-                          task_id=f"trace-{i}",
-                          max_attempts=max_attempts)
-        req.submit_t = tt.t        # after init: 0.0 must survive as-is
-        runtimes[req.task_id] = tt.runtime
-        reqs.append(req)
+    arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
 
-    if allocator is None:                      # static baseline
+    if allocator is None and not any(not a.virtual
+                                     for a in broker.allocations()):
         static = Allocation(broker.next_alloc_id(), n_workers, walltime_s)
         request_s = static.walltime_s
         static.submit(0.0, spec.draw_queue_wait(rng, request_s))
         broker.add_allocation(static)
+    if allocator is not None and max_workers is not None:
+        allocator.worker_cap = max_workers     # live-executor semantics
 
     workers: Dict[int, _SimWorker] = {}
     wid_counter = 0
@@ -146,36 +211,45 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     next_tick = 0.0
     retired: List[Allocation] = []             # keep records of removed allocs
 
+    # ---- stepper adapter: mechanism callbacks over the sim worker table
     def spawn_workers(alloc: Allocation):
         nonlocal wid_counter
         for _ in range(alloc.n_workers):
             workers[wid_counter] = _SimWorker(wid_counter, alloc)
             wid_counter += 1
 
-    def kill_allocation(alloc: Allocation, t: float):
-        """Walltime expiry: running tasks die with the node group."""
-        nonlocal n_final
+    def retire_workers(alloc: Allocation):
         killed = []
         for w in sorted(list(workers.values()), key=lambda w: w.wid):
             if w.alloc is not alloc:
                 continue
             if w.busy:
-                alloc.note_busy(max(t - w.start_t, 0.0))  # burned anyway
-                killed.append((w.req, w.attempt))
+                killed.append((w.req, w.attempt, w.mark_t))
             broker.remove_worker(w.wid)
             del workers[w.wid]
-        broker.remove_allocation(alloc.alloc_id, t)
-        retired.append(alloc)
-        for req, attempt in killed:
-            if attempt < req.max_attempts:
-                broker.push(req, attempt + 1)
-            else:
-                records.append(TaskRecord(
-                    task_id=req.task_id, submit_t=req.submit_t,
-                    start_t=t, end_t=t, cpu_time=0.0, compute_t=0.0,
-                    worker=f"alloc{alloc.alloc_id}", attempts=attempt,
-                    status="failed"))
-                n_final += 1
+        return killed
+
+    def busy_count():
+        busy: Dict[int, int] = {}
+        for w in workers.values():
+            if w.busy:
+                busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id, 0) + 1
+        return busy
+
+    def record_failed(req, attempt, alloc, t):
+        nonlocal n_final
+        records.append(killed_task_record(req.task_id, req.submit_t, t,
+                                          alloc.alloc_id, attempt))
+        n_final += 1
+
+    stepper = LifecycleStepper(
+        broker, allocator, now=lambda: now,
+        spawn_workers=spawn_workers, retire_workers=retire_workers,
+        busy_count=busy_count,
+        worker_count=lambda: len([w for w in workers.values()
+                                  if not w.alloc.virtual]),
+        record_failed=record_failed,
+        max_workers=max_workers, max_attempts=None, retired=retired)
 
     max_iters = 10_000 + 1_000 * len(reqs)     # runaway-config backstop
     iters = 0
@@ -187,23 +261,13 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 f"events ({n_final}/{len(reqs)} tasks done) — check the "
                 f"autoalloc config can actually serve the trace")
         # ---- next event time ------------------------------------------
-        candidates: List[float] = []
-        if arr_i < len(arrivals):
-            candidates.append(arrivals[arr_i].t)
-        for w in workers.values():
-            if w.busy:
-                candidates.append(w.end_t)
-        for a in broker.allocations():
-            if a.state == QUEUED:
-                candidates.append(a.grant_t)
-            elif a.state in (RUNNING, DRAINING) and math.isfinite(a.expiry_t):
-                candidates.append(a.expiry_t)
-        if allocator is not None and (len(broker) or broker.allocations()
-                                      or arr_i < len(arrivals)):
-            candidates.append(next_tick)
-        if not candidates:
+        nxt = next_event_time(
+            arrivals, arr_i,
+            (w.end_t for w in workers.values() if w.busy),
+            broker, allocator is not None, next_tick)
+        if nxt is None:
             break                              # nothing can ever happen
-        now = max(now, min(candidates))
+        now = max(now, nxt)
         if now > max_t:
             break
         if now >= next_tick:
@@ -237,37 +301,10 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 broker.predictor.observe(req, w.compute)
             w.busy, w.req = False, None
 
-        # ---- allocation time transitions ------------------------------
-        for a in broker.allocations():
-            prev = a.state
-            state = a.tick(now)
-            if prev == QUEUED and state == RUNNING:
-                spawn_workers(a)
-            elif prev in (RUNNING, DRAINING) and state == "expired":
-                kill_allocation(a, now)
-
-        # ---- drained allocations that ran dry -------------------------
-        for a in broker.allocations():
-            if a.state == DRAINING and not any(
-                    w.busy for w in workers.values() if w.alloc is a):
-                a.terminate(now)
-                for w in sorted(list(workers.values()),
-                                key=lambda w: w.wid):
-                    if w.alloc is a:
-                        broker.remove_worker(w.wid)
-                        del workers[w.wid]
-                broker.remove_allocation(a.alloc_id, now)
-                retired.append(a)
-
-        # ---- autoalloc decisions --------------------------------------
-        if allocator is not None:
-            busy: Dict[int, int] = {a.alloc_id: 0
-                                    for a in broker.allocations()}
-            for w in workers.values():
-                if w.busy:
-                    busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id,
-                                                      0) + 1
-            allocator.step(now, broker, busy)
+        # ---- lifecycle: the shared stepper owns transitions (capped
+        # grants), walltime kills, drained-dry, and autoalloc — in the
+        # ONE canonical order the live executor also runs ---------------
+        stepper.step(now)
 
         # ---- dispatch --------------------------------------------------
         for w in sorted(workers.values(), key=lambda w: (w.alloc.alloc_id,
@@ -296,28 +333,19 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 w.init = (0.0 if req.model_name in w.warm
                           else spec.server_init)
                 w.warm.add(req.model_name)
+            w.mark_t = now
             w.start_t = now + spec.dispatch_latency
             w.end_t = w.start_t + w.init + w.compute
 
     # ---- wind down: release held groups; still-queued ones are
     # cancelled (0 node-seconds, as scancel would) -----------------------
     end = max((r.end_t for r in records), default=now)
-    for a in broker.allocations():
-        broker.remove_allocation(a.alloc_id, end)
-        retired.append(a)
-    # tasks the run could never finish (e.g. a static pool whose only
-    # allocation expired with work still queued) MUST leave a record —
-    # silent loss would read as a smaller, fully-served workload
-    finalized = {r.task_id for r in records}
-    for req in reqs:
-        if req.task_id not in finalized:
-            records.append(TaskRecord(
-                task_id=req.task_id, submit_t=req.submit_t,
-                start_t=end, end_t=end, cpu_time=0.0, compute_t=0.0,
-                worker="", attempts=0, status="lost"))
+    stepper.release(end)
+    fill_lost(records, reqs, end)
     alloc_records = sorted((a.record() for a in retired),
                            key=lambda r: r.alloc_id)
     return ClusterResult(
         records=records,
         allocations=alloc_records,
-        decisions=list(allocator.decisions) if allocator is not None else [])
+        decisions=list(allocator.decisions) if allocator is not None else [],
+        events=list(stepper.events))

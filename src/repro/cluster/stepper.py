@@ -1,0 +1,204 @@
+"""One lifecycle stepper for sim and live: the canonical per-tick rules.
+
+Before this module the allocation-lifecycle *driving rules* — when a
+QUEUED allocation's grant spawns workers, how the `max_workers` headroom
+cap binds a grant (and cancels one that gets zero headroom), what happens
+to tasks still running at walltime expiry, when a DRAINING allocation is
+terminated, and when the autoallocator gets to decide — were implemented
+twice: once in `simulate_cluster` and once in `Executor._cluster_step`.
+They had diverged in at least three observable ways (autoalloc stepped
+before vs after transitions, the capacity cap missing from the sim,
+terminal kill-record shapes disagreeing).  The whole point of the
+simulator is that its elasticity numbers transfer to the live executor,
+so the rules now live HERE and nowhere else.
+
+Canonical per-tick phase order (the driver owns phases in [brackets]):
+
+    [arrivals]                 new requests enter the broker
+    [completions]              finished tasks leave workers, bill busy_t
+    ------------------- LifecycleStepper.step(now) -------------------
+    transitions                Allocation.tick: QUEUED->RUNNING grants
+                               (headroom-capped spawn, zero-headroom
+                               grant cancellation) and walltime expiry
+    walltime kill              expired groups: workers torn down, partial
+                               busy billed, killed tasks requeued at
+                               attempt+1 or terminally failed
+    drained dry                DRAINING groups with zero busy workers are
+                               terminated (node-seconds stop burning)
+    autoalloc                  AutoAllocator.step sees POST-transition
+                               capacity (the sim order; the live path
+                               used to step it first)
+    ------------------------------------------------------------------
+    [dispatch]                 idle workers pop from the broker
+
+The stepper is clock-agnostic and mechanism-agnostic: it owns the
+*decisions* and their order, while the driver supplies the mechanism
+through callbacks — `now` (virtual clock or `time.monotonic`),
+`spawn_workers` (dict of sim workers or live threads), `retire_workers`
+(tear a group down, returning the in-flight tasks that died with it),
+`busy_count`/`worker_count` (occupancy views), and `record_failed` (the
+driver's terminal-record sink).  `simulate_cluster` and the live
+`Executor` are thin adapters over one instance each, so the two paths
+cannot diverge again.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.cluster.allocation import (DRAINING, EXPIRED, QUEUED, RUNNING,
+                                      Allocation)
+
+# (request, attempt, busy-since): one in-flight task killed with its group
+KilledTask = Tuple[Any, int, float]
+
+# (t, kind, alloc_id, n): kind in {"spawn", "kill", "drain-dry", "cancel"};
+# n is workers spawned (spawn) or in-flight tasks killed (retirements)
+StepperEvent = Tuple[float, str, int, int]
+
+
+class LifecycleStepper:
+    """The single allocation-lifecycle state machine shared by the
+    discrete-event simulator and the live executor.
+
+    Parameters
+    ----------
+    broker:        the `Broker` holding allocations and queues (requeues
+                   of killed tasks go back through ``broker.push``).
+    allocator:     optional `AutoAllocator`; stepped LAST, after every
+                   state transition of the tick.
+    now:           clock callback; ``step()`` uses it when no explicit
+                   ``now`` is passed (the sim passes its event time).
+    spawn_workers: bring up ``alloc.n_workers`` workers for a granted
+                   allocation.
+    retire_workers: tear down an allocation's workers; returns the killed
+                   in-flight tasks as ``(request, attempt, busy_since)``.
+                   The stepper bills their partial busy time and decides
+                   requeue-vs-fail — the driver must do neither.
+    busy_count:    ``{alloc_id: busy workers}`` (zero entries may be
+                   omitted; the stepper zero-fills).
+    worker_count:  real (non-virtual) workers currently up — the headroom
+                   base for the `max_workers` cap.  Defaults to summing
+                   ``n_workers`` over RUNNING/DRAINING real allocations.
+    record_failed: sink for a terminally-failed killed task
+                   ``(request, attempt, alloc, now)``; the canonical
+                   record shape is `metrics.killed_task_record`.
+    max_workers:   total real-worker ceiling (None = uncapped).  A grant
+                   is resized down to the available headroom; a grant
+                   with zero headroom is cancelled outright.
+    max_attempts:  driver-wide attempt bound, combined with each
+                   request's own ``max_attempts`` (None = request-level
+                   bound only, the sim default).
+    retired:       list retired allocations are appended to (the driver's
+                   record store); a fresh list when omitted.
+    """
+
+    def __init__(self, broker, allocator=None, *,
+                 now: Callable[[], float],
+                 spawn_workers: Callable[[Allocation], None],
+                 retire_workers: Callable[[Allocation], List[KilledTask]],
+                 busy_count: Callable[[], Dict[int, int]],
+                 record_failed: Callable[[Any, int, Allocation, float], None],
+                 worker_count: Optional[Callable[[], int]] = None,
+                 max_workers: Optional[int] = None,
+                 max_attempts: Optional[int] = None,
+                 retired: Optional[List[Allocation]] = None):
+        self.broker = broker
+        self.allocator = allocator
+        self.now = now
+        self.spawn_workers = spawn_workers
+        self.retire_workers = retire_workers
+        self.busy_count = busy_count
+        self.record_failed = record_failed
+        self.worker_count = worker_count
+        self.max_workers = max_workers
+        self.max_attempts = max_attempts
+        self.retired: List[Allocation] = retired if retired is not None \
+            else []
+        self.events: List[StepperEvent] = []   # spawn/retire audit trail
+
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> float:
+        """One canonical tick: transitions (grants + walltime kills) ->
+        drained-dry termination -> autoalloc decisions."""
+        if now is None:
+            now = self.now()
+        self._transitions(now)
+        self._drained_dry(now)
+        if self.allocator is not None:
+            self.allocator.step(now, self.broker, self._busy())
+        return now
+
+    def release(self, now: float) -> None:
+        """Driver wind-down: unregister every allocation still held (a
+        still-QUEUED one is cancelled for 0 node-seconds, as scancel
+        would) and keep them for the record."""
+        for alloc in list(self.broker.allocations()):
+            self.broker.remove_allocation(alloc.alloc_id, now)
+            self.retired.append(alloc)
+
+    # -- phases ---------------------------------------------------------
+    def _transitions(self, now: float) -> None:
+        for alloc in list(self.broker.allocations()):
+            prev = alloc.state
+            state = alloc.tick(now)
+            if prev == QUEUED and state == RUNNING:
+                self._grant(alloc, now)
+            elif prev in (RUNNING, DRAINING) and state == EXPIRED:
+                self._retire(alloc, now, "kill")
+
+    def _grant(self, alloc: Allocation, now: float) -> None:
+        """Nodes granted: spawn the group, capped at the `max_workers`
+        headroom.  Virtual (surrogate) allocations are not real capacity
+        and are exempt.  A grant that gets zero headroom is cancelled —
+        the autoallocator's own `worker_cap` normally prevents the
+        submit, but a cap can tighten after submission."""
+        if not alloc.virtual and self.max_workers is not None:
+            headroom = max(self.max_workers - self._real_workers(alloc), 0)
+            if headroom < alloc.n_workers:
+                alloc.resize(headroom, now)
+            if alloc.n_workers == 0:
+                self._retire(alloc, now, "cancel")
+                return
+        self.events.append((now, "spawn", alloc.alloc_id, alloc.n_workers))
+        self.spawn_workers(alloc)
+
+    def _drained_dry(self, now: float) -> None:
+        busy = self._busy()
+        for alloc in list(self.broker.allocations()):
+            if alloc.state == DRAINING and busy.get(alloc.alloc_id, 0) == 0:
+                alloc.terminate(now)
+                self._retire(alloc, now, "drain-dry")
+
+    # -- retirement (the one walltime-kill / teardown rule) -------------
+    def _retire(self, alloc: Allocation, now: float, kind: str) -> None:
+        killed = self.retire_workers(alloc)
+        for _req, _attempt, since in killed:
+            alloc.note_busy(max(now - since, 0.0))   # partial work burned
+        self.events.append((now, kind, alloc.alloc_id, len(killed)))
+        self.broker.remove_allocation(alloc.alloc_id, now)
+        self.retired.append(alloc)
+        for req, attempt, _since in killed:
+            if attempt < self._attempt_limit(req):
+                self.broker.push(req, attempt + 1)
+            else:
+                self.record_failed(req, attempt, alloc, now)
+
+    # -- views -----------------------------------------------------------
+    def _attempt_limit(self, req) -> int:
+        if self.max_attempts is None:
+            return req.max_attempts
+        return min(req.max_attempts, self.max_attempts)
+
+    def _real_workers(self, granting: Allocation) -> int:
+        """Headroom base at grant time: the granted group's own workers
+        are not up yet, so it never counts against itself."""
+        if self.worker_count is not None:
+            return self.worker_count()
+        return sum(a.n_workers for a in self.broker.allocations()
+                   if a is not granting and not a.virtual
+                   and a.state in (RUNNING, DRAINING))
+
+    def _busy(self) -> Dict[int, int]:
+        busy = {a.alloc_id: 0 for a in self.broker.allocations()}
+        busy.update(self.busy_count())
+        return busy

@@ -77,7 +77,7 @@ class Worker(threading.Thread):
         then degrades to plain LPT order, as documented)."""
         budget = alloc_id = None
         if self.alloc is not None:
-            budget = self.alloc.budget_left(time.monotonic())
+            budget = self.alloc.budget_left(self.pool._clock())
             alloc_id = self.alloc.alloc_id
         return WorkerView(wid=self.wid, warm_models=frozenset(self.servers),
                           budget_left=budget, alloc_id=alloc_id)
@@ -86,10 +86,10 @@ class Worker(threading.Thread):
         """Return (server, init seconds paid by THIS dispatch: 0 on reuse)."""
         if self.pool.persistent_servers and name in self.servers:
             return self.servers[name], 0.0
-        t0 = time.monotonic()
+        t0 = self.pool._clock()
         model = self.pool.model_factories[name]()
         model.warmup()
-        init_t = time.monotonic() - t0
+        init_t = self.pool._clock() - t0
         server = _Server(model, init_t)
         self.pool._note_server_init(init_t)
         if self.pool.persistent_servers:
@@ -108,7 +108,7 @@ class Worker(threading.Thread):
             if self.pool._already_done(req.task_id):
                 continue
             self.pool._mark_running(req, self, attempt)
-            dispatch_t = time.monotonic()
+            dispatch_t = self.pool._clock()
             surrogate = (self.pool._surrogate()
                          if req.config.get("_surrogate") else None)
             surrogate_failed = False
@@ -120,20 +120,20 @@ class Worker(threading.Thread):
                     raise RuntimeError("injected failure")
                 if surrogate is not None:
                     # offload path: one GP predict, no model server
-                    t0 = time.monotonic()
+                    t0 = self.pool._clock()
                     try:
                         value = surrogate.evaluate(req.parameters)
                     except Exception:
                         surrogate_failed = True
                         raise
-                    compute_t = time.monotonic() - t0
+                    compute_t = self.pool._clock() - t0
                     init_t = 0.0
                     wname = f"{self.name}-surrogate"
                 else:
                     server, init_t = self._get_server(req.model_name)
-                    t0 = time.monotonic()
+                    t0 = self.pool._clock()
                     value = server.model(req.parameters, req.config)
-                    compute_t = time.monotonic() - t0
+                    compute_t = self.pool._clock() - t0
                     server.n_evals += 1
                     wname = self.name
                 status = "ok"
@@ -143,7 +143,7 @@ class Worker(threading.Thread):
                     task_id=req.task_id, value=value, status=status,
                     worker=wname, attempts=attempt,
                     submit_t=req.submit_t, dispatch_t=dispatch_t,
-                    start_t=dispatch_t, end_t=time.monotonic(),
+                    start_t=dispatch_t, end_t=self.pool._clock(),
                     compute_t=compute_t, init_t=init_t)
                 self.pool._complete(req, res)
             except Exception as e:  # noqa: BLE001 — any task failure requeues
@@ -189,6 +189,15 @@ class Executor:
     count-based `autoscale_backlog` is an alias routed through that
     allocator (one single-worker allocation per step, and idle groups
     can now be drained — the old loop could only grow).
+
+    In cluster mode the allocation lifecycle is driven by the shared
+    `repro.cluster.stepper.LifecycleStepper` — the same rules (and rule
+    ORDER) `simulate_cluster` runs on a virtual clock; `_cluster_step`
+    is just the monitor-thread adapter around one `stepper.step()`.
+    `clock` injects the time source (default `time.monotonic`) and
+    `monitor_interval=None` disables the monitor thread — together they
+    let the differential parity harness (`repro.cluster.parity`) drive
+    this executor deterministically on a virtual clock via `step()`.
     """
 
     def __init__(self, model_factories: Dict[str, Callable[[], Model]],
@@ -200,14 +209,18 @@ class Executor:
                  straggler_factor: float = 0.0,
                  straggler_min_completed: int = 5,
                  autoscale_backlog: Optional[int] = None,
-                 max_workers: int = 32,
+                 max_workers: Optional[int] = 32,
                  allocation_s: Optional[float] = None,
                  cluster: Any = None,
                  autoalloc: Any = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 monitor_interval: Optional[float] = 0.05,
                  name: str = "hq"):
         from repro.cluster.allocation import Allocation
         from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
         from repro.cluster.broker import Broker
+        from repro.cluster.stepper import LifecycleStepper
+        self._clock = clock if clock is not None else time.monotonic
         self.model_factories = dict(model_factories)
         self.persistent_servers = persistent_servers
         self.max_attempts = max_attempts
@@ -261,18 +274,22 @@ class Executor:
             # count_tasks ignores cost hints, per_worker=False skips the
             # capacity division the legacy loop never did; served by
             # single-worker allocations up to max_workers
+            cap = max_workers if max_workers is not None else 32
             self.autoalloc = AutoAllocator(AutoAllocConfig(
                 workers_per_alloc=1, walltime_s=None,
                 backlog_high_s=float(autoscale_backlog),
                 backlog_low_s=1.0, per_worker=False, count_tasks=True,
-                max_pending=max_workers,
-                max_allocations=max(max_workers - n_workers + 1, 1),
+                max_pending=cap,
+                max_allocations=max(cap - n_workers + 1, 1),
                 min_allocations=1, idle_drain_s=30.0, hysteresis_s=0.05))
         else:
             self.autoalloc = None
-        if self.autoalloc is not None:
+        if self.autoalloc is not None and max_workers is not None:
             # the allocator must see the pool cap or it churns grants the
-            # monitor can only cancel (zero-headroom submit loops)
+            # monitor can only cancel (zero-headroom submit loops).  An
+            # uncapped pool (max_workers=None) preserves any caller-set
+            # worker_cap — exactly as `simulate_cluster` does, so a
+            # shared allocator instance behaves identically on both paths
             self.autoalloc.worker_cap = max_workers
 
         self._lock = threading.RLock()
@@ -284,23 +301,50 @@ class Executor:
         self._requests: Dict[str, EvalRequest] = {}
         self._init_total_t = 0.0               # cumulative server-init cost
         self._init_count = 0
-        self._t0 = time.monotonic()
+        self._t0 = self._clock()
         self.workers: List[Worker] = []
         self._retired_allocs: List[Any] = []   # for allocation_records()
         self._stopping = False
-        # the initial worker group: one allocation, granted immediately
-        # (thread startup is the live analogue of the queue wait)
-        alloc_id = (self.policy.next_alloc_id() if self._cluster_mode else 0)
-        self._initial_alloc = Allocation(alloc_id, n_workers, allocation_s)
-        self._initial_alloc.submit(self._t0, 0.0)
-        self._initial_alloc.tick(self._t0)
+        # the shared lifecycle state machine (cluster mode): exactly the
+        # rules, in exactly the order, `simulate_cluster` runs
+        self._stepper = None
         if self._cluster_mode:
-            self.policy.add_allocation(self._initial_alloc)
-        for i in range(n_workers):
-            self._add_worker(self._initial_alloc)
-        self._monitor = threading.Thread(target=self._monitor_loop,
-                                         daemon=True)
-        self._monitor.start()
+            self._stepper = LifecycleStepper(
+                self.policy, self.autoalloc, now=self._clock,
+                spawn_workers=self._spawn_group,
+                retire_workers=self._retire_group,
+                busy_count=self._busy_by_alloc,
+                worker_count=self._n_real_workers,
+                record_failed=self._record_expired,
+                max_workers=max_workers, max_attempts=max_attempts,
+                retired=self._retired_allocs)
+        # the initial worker group: one allocation, granted immediately
+        # (thread startup is the live analogue of the queue wait).  In
+        # cluster mode n_workers=0 means "bootstrap from the allocator"
+        # — zero standing capacity, exactly like the elastic simulator —
+        # and the group is granted THROUGH the stepper, so even the
+        # initial spawn takes the canonical capped QUEUED->RUNNING path.
+        self._initial_alloc = None
+        if not self._cluster_mode or n_workers > 0:
+            alloc_id = (self.policy.next_alloc_id() if self._cluster_mode
+                        else 0)
+            self._initial_alloc = Allocation(alloc_id, n_workers,
+                                             allocation_s)
+            self._initial_alloc.submit(self._t0, 0.0)
+            if self._cluster_mode:
+                self.policy.add_allocation(self._initial_alloc)
+            else:
+                self._initial_alloc.tick(self._t0)
+                for i in range(n_workers):
+                    self._add_worker(self._initial_alloc)
+        if self._cluster_mode:
+            self._cluster_step()               # grant + spawn at t0
+        self._monitor = None
+        if monitor_interval is not None and monitor_interval > 0:
+            self._monitor_interval = monitor_interval
+            self._monitor = threading.Thread(target=self._monitor_loop,
+                                             daemon=True)
+            self._monitor.start()
 
     # ------------------------------------------------------------------
     # queue plumbing
@@ -327,7 +371,7 @@ class Executor:
 
     def _mark_running(self, req: EvalRequest, worker: Worker, attempt: int):
         with self._lock:
-            self._running[req.task_id] = (req, worker, time.monotonic(),
+            self._running[req.task_id] = (req, worker, self._clock(),
                                           attempt)
 
     def _note_server_init(self, init_t: float):
@@ -368,8 +412,8 @@ class Executor:
             entry = self._running.pop(req.task_id, None)
             # busy billing happens HERE, under the lock, keyed on still
             # being in _running: a task whose allocation expired was
-            # already billed (partial, up to the kill) and removed by
-            # _retire_allocation, so no double count is possible
+            # already billed (partial, up to the kill) by the stepper and
+            # removed by _retire_group, so no double count is possible
             if entry is not None:
                 w = entry[1]
                 if w.alloc is not None and w.alloc.state != "expired":
@@ -397,10 +441,13 @@ class Executor:
                 self._cv.notify_all()
                 self._push(req, attempt + 1)
             else:
+                # terminal shape matches the sim's killed_task_record:
+                # start_t == end_t (the failure instant), zero cpu time
+                now = self._clock()
                 self._results[req.task_id] = EvalResult(
                     task_id=req.task_id, status="failed", error=error,
                     worker=worker.name, attempts=attempt,
-                    submit_t=req.submit_t, end_t=time.monotonic())
+                    submit_t=req.submit_t, start_t=now, end_t=now)
                 self._release_dependents()
                 self._cv.notify_all()
 
@@ -441,7 +488,7 @@ class Executor:
             if self.backlog_limit is not None:
                 while len(self.policy) >= self.backlog_limit:
                     self._cv.wait(0.01)
-            req.submit_t = time.monotonic()
+            req.submit_t = self._clock()
             self._requests[req.task_id] = req
             if req.depends_on and not all(d in self._results
                                           for d in req.depends_on):
@@ -479,13 +526,18 @@ class Executor:
     # ------------------------------------------------------------------
     # elasticity / fault injection / introspection
     # ------------------------------------------------------------------
+    # real threads serve the queue; the parity harness flips this off and
+    # plays the worker objects deterministically on a virtual clock
+    _threaded = True
+
     def _add_worker(self, alloc=None):
         wid = getattr(self, "_wid_counter", 0)
         self._wid_counter = wid + 1
         w = Worker(self, wid, alloc=alloc if alloc is not None
                    else self._initial_alloc)
         self.workers.append(w)
-        w.start()
+        if self._threaded:
+            w.start()
 
     def scale_to(self, n: int):
         """Resize the pool by hand (autoalloc-managed groups are the
@@ -496,7 +548,8 @@ class Executor:
         broker no longer routes to."""
         from repro.cluster.allocation import Allocation
         with self._lock:
-            n = min(n, self.max_workers)
+            if self.max_workers is not None:
+                n = min(n, self.max_workers)
             target = self._initial_alloc
             if self._cluster_mode:
                 open_allocs = [a for a in self.policy.allocations()
@@ -504,13 +557,13 @@ class Executor:
                 if open_allocs:
                     target = open_allocs[0]
                 elif self._n_real_workers() < n:   # all groups gone: new one
-                    now = time.monotonic()
+                    now = self._clock()
                     target = Allocation(self.policy.next_alloc_id(), 0,
                                         None)
                     target.submit(now, 0.0)
                     target.tick(now)
                     self.policy.add_allocation(target)
-            now = time.monotonic()
+            now = self._clock()
             while self._n_real_workers() < n:
                 self._add_worker(target)
                 target.resize(target.n_workers + 1, now)
@@ -545,74 +598,66 @@ class Executor:
                     if w.alloc is None or not w.alloc.virtual])
 
     def _cluster_step(self):
-        """Allocation lifecycle + autoalloc decisions (monitor thread).
-        The SAME `Broker`/`AutoAllocator` objects `simulate_cluster`
-        steps on a virtual clock run here against `time.monotonic()`."""
-        from repro.cluster.allocation import DRAINING, QUEUED, RUNNING
-        now = time.monotonic()
+        """One canonical lifecycle tick (monitor thread): the shared
+        `LifecycleStepper` — the SAME state machine `simulate_cluster`
+        drives on a virtual clock — runs here against this executor's
+        clock, with thread spawn/teardown as its mechanism callbacks."""
         with self._cv:
-            broker = self.policy
-            if self.autoalloc is not None:
-                busy: Dict[int, int] = {a.alloc_id: 0
-                                        for a in broker.allocations()}
-                for _req, w, _t, _a in self._running.values():
-                    if w.alloc is not None:
-                        busy[w.alloc.alloc_id] = \
-                            busy.get(w.alloc.alloc_id, 0) + 1
-                self.autoalloc.step(now, broker, busy)
-            for alloc in list(broker.allocations()):
-                prev = alloc.state
-                state = alloc.tick(now)
-                if prev == QUEUED and state == RUNNING:
-                    # the documented pool cap binds autoalloc too: grant
-                    # only the headroom, cancel a grant that gets none.
-                    # Virtual (surrogate) workers are exempt — they are
-                    # not real capacity, so they never consume the cap
-                    if not alloc.virtual:
-                        headroom = max(self.max_workers
-                                       - self._n_real_workers(), 0)
-                        if headroom < alloc.n_workers:
-                            alloc.resize(headroom, now)
-                        if alloc.n_workers == 0:
-                            self._retire_allocation(alloc, now)
-                            continue
-                    for _ in range(alloc.n_workers):
-                        self._add_worker(alloc)
-                elif prev in (RUNNING, DRAINING) and state == "expired":
-                    self._retire_allocation(alloc, now)
-                elif state == DRAINING and not any(
-                        w.alloc is alloc
-                        for _r, w, _t, _a in self._running.values()):
-                    alloc.terminate(now)       # drained dry: stop billing
-                    self._retire_allocation(alloc, now)
+            self._stepper.step(self._clock())
             self._cv.notify_all()
 
-    def _retire_allocation(self, alloc, now: float):
-        """Kill an allocation's worker group; its running tasks count a
-        failed attempt exactly as `simulate_cluster`'s walltime kill does
-        (requeue with attempt+1, 'failed' past max_attempts — `_fail`
-        implements precisely that), and the broker migrates its queue."""
+    # -- stepper mechanism callbacks (all run under the dispatch lock) --
+    def _spawn_group(self, alloc):
+        for _ in range(alloc.n_workers):
+            self._add_worker(alloc)
+
+    def _retire_group(self, alloc):
+        """Tear down an allocation's worker threads; hand the stepper the
+        in-flight tasks that died with them (it bills their partial busy
+        time and decides requeue-vs-fail — the one walltime-kill rule)."""
+        killed = []
         for w in [w for w in self.workers if w.alloc is alloc]:
             w.alive = False
             self.workers.remove(w)
             self.policy.remove_worker(w.wid)
             for tid in [tid for tid, (_, rw, _, _) in self._running.items()
                         if rw is w]:
-                req, _, t_start, attempt = self._running[tid]
-                alloc.note_busy(now - t_start)     # partial work burned
-                self._fail(req, attempt, "allocation expired", w)
-        self.policy.remove_allocation(alloc.alloc_id, now)
-        self._retired_allocs.append(alloc)
+                req, _, t_start, attempt = self._running.pop(tid)
+                killed.append((req, attempt, t_start))
+        return killed
+
+    def _busy_by_alloc(self) -> Dict[int, int]:
+        busy: Dict[int, int] = {}
+        for _req, w, _t, _a in self._running.values():
+            if w.alloc is not None:
+                busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id, 0) + 1
+        return busy
+
+    def _record_expired(self, req, attempt, alloc, now: float):
+        """Terminal record for a walltime-killed task with every attempt
+        spent — the canonical `metrics.killed_task_record` shape."""
+        if self._already_done(req.task_id):
+            return
+        self._results[req.task_id] = EvalResult(
+            task_id=req.task_id, status="failed",
+            error="allocation expired", worker=f"alloc{alloc.alloc_id}",
+            attempts=attempt, submit_t=req.submit_t,
+            start_t=now, end_t=now)
+        self._release_dependents()
 
     def _monitor_loop(self):
         while not self._stopping:
-            time.sleep(0.05)
-            # allocation-backed elasticity (cluster mode)
-            if self._cluster_mode:
-                self._cluster_step()
-            # straggler re-issue (speculative execution)
-            if self.straggler_factor > 0:
-                self._straggler_check(time.monotonic())
+            time.sleep(self._monitor_interval)
+            self.step()
+
+    def step(self):
+        """One monitor pass: lifecycle tick (cluster mode) + straggler
+        re-issue.  Public so a virtual-clock driver (`repro.cluster.
+        parity`) can pump the executor without the monitor thread."""
+        if self._cluster_mode:
+            self._cluster_step()
+        if self.straggler_factor > 0:
+            self._straggler_check(self._clock())
 
     def _straggler_check(self, now: float):
         """Speculatively re-issue tasks running far beyond their MODEL'S
@@ -751,12 +796,12 @@ class Executor:
         """`AllocationRecord`s for every allocation this executor owned
         (retired ones first) — feeds `metrics.node_seconds` /
         `metrics.allocation_utilization` exactly like `simulate_cluster`."""
-        now = time.monotonic()
+        now = self._clock()
         with self._lock:
             live = (self.policy.allocations() if self._cluster_mode
                     else [self._initial_alloc])
             out = [a.record() for a in self._retired_allocs]
-            out += [a.record(now) for a in live]   # provisional billing
+            out += [a.record(now) for a in live if a is not None]
             return sorted(out, key=lambda r: r.alloc_id)
 
     def records(self) -> List[TaskRecord]:
@@ -772,17 +817,19 @@ class Executor:
 
     def shutdown(self):
         self._stopping = True
-        now = time.monotonic()
+        now = self._clock()
         with self._cv:
             for w in self.workers:
                 w.alive = False
             allocs = (self.policy.allocations() if self._cluster_mode
                       else [self._initial_alloc])
             for a in allocs:
-                a.terminate(now)               # close the billing window
+                if a is not None:
+                    a.terminate(now)           # close the billing window
             self._cv.notify_all()
         for w in self.workers:
-            w.join(timeout=1.0)
+            if w.ident is not None:            # never-started replay workers
+                w.join(timeout=1.0)
 
     def __enter__(self):
         return self

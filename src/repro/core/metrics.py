@@ -46,6 +46,20 @@ class TaskRecord:
         return max((self.end_t - self.submit_t) - self.cpu_time, 0.0)
 
 
+def killed_task_record(task_id: str, submit_t: float, now: float,
+                       alloc_id: int, attempts: int) -> TaskRecord:
+    """The canonical terminal record for a task killed at allocation
+    expiry with every attempt spent: ``start_t == end_t == now`` (the
+    kill instant) and zero cpu/compute time — the partial work it burned
+    is billed to the allocation's ``busy_t``, never to the task.  Both
+    `simulate_cluster` and the live `Executor` emit exactly this shape
+    (asserted by the differential parity suite in `tests/test_parity.py`)."""
+    return TaskRecord(
+        task_id=task_id, submit_t=submit_t, start_t=now, end_t=now,
+        cpu_time=0.0, compute_t=0.0, worker=f"alloc{alloc_id}",
+        attempts=attempts, status="failed")
+
+
 @dataclasses.dataclass
 class AllocationRecord:
     """One bulk allocation's lifetime (the `repro.cluster` analogue of

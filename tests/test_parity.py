@@ -1,0 +1,316 @@
+"""Differential parity suite: sim and live must be the same machine.
+
+Every test drives one seeded trace + config through BOTH adapters of the
+shared `LifecycleStepper` — `simulate_cluster` (virtual event loop over
+a sim worker table) and `replay_live` (the real `Executor` machinery on
+a virtual clock) — and asserts an empty divergence list: identical
+allocation decisions, spawn/kill/drain-dry/cancel event sequences, and
+terminal task statuses/records.  Also: direct regression tests for the
+three historical divergences (autoalloc step order, the missing
+`max_workers` cap in the sim, the killed-task record shape) and a
+hypothesis property test that the stepper's phase order is deterministic
+under seed.
+"""
+import math
+
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.cluster import (Allocation, AutoAllocConfig, AutoAllocator,
+                           Broker, LifecycleStepper, bimodal_trace,
+                           bursty_trace, run_parity, simulate_cluster)
+from repro.core import EvalRequest, backends
+from repro.core.metrics import killed_task_record
+
+
+def _elastic_cfg(**kw):
+    base = dict(workers_per_alloc=2, walltime_s=300.0, backlog_high_s=30.0,
+                backlog_low_s=5.0, max_pending=2, max_allocations=4,
+                min_allocations=0, idle_drain_s=20.0, hysteresis_s=5.0)
+    base.update(kw)
+    return AutoAllocConfig(**base)
+
+
+def _assert_parity(rep):
+    assert rep.ok, "sim/live diverged:\n" + "\n".join(rep.divergences)
+
+
+# --------------------------------------------------------------------------
+# differential scenarios
+# --------------------------------------------------------------------------
+def test_parity_static_pool():
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=30, seed=4)
+    rep = run_parity(spec, trace, n_workers=3, seed=9)
+    _assert_parity(rep)
+    assert all(r.status == "ok" for r in rep.sim.records)
+    assert len(rep.live.records) == 30
+
+
+def test_parity_elastic_autoalloc():
+    """Bursty arrivals through a cold cluster: bootstrap, growth, idle
+    drains — the full decision log must match, timestamps included."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=2, burst_size=8, gap_s=300.0,
+                         runtime_s=10.0, seed=1)
+    rep = run_parity(spec, trace, autoalloc=_elastic_cfg(),
+                     max_workers=16, seed=1)
+    _assert_parity(rep)
+    assert rep.sim.decisions            # the scenario actually scaled
+    assert rep.sim.decisions == rep.live.decisions
+
+
+def test_parity_drained_dry():
+    """Idle allocations drain, finish their last task, and terminate
+    drained-dry — the same 'drain-dry' retire events on both paths."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=2, burst_size=6, gap_s=400.0,
+                         runtime_s=15.0, seed=2)
+    rep = run_parity(spec, trace, autoalloc=_elastic_cfg(idle_drain_s=10.0),
+                     max_workers=16, seed=7)
+    _assert_parity(rep)
+    assert any(d["action"] == "drain" for d in rep.sim.decisions)
+    assert any(e[1] == "drain-dry" for e in rep.sim.events)
+
+
+def test_parity_walltime_kill_requeue():
+    """Tasks outliving their allocation are killed and requeued on
+    renewed capacity — identical attempt counts on both paths."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=4, burst_span_s=1.0,
+                         runtime_s=40.0, jitter=0.0, seed=0)
+    cfg = _elastic_cfg(workers_per_alloc=1, walltime_s=60.0,
+                       idle_drain_s=50.0)
+    rep = run_parity(spec, trace, autoalloc=cfg, max_attempts=6, seed=3)
+    _assert_parity(rep)
+    assert all(r.status == "ok" for r in rep.sim.records)
+    assert max(r.attempts for r in rep.sim.records) > 1
+    assert any(e[1] == "kill" for e in rep.sim.events)
+
+
+def test_parity_walltime_kill_terminal_record_shape():
+    """At max_attempts the kill is terminal; BOTH paths must emit the
+    canonical killed-task record (start_t == end_t == kill time, zero
+    cpu/compute, worker 'alloc<id>') and 'lost' for unservable work."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=6, burst_span_s=1.0,
+                         runtime_s=50.0, jitter=0.0, seed=0)
+    rep = run_parity(spec, trace, n_workers=1, walltime_s=60.0,
+                     max_attempts=1, seed=0)
+    _assert_parity(rep)
+    for res in (rep.sim, rep.live):
+        by_status = {}
+        for r in res.records:
+            by_status.setdefault(r.status, []).append(r)
+        assert by_status.get("failed") and by_status.get("lost")
+        for r in by_status["failed"]:
+            canon = killed_task_record(
+                r.task_id, r.submit_t, r.end_t,
+                int(r.worker.removeprefix("alloc")), r.attempts)
+            assert r == canon, (r, canon)
+
+
+class _StubOffload:
+    """Deterministic stand-in for `SurrogateOffload`: trusts one model
+    name outright (no GP state, so sim and live decide identically)."""
+
+    latency_s = 0.05
+    n_virtual_workers = 1
+
+    def __init__(self, trust="short-model"):
+        self.trust = trust
+        self.served = 0
+
+    def decide(self, req, cost=None):
+        if req.model_name != self.trust or req.config.get("_no_surrogate"):
+            return False
+        req.config["_surrogate"] = True        # as the real engine stamps
+        return True
+
+    def note_served(self):
+        self.served += 1
+
+    def observe(self, *args, **kwargs):       # live conditions on values
+        pass
+
+
+def test_parity_surrogate_virtual_allocation_excluded_from_capacity():
+    """Offloaded tasks ride the virtual allocation on both paths; it is
+    never billed and never counts as capacity for autoalloc decisions."""
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=30, seed=6)
+    rep = run_parity(spec, trace, autoalloc=_elastic_cfg(),
+                     max_workers=16, seed=6,
+                     surrogate_factory=_StubOffload)
+    _assert_parity(rep)
+    for res in (rep.sim, rep.live):
+        virt = [a for a in res.allocations if a.alloc_id == 0]
+        assert virt and virt[0].node_seconds == 0.0   # never billed
+        offloaded = [r for r in res.records
+                     if r.cpu_time == pytest.approx(0.05)]
+        assert offloaded                              # surrogate served
+    # decisions ignore the virtual capacity: identical on both paths
+    assert rep.sim.decisions == rep.live.decisions
+
+
+def test_parity_max_workers_cap():
+    """The pool cap binds identically: grants resized to headroom, and
+    peak concurrent capacity never exceeds the cap on either path."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=20, burst_span_s=2.0,
+                         runtime_s=30.0, seed=5)
+    cfg = _elastic_cfg(workers_per_alloc=8, backlog_high_s=5.0,
+                       max_allocations=8, max_pending=4)
+    rep = run_parity(spec, trace, autoalloc=cfg, max_workers=5, seed=5)
+    _assert_parity(rep)
+    for res in (rep.sim, rep.live):
+        up = 0
+        peak = 0
+        for _t, kind, _aid, n in res.events:
+            if kind == "spawn":
+                up += n
+                peak = max(peak, up)
+            else:
+                # retirements tear the whole group down; reconstruct the
+                # size from the matching spawn
+                spawned = {e[2]: e[3] for e in res.events
+                           if e[1] == "spawn"}
+                up -= spawned.get(_aid, 0)
+        assert peak <= 5, res.events
+
+
+# --------------------------------------------------------------------------
+# regressions for the three historical divergences
+# --------------------------------------------------------------------------
+def _stepper_on(broker, allocator=None, **kw):
+    spawned, retired_events = [], []
+    return LifecycleStepper(
+        broker, allocator, now=lambda: 0.0,
+        spawn_workers=lambda a: spawned.append(a.alloc_id),
+        retire_workers=lambda a: [],
+        busy_count=lambda: {},
+        record_failed=lambda *a: retired_events.append(a),
+        **kw), spawned
+
+
+def test_stepper_autoalloc_sees_post_transition_capacity():
+    """Regression (historical live-path bug): the allocator must step
+    AFTER allocation state transitions, so a grant landing this tick is
+    visible capacity and no spurious extra allocation is submitted."""
+    broker = Broker()
+    # a granted-but-not-yet-ticked allocation large enough to cover the
+    # backlog once RUNNING
+    a = Allocation(broker.next_alloc_id(), 4, 1000.0).submit(0.0, 0.0)
+    broker.add_allocation(a)
+    for i in range(4):
+        broker.push(EvalRequest("m", [[float(i)]], time_request=10.0,
+                                task_id=f"t{i}"), 1)
+    allocator = AutoAllocator(AutoAllocConfig(
+        workers_per_alloc=4, walltime_s=1000.0, backlog_high_s=20.0,
+        backlog_low_s=1.0, hysteresis_s=0.0))
+    stepper, spawned = _stepper_on(broker, allocator)
+    stepper.step(0.0)
+    assert spawned == [a.alloc_id]             # the grant happened first
+    # 40 s backlog / 4 workers = 10 s/worker < high watermark: with the
+    # sim order (transitions first) the allocator stays quiet.  The old
+    # live order saw zero capacity and submitted a redundant allocation.
+    assert allocator.decisions == []
+
+
+def test_sim_honours_max_workers_cap():
+    """Regression (historical sim bug): `simulate_cluster` used to spawn
+    the full `alloc.n_workers` regardless of the live pool cap."""
+    spec = backends.get("hq")
+    trace = bursty_trace(n_bursts=1, burst_size=16, burst_span_s=2.0,
+                         runtime_s=30.0, seed=5)
+    cfg = _elastic_cfg(workers_per_alloc=8, backlog_high_s=5.0,
+                       max_allocations=8, max_pending=4)
+    res = simulate_cluster(spec, trace, autoalloc=cfg, max_workers=3,
+                           seed=5)
+    assert all(r.status == "ok" for r in res.records)
+    assert all(n <= 3 for _t, kind, _aid, n in res.events
+               if kind == "spawn")
+    assert max(a.n_workers for a in res.allocations) <= 3
+
+
+def test_stepper_zero_headroom_grant_cancelled():
+    """A grant arriving with zero headroom is cancelled outright (0
+    node-seconds), not spawned at size zero."""
+    broker = Broker()
+    running = Allocation(broker.next_alloc_id(), 2, None).submit(0.0, 0.0)
+    running.tick(0.0)
+    broker.add_allocation(running)
+    late = Allocation(broker.next_alloc_id(), 2, 500.0).submit(0.0, 0.0)
+    broker.add_allocation(late)
+    stepper, spawned = _stepper_on(broker, max_workers=2,
+                                   worker_count=lambda: 2)
+    stepper.step(0.0)                          # stepped at the grant instant
+    assert spawned == []                       # nothing new came up
+    assert late.state == "expired" and late.node_seconds() == 0.0
+    assert [e[1] for e in stepper.events] == ["cancel"]
+    assert stepper.retired == [late]
+
+
+def test_uncapped_drivers_preserve_caller_worker_cap():
+    """max_workers=None must not clobber a caller-set allocator cap on
+    EITHER path (the live executor used to reset it to None while the
+    sim preserved it — the exact divergence class this PR kills)."""
+    from repro.core import Executor, LambdaModel
+
+    spec = backends.get("hq")
+    sim_alloc = AutoAllocator(_elastic_cfg(), spec=spec, seed=0)
+    sim_alloc.worker_cap = 2
+    simulate_cluster(spec, bimodal_trace(n=5, seed=0),
+                     allocator=sim_alloc, max_workers=None, seed=0)
+    assert sim_alloc.worker_cap == 2
+
+    live_alloc = AutoAllocator(_elastic_cfg(min_allocations=1,
+                                            hysteresis_s=0.05))
+    live_alloc.worker_cap = 2
+    factory = lambda: LambdaModel("toy", lambda p, c: [[0.0]], 1, 1)  # noqa: E731
+    with Executor({"toy": factory}, n_workers=1, autoalloc=live_alloc,
+                  max_workers=None) as ex:
+        assert ex.autoalloc.worker_cap == 2    # preserved, not clobbered
+    with Executor({"toy": factory}, n_workers=1,
+                  autoalloc=AutoAllocator(_elastic_cfg()),
+                  max_workers=4) as ex2:
+        assert ex2.autoalloc.worker_cap == 4   # explicit cap still binds
+
+
+def test_killed_task_record_is_canonical():
+    r = killed_task_record("t0", 5.0, 42.0, 3, 2)
+    assert r.start_t == r.end_t == 42.0
+    assert r.cpu_time == 0.0 and r.compute_t == 0.0
+    assert r.worker == "alloc3" and r.status == "failed" and r.attempts == 2
+
+
+# --------------------------------------------------------------------------
+# property: the stepper's phase order is deterministic under seed
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n=st.integers(min_value=5, max_value=25),
+       workers_per_alloc=st.integers(min_value=1, max_value=4),
+       walltime=st.floats(min_value=60.0, max_value=600.0))
+def test_stepper_deterministic_under_seed(seed, n, workers_per_alloc,
+                                          walltime):
+    """Same (trace, seed, config) -> byte-identical records, allocation
+    records, decisions AND stepper event sequences, twice over."""
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=n, seed=seed)
+    cfg = _elastic_cfg(workers_per_alloc=workers_per_alloc,
+                       walltime_s=walltime)
+    a = simulate_cluster(spec, trace, autoalloc=cfg, max_workers=8,
+                         seed=seed, max_attempts=6)
+    b = simulate_cluster(spec, trace, autoalloc=cfg, max_workers=8,
+                         seed=seed, max_attempts=6)
+    assert a.records == b.records
+    assert a.allocations == b.allocations
+    assert a.decisions == b.decisions
+    assert a.events == b.events
+    # phase-order invariant: within one tick, any spawn precedes any
+    # retirement of a LATER-submitted allocation's cancel... the cheap
+    # checkable core: event times are non-decreasing
+    assert all(x[0] <= y[0] for x, y in zip(a.events, a.events[1:]))
+    assert all(math.isfinite(e[0]) for e in a.events)
