@@ -1,0 +1,300 @@
+"""Benchmark: scheduling hot-path overhead as queues grow to 1M tasks.
+
+The paper's premise is queues of "thousands or even millions of similar
+tasks", and its headline result is that scheduling *overhead* — not the
+physics — dominates at scale.  This benchmark is the repo's perf anchor
+for that claim: per-task push/pop overhead for every registered
+single-node policy at 1k/10k/100k/1M queued tasks, the latency of a full
+GP-costed re-scoring (one batched `predict_many` pass), and end-to-end
+`simulate_cluster` throughput.  A healthy run shows FLAT per-op
+overhead across three orders of magnitude of queue size — the O(log n)
+guarantee of `repro.sched.costq` — while the pre-PR pack implementation
+(kept here as `NaivePack`, the literal old code) degrades linearly and
+worse.
+
+Pass criteria (printed, and non-zero exit on failure):
+  * pack pop throughput at the largest compared size is >= 10x the
+    naive implementation's;
+  * a full GP-costed rebuild issues at most len(gp.PREDICT_BUCKETS)
+    distinct compile shapes (asserted via `gp.predict_batch_shapes`);
+  * with ``--quick`` (the CI gate): pack per-pop overhead at 10k queued
+    stays under ``--pop-budget-us`` (default 1000 us — an order of
+    magnitude below what the old sort-per-pop cost at that size).
+
+Writes every number to ``BENCH_queue_scale.json`` (``--json`` to move
+it) so future PRs can diff the trajectory.
+
+    PYTHONPATH=src python benchmarks/queue_scale.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cluster.traces import bimodal_trace
+from repro.core import backends
+from repro.cluster import simulate_cluster
+from repro.sched import GPRuntimePredictor, WorkerView, make_policy
+from repro.sched.policy import SchedulingPolicy
+from repro.uq import gp
+
+POLICIES = ("fcfs", "sjf", "lpt", "pack", "steal", "edf")
+SIZES = (1_000, 10_000, 100_000, 1_000_000)
+QUICK_SIZES = (1_000, 10_000)
+NAIVE_MAX = 100_000        # naive pack is too slow beyond this (by design)
+NAIVE_POPS = 30            # pops to sample when a full drain is hopeless
+MODELS = ("gs2", "proxy", "cheap")
+
+
+class NaivePack(SchedulingPolicy):
+    """The pre-PR `PackingPolicy`: heap + sort-scan-remove-heapify on
+    every budget-fit pop — O(n log n) per decision.  Kept verbatim as
+    the baseline the 10x criterion is measured against."""
+
+    name = "naive-pack"
+    sign = -1.0
+
+    def __init__(self, predictor=None, init_margin: float = 1.0):
+        super().__init__(predictor)
+        self.init_margin = init_margin
+        self._heap = []
+
+    def push(self, req, attempt):
+        heapq.heappush(self._heap, (self.sign * self.cost(req),
+                                    next(self._tick), (req, attempt)))
+
+    def pop(self, worker=None):
+        if not self._heap:
+            return None
+        if worker is None or worker.budget_left is None:
+            return heapq.heappop(self._heap)[2]
+        budget = worker.budget_left - self.init_margin
+        order = sorted(self._heap)
+        for entry in order:
+            if -entry[0] <= budget:
+                self._heap.remove(entry)
+                heapq.heapify(self._heap)
+                return entry[2]
+        entry = order[-1]
+        self._heap.remove(entry)
+        heapq.heapify(self._heap)
+        return entry[2]
+
+    def pending(self):
+        return [item for _, _, item in sorted(self._heap)]
+
+    def __len__(self):
+        return len(self._heap)
+
+
+def make_requests(n: int, seed: int = 0, gp_params: bool = False):
+    from repro.core.task import EvalRequest
+    rng = np.random.default_rng(seed)
+    costs = rng.lognormal(mean=2.0, sigma=1.0, size=n)
+    xs = rng.uniform(0.0, 1.0, size=(n, 2)) if gp_params else None
+    reqs = []
+    for i in range(n):
+        reqs.append(EvalRequest(
+            model_name=MODELS[i % len(MODELS)],
+            parameters=([[float(xs[i, 0]), float(xs[i, 1])]] if gp_params
+                        else [[float(i)]]),
+            time_request=float(costs[i]),
+            deadline=float(rng.uniform(0, 1e4)),
+            task_id=f"qs-{i}"))
+    return reqs
+
+
+def make_views(n: int, seed: int = 1) -> List[Optional[WorkerView]]:
+    """A rotating pool of pop-side worker views: finite budgets (the
+    pack budget-fit path), warm models (the steal index path), several
+    wids (per-worker queues)."""
+    rng = np.random.default_rng(seed)
+    views: List[Optional[WorkerView]] = []
+    for i in range(n):
+        views.append(WorkerView(
+            wid=i % 8,
+            warm_models=frozenset({MODELS[i % len(MODELS)]}),
+            budget_left=(float(rng.uniform(1.0, 120.0))
+                         if i % 4 else None)))
+    return views
+
+
+def bench_policy(name: str, reqs, views, *, max_pops: Optional[int] = None,
+                 factory=None) -> Dict[str, float]:
+    """Push all of `reqs`, then pop (fully, or `max_pops` samples);
+    returns per-op throughput."""
+    pol = factory() if factory is not None else make_policy(name)
+    t0 = time.perf_counter()
+    for req in reqs:
+        pol.push(req, 1)
+    t_push = time.perf_counter() - t0
+    n_pops = len(reqs) if max_pops is None else min(max_pops, len(reqs))
+    t0 = time.perf_counter()
+    got = 0
+    for i in range(n_pops):
+        if pol.pop(views[i % len(views)]) is not None:
+            got += 1
+    t_pop = time.perf_counter() - t0
+    assert got == n_pops, f"{name}: queue lost items ({got}/{n_pops})"
+    return {
+        "policy": name, "n": len(reqs), "n_pops": n_pops,
+        "push_per_s": len(reqs) / max(t_push, 1e-9),
+        "pop_per_s": n_pops / max(t_pop, 1e-9),
+        "pop_us": 1e6 * t_pop / max(n_pops, 1),
+    }
+
+
+def bench_rebuild(n: int, seed: int = 5) -> Dict[str, float]:
+    """Latency of a full GP-costed re-scoring of an n-task queue — one
+    batched `predict_many` pass through `gp.predict_batch` — plus the
+    compile-shape bill it ran at."""
+    rng = np.random.default_rng(seed)
+    pred = GPRuntimePredictor(min_fit=8, refit_every=10_000, fit_steps=30)
+    from repro.core.task import EvalRequest
+
+    def observe(k: int):
+        for x in rng.uniform(0, 1, size=(k, 2)):
+            pred.observe(EvalRequest("gs2", [list(map(float, x))]),
+                         float(1.0 + 3.0 * x[0] + x[1]))
+
+    observe(16)                                # fit + one conditioning
+    pol = make_policy("sjf", pred)
+    for req in make_requests(n, seed=seed, gp_params=True):
+        pol.push(req, 1)
+    timings = []
+    shapes_new: Dict = {}
+    for round_i in range(2):                   # cold (compiles), then warm
+        if round_i == 0:
+            observe(8)                         # posterior install: version
+        else:
+            pol._built_version = None          # same posterior: no fresh
+        before = dict(gp.predict_batch_shapes)  # XLA shapes, pure rebuild
+        t0 = time.perf_counter()
+        assert pol.pop() is not None           # triggers the rebuild
+        timings.append(time.perf_counter() - t0)
+        shapes_new = {k: v - before.get(k, 0)
+                      for k, v in gp.predict_batch_shapes.items()
+                      if v - before.get(k, 0) > 0}
+        n_shapes = len(shapes_new)
+        assert n_shapes <= len(gp.PREDICT_BUCKETS), (
+            f"GP rebuild at n={n} issued {n_shapes} compile shapes "
+            f"({shapes_new}) — bucket discipline broken")
+    return {
+        "n": n,
+        "rebuild_cold_s": timings[0],
+        "rebuild_warm_s": timings[1],
+        "rebuild_warm_us_per_task": 1e6 * timings[1] / n,
+        "compile_shapes": len(shapes_new),
+        "launches": sum(shapes_new.values()),
+    }
+
+
+def bench_sim(n_tasks: int, seed: int = 3) -> Dict[str, float]:
+    """End-to-end `simulate_cluster` throughput (tasks scheduled per
+    wall-second of simulator time) under the pack policy."""
+    spec = backends.get("hq")
+    trace = bimodal_trace(n=n_tasks, seed=seed)
+    t0 = time.perf_counter()
+    res = simulate_cluster(spec, trace, policy="pack", n_workers=8,
+                           seed=seed)
+    wall = time.perf_counter() - t0
+    assert len(res.records) == n_tasks
+    return {"n_tasks": n_tasks, "wall_s": wall,
+            "tasks_per_s": n_tasks / max(wall, 1e-9)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI gate: small sizes + hard per-pop budget")
+    ap.add_argument("--json", default="BENCH_queue_scale.json")
+    ap.add_argument("--pop-budget-us", type=float, default=1000.0,
+                    help="--quick fails if pack per-pop at 10k exceeds this")
+    args = ap.parse_args(argv)
+
+    sizes = QUICK_SIZES if args.quick else SIZES
+    views = make_views(4096)
+    rows: List[Dict] = []
+    naive_rows: List[Dict] = []
+    print(f"queue-scale: sizes={list(sizes)} policies={list(POLICIES)}")
+    for n in sizes:
+        reqs = make_requests(n)
+        for name in POLICIES:
+            row = bench_policy(name, reqs, views)
+            rows.append(row)
+            print(f"  n={n:>9,} {name:>6}: "
+                  f"push {row['push_per_s']:>12,.0f}/s   "
+                  f"pop {row['pop_per_s']:>12,.0f}/s "
+                  f"({row['pop_us']:.1f} us/pop)")
+        if n <= NAIVE_MAX:
+            naive = bench_policy(
+                "naive-pack", reqs, views,
+                max_pops=(None if n <= 1_000 else NAIVE_POPS),
+                factory=NaivePack)
+            naive_rows.append(naive)
+            print(f"  n={n:>9,} naive-pack: "
+                  f"pop {naive['pop_per_s']:>12,.0f}/s "
+                  f"({naive['pop_us']:.1f} us/pop, "
+                  f"{naive['n_pops']} sampled)")
+
+    rebuild_sizes = [s for s in sizes if s <= 100_000] if not args.quick \
+        else [1_000]
+    rebuilds = []
+    for n in rebuild_sizes:
+        r = bench_rebuild(n)
+        rebuilds.append(r)
+        print(f"  GP rebuild n={n:>7,}: warm {r['rebuild_warm_s']*1e3:.1f} ms"
+              f" ({r['rebuild_warm_us_per_task']:.2f} us/task, "
+              f"{r['compile_shapes']} compile shapes, "
+              f"{r['launches']} launches)")
+
+    sim = bench_sim(300 if args.quick else 3_000)
+    print(f"  simulate_cluster: {sim['n_tasks']} tasks in "
+          f"{sim['wall_s']:.2f} s -> {sim['tasks_per_s']:,.0f} tasks/s")
+
+    # ---- criteria ------------------------------------------------------
+    by = {(r["policy"], r["n"]): r for r in rows}
+    naive_by = {r["n"]: r for r in naive_rows}
+    cmp_n = max(naive_by)                      # largest compared size
+    speedup = (by[("pack", cmp_n)]["pop_per_s"]
+               / naive_by[cmp_n]["pop_per_s"])
+    ok = speedup >= 10.0
+    print(f"\npack pop speedup vs naive at n={cmp_n:,}: {speedup:,.1f}x "
+          f"(criterion >= 10x) -> {'PASS' if ok else 'FAIL'}")
+    budget_ok = True
+    if args.quick:
+        pack_10k = by[("pack", 10_000)]["pop_us"]
+        budget_ok = pack_10k <= args.pop_budget_us
+        print(f"pack per-pop at 10k queued: {pack_10k:.1f} us "
+              f"(budget {args.pop_budget_us:.0f} us) -> "
+              f"{'PASS' if budget_ok else 'FAIL'}")
+
+    out = {
+        "bench": "queue_scale",
+        "quick": bool(args.quick),
+        "policies": rows,
+        "naive_pack": naive_rows,
+        "rebuild": rebuilds,
+        "simulate_cluster": sim,
+        "criteria": {
+            "pack_vs_naive_speedup": speedup,
+            "pack_vs_naive_at_n": cmp_n,
+            "speedup_ok": bool(ok),
+            "pop_budget_us": args.pop_budget_us,
+            "pop_budget_ok": bool(budget_ok),
+        },
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+    return 0 if (ok and budget_ok) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,6 +69,17 @@ class Broker(SchedulingPolicy):
         self._affinity: Dict[str, int] = {}        # model -> alloc_id
         self._unrouted: Deque[QueueItem] = deque()
         self._ids = itertools.count()
+        # allocations()/_open_ids() run on EVERY routing decision, pop
+        # and autoalloc probe; their sorts/filters are cached behind an
+        # epoch counter bumped whenever the allocation table or any
+        # open-ness-changing state transition goes through the broker
+        # (the stepper reports its out-of-band `tick` transitions via
+        # `invalidate_allocations`)
+        self._alloc_epoch = 0
+        self._sorted_cache: List[Allocation] = []
+        self._sorted_epoch = -1
+        self._open_cache: List[int] = []
+        self._open_epoch = -1
         # incremental backlog-cost ledger: every enqueue/dequeue adjusts
         # the running total in O(1); a full rebuild happens only when the
         # predictor's version token changes
@@ -118,6 +129,7 @@ class Broker(SchedulingPolicy):
         self._surrogate_id = alloc.alloc_id
         self._allocs[alloc.alloc_id] = alloc
         self._queues[alloc.alloc_id] = make_policy("fcfs", self.predictor)
+        self.invalidate_allocations()
         return alloc
 
     def _surrogate_open(self) -> bool:
@@ -129,8 +141,23 @@ class Broker(SchedulingPolicy):
     def next_alloc_id(self) -> int:
         return next(self._ids)
 
+    def invalidate_allocations(self) -> None:
+        """Drop the cached allocation views.  Callers that change an
+        allocation's routability OUTSIDE the broker's own methods — the
+        stepper's `Allocation.tick` transitions, a manual `drain`/
+        `terminate` — must call this; add/drain/remove on the broker bump
+        the epoch themselves."""
+        self._alloc_epoch += 1
+
     def allocations(self) -> List[Allocation]:
-        return sorted(self._allocs.values(), key=lambda a: a.alloc_id)
+        """All registered allocations, sorted by id.  Cached between
+        allocation-table changes (routing and autoalloc probes ask on
+        every decision) — treat the returned list as read-only."""
+        if self._sorted_epoch != self._alloc_epoch:
+            self._sorted_cache = sorted(self._allocs.values(),
+                                        key=lambda a: a.alloc_id)
+            self._sorted_epoch = self._alloc_epoch
+        return self._sorted_cache
 
     def allocation(self, alloc_id: int) -> Optional[Allocation]:
         return self._allocs.get(alloc_id)
@@ -138,6 +165,7 @@ class Broker(SchedulingPolicy):
     def add_allocation(self, alloc: Allocation) -> Allocation:
         self._allocs[alloc.alloc_id] = alloc
         self._queues[alloc.alloc_id] = self._make_queue()
+        self.invalidate_allocations()
         self._flush_unrouted()
         return alloc
 
@@ -149,6 +177,7 @@ class Broker(SchedulingPolicy):
         if alloc is None:
             return
         alloc.drain(now)
+        self.invalidate_allocations()
         self._migrate_off(alloc_id)
 
     def remove_allocation(self, alloc_id: int, now: float) -> None:
@@ -158,9 +187,11 @@ class Broker(SchedulingPolicy):
         if alloc is None:
             return
         alloc.terminate(now)
+        self.invalidate_allocations()          # closed before migration...
         self._migrate_off(alloc_id)
         self._queues.pop(alloc_id, None)
         del self._allocs[alloc_id]             # caller keeps it for records
+        self.invalidate_allocations()          # ...gone after it
 
     def _migrate_off(self, alloc_id: int) -> None:
         q = self._queues.get(alloc_id)
@@ -181,9 +212,13 @@ class Broker(SchedulingPolicy):
     def _open_ids(self) -> List[int]:
         """Open REAL allocations — the virtual surrogate allocation is
         never a routing / stealing / least-loaded target; tasks reach it
-        only through the offload decision."""
-        return [a.alloc_id for a in self.allocations()
-                if a.open and not a.virtual]
+        only through the offload decision.  Cached with `allocations()`
+        behind the epoch counter: routing consults this on every push."""
+        if self._open_epoch != self._alloc_epoch:
+            self._open_cache = [a.alloc_id for a in self.allocations()
+                                if a.open and not a.virtual]
+            self._open_epoch = self._alloc_epoch
+        return self._open_cache
 
     def _load(self, alloc_id: int) -> float:
         """Queued tasks per worker — O(1), deliberately NOT cost-based:

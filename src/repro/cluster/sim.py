@@ -211,12 +211,27 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     next_tick = 0.0
     retired: List[Allocation] = []             # keep records of removed allocs
 
+    # dispatch scans workers in (alloc_id, wid) order on EVERY event;
+    # the order only changes when a group spawns or retires, so the
+    # sorted list is cached and rebuilt on membership changes instead of
+    # re-sorted per event (O(W log W) off the inner loop)
+    order_cache: List[_SimWorker] = []
+    order_dirty = [True]
+
+    def dispatch_order() -> List[_SimWorker]:
+        if order_dirty[0]:
+            order_cache[:] = sorted(workers.values(),
+                                    key=lambda w: (w.alloc.alloc_id, w.wid))
+            order_dirty[0] = False
+        return order_cache
+
     # ---- stepper adapter: mechanism callbacks over the sim worker table
     def spawn_workers(alloc: Allocation):
         nonlocal wid_counter
         for _ in range(alloc.n_workers):
             workers[wid_counter] = _SimWorker(wid_counter, alloc)
             wid_counter += 1
+        order_dirty[0] = True
 
     def retire_workers(alloc: Allocation):
         killed = []
@@ -227,6 +242,7 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 killed.append((w.req, w.attempt, w.mark_t))
             broker.remove_worker(w.wid)
             del workers[w.wid]
+        order_dirty[0] = True
         return killed
 
     def busy_count():
@@ -307,8 +323,7 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
         stepper.step(now)
 
         # ---- dispatch --------------------------------------------------
-        for w in sorted(workers.values(), key=lambda w: (w.alloc.alloc_id,
-                                                         w.wid)):
+        for w in dispatch_order():
             if w.busy or w.alloc.state != RUNNING:
                 continue
             view = WorkerView(wid=w.wid, warm_models=frozenset(w.warm),

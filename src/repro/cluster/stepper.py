@@ -141,6 +141,10 @@ class LifecycleStepper:
         for alloc in list(self.broker.allocations()):
             prev = alloc.state
             state = alloc.tick(now)
+            if state != prev:
+                # tick mutates allocation state outside the broker's own
+                # methods; its cached allocation views must not go stale
+                self.broker.invalidate_allocations()
             if prev == QUEUED and state == RUNNING:
                 self._grant(alloc, now)
             elif prev in (RUNNING, DRAINING) and state == EXPIRED:

@@ -826,6 +826,8 @@ class Executor:
             for a in allocs:
                 if a is not None:
                     a.terminate(now)           # close the billing window
+            if self._cluster_mode:             # states changed out-of-band
+                self.policy.invalidate_allocations()
             self._cv.notify_all()
         for w in self.workers:
             if w.ident is not None:            # never-started replay workers

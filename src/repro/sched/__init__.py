@@ -6,12 +6,14 @@ layers that need an answer — the live `Executor`, the UM-Bridge
 Pick by name (`policy="pack", predictor="gp"`) or pass configured
 instances; register new ones with `@register_policy` / `@register_predictor`.
 """
+from repro.sched.costq import SortedCostQueue
 from repro.sched.offload import SurrogateOffload, SurrogateOffloadPolicy
 from repro.sched.policy import (EDFPolicy, FCFSPolicy, LPTPolicy,
                                 PackingPolicy, SchedulingPolicy, SJFPolicy,
                                 WorkStealingPolicy, WorkerView)
 from repro.sched.predictor import (GPRuntimePredictor, QuantileEstimator,
-                                   RuntimePredictor, flatten_parameters)
+                                   RuntimePredictor, flatten_parameters,
+                                   request_features)
 from repro.sched.registry import (POLICIES, PREDICTORS, make_policy,
                                   make_predictor, register_policy,
                                   register_predictor)

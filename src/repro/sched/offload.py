@@ -46,7 +46,7 @@ from typing import TYPE_CHECKING, Any, Deque, List, Optional, Sequence
 import numpy as np
 
 from repro.sched.policy import QueueItem, SchedulingPolicy, WorkerView
-from repro.sched.predictor import flatten_parameters
+from repro.sched.predictor import flatten_parameters, request_features
 from repro.sched.registry import make_policy, register_policy
 
 if TYPE_CHECKING:                              # hint-only: keeps repro.sched
@@ -168,7 +168,7 @@ class SurrogateOffload:
             return False                       # cheap enough to just run
         if post is None or int(post.x.shape[0]) < self.min_train:
             return False                       # no (trained) surrogate yet
-        theta = flatten_parameters(req.parameters)
+        theta = request_features(req)          # flattened once per request
         if theta is None or len(theta) != int(post.x.shape[1]):
             return False                       # not in the surrogate's space
         sd = float(self.trust_sd([theta])[0])

@@ -40,6 +40,7 @@ import itertools
 from collections import deque
 from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple
 
+from repro.sched.costq import SortedCostQueue
 from repro.sched.registry import register_policy
 
 if TYPE_CHECKING:                              # hint-only: keeps repro.sched
@@ -81,6 +82,32 @@ class SchedulingPolicy:
         if req.time_request:
             return float(req.time_request)
         return 0.0
+
+    def costs(self, reqs: List[EvalRequest]) -> List[float]:
+        """Vectorized `cost` over a whole queue — the bulk re-costing
+        path.  Predictors exposing `predict_many` (both shipped ones do)
+        score the batch in one pass: the GP predictor routes it through
+        `gp.predict_batch`, so re-costing a 100k-task queue is a handful
+        of fixed-shape fused launches instead of 100k single predicts.
+        Third-party policies should call this (never a per-item `cost`
+        loop) whenever they re-score more than a few requests at once."""
+        ests: Optional[List[Optional[float]]] = None
+        if self.predictor is not None:
+            many = getattr(self.predictor, "predict_many", None)
+            if callable(many):
+                ests = many(reqs)
+            else:
+                ests = [self.predictor.predict(r) for r in reqs]
+        out: List[float] = []
+        for i, req in enumerate(reqs):
+            c = ests[i] if ests is not None else None
+            if c is not None:
+                out.append(float(c))
+            elif req.time_request:
+                out.append(float(req.time_request))
+            else:
+                out.append(0.0)
+        return out
 
     def _predictor_version(self) -> object:
         """Opaque token that changes when predictions may have changed —
@@ -137,45 +164,51 @@ class FCFSPolicy(SchedulingPolicy):
 
 
 class _CostOrderedPolicy(SchedulingPolicy):
-    """Heap on (sign * cost, arrival tick): sign=+1 -> SJF, -1 -> LPT.
+    """Sorted store on (sign * cost, arrival tick): sign=+1 -> SJF,
+    -1 -> LPT.
 
     Costs are evaluated at push time and lazily RE-evaluated whenever the
-    predictor has absorbed new completions since the heap was last built —
+    predictor has absorbed new completions since the store was last built —
     so a queue submitted up front (the UQ batch pattern) still benefits
-    from runtime estimates learned online during the run.
+    from runtime estimates learned online during the run.  The rebuild
+    re-scores the WHOLE queue through `costs()` (one batched predictor
+    pass), and the `SortedCostQueue` keeps every subsequent pop — ordered
+    or budget-fit — O(log n) at any queue size.
     """
 
     sign = 1.0
 
     def __init__(self, predictor=None):
         super().__init__(predictor)
-        self._heap: List[Tuple[float, int, QueueItem]] = []
+        self._q = SortedCostQueue()
         self._built_version: object = None
 
     def _maybe_rebuild(self):
-        if self.predictor is None or not self._heap:
+        if self.predictor is None or not len(self._q):
             return
         v = self._predictor_version()
         if v != self._built_version:
-            self._heap = [(self.sign * self.cost(item[0]), tick, item)
-                          for _, tick, item in self._heap]
-            heapq.heapify(self._heap)
+            old = self._q.entries()
+            reqs = [item[0] for _, _, item in old]
+            new_costs = self.costs(reqs)
+            self._q.rebuild([(self.sign * c, tick, item)
+                             for c, (_, tick, item) in zip(new_costs, old)])
             self._built_version = v
 
     def push(self, req, attempt):
-        heapq.heappush(self._heap,
-                       (self.sign * self.cost(req), next(self._tick),
-                        (req, attempt)))
+        self._q.insert(self.sign * self.cost(req), next(self._tick),
+                       (req, attempt))
 
     def pop(self, worker=None):
         self._maybe_rebuild()
-        return heapq.heappop(self._heap)[2] if self._heap else None
+        entry = self._q.pop_first()
+        return entry[2] if entry is not None else None
 
     def pending(self):
-        return [item for _, _, item in sorted(self._heap)]
+        return [item for _, _, item in self._q]
 
     def __len__(self):
-        return len(self._heap)
+        return len(self._q)
 
 
 @register_policy("sjf")
@@ -213,21 +246,17 @@ class PackingPolicy(_CostOrderedPolicy):
 
     def pop(self, worker=None):
         self._maybe_rebuild()
-        if not self._heap:
+        if not len(self._q):
             return None
         if worker is None or worker.budget_left is None:
-            return heapq.heappop(self._heap)[2]
+            return self._q.pop_first()[2]
         budget = worker.budget_left - self.init_margin
-        order = sorted(self._heap)             # cost desc (sign = -1)
-        for entry in order:                    # longest task that fits
-            if -entry[0] <= budget:
-                self._heap.remove(entry)
-                heapq.heapify(self._heap)
-                return entry[2]
-        entry = order[-1]                      # nothing fits: shortest
-        self._heap.remove(entry)
-        heapq.heapify(self._heap)
-        return entry[2]
+        # keys are -cost: the first entry at key >= -budget is the
+        # LONGEST task with cost <= budget (earliest arrival among ties)
+        entry = self._q.pop_first_at_least(-budget)
+        if entry is None:                      # nothing fits: shortest
+            entry = self._q.pop_last()         # (latest arrival on ties —
+        return entry[2]                        # the old sorted()[-1] rule)
 
 
 @register_policy("edf")
@@ -269,45 +298,135 @@ class WorkStealingPolicy(SchedulingPolicy):
     takes a global task (preferring one whose model it has warm), then
     steals from the back of the most loaded peer — the classic stealing
     end, so locality of the victim's imminent work is preserved.
+
+    The global queue is doubly indexed for million-task queues: the
+    arrival deque gives FIFO pops, and a per-model index of the same
+    entry objects answers "earliest pending task of a warm model" by
+    peeking O(warm models) deque heads — the old implementation scanned
+    the whole deque per pop and paid an O(n) `del` on a match.  An entry
+    taken through one view is tombstoned (`alive=False`) and dropped
+    lazily when the other view reaches it.  Worker iteration (anonymous
+    drains, steal-victim ties) is by ascending wid, never dict insertion
+    order, so sim/live parity cannot depend on which worker popped first
+    in history.
     """
 
     name = "steal"
 
+    # a global-queue entry, shared by the FIFO deque and the model index
+    # ([seq, req, attempt, alive] — a list so `alive` is mutable in place)
+    _SEQ, _REQ, _ATTEMPT, _ALIVE = range(4)
+
     def __init__(self, predictor=None):
         super().__init__(predictor)
         self._local: Dict[int, Deque[QueueItem]] = {}
-        self._global: Deque[QueueItem] = deque()
+        self._global: Deque[list] = deque()    # FIFO view (seq ascending)
+        self._by_model: Dict[str, Deque[list]] = {}    # per-model view
+        self._n_global = 0                     # live entries in _global
+        self._n_dead = 0                       # tombstones not yet dropped
+        self._seq_back = itertools.count()     # arrival order keys
+        self._seq_front = -1                   # reflowed-to-front keys
         self._affinity: Dict[str, int] = {}    # model name -> worker id
+
+    def _push_global(self, req, attempt, *, front: bool = False) -> None:
+        if front:
+            seq, self._seq_front = self._seq_front, self._seq_front - 1
+        else:
+            seq = next(self._seq_back)
+        entry = [seq, req, attempt, True]
+        index = self._by_model.setdefault(req.model_name, deque())
+        if front:
+            self._global.appendleft(entry)
+            index.appendleft(entry)
+        else:
+            self._global.append(entry)
+            index.append(entry)
+        self._n_global += 1
+
+    def _take(self, entry) -> QueueItem:
+        """Claim a live global entry: tombstone it for the view that did
+        not hand it out (lazily skipped there later).  The payload is
+        cleared immediately — a tombstone must never keep a served
+        request's parameters alive — and once tombstones outnumber live
+        entries both views are compacted, so memory tracks the LIVE
+        queue, not every task ever pushed."""
+        item = (entry[self._REQ], entry[self._ATTEMPT])
+        entry[self._ALIVE] = False
+        entry[self._REQ] = entry[self._ATTEMPT] = None
+        self._n_global -= 1
+        self._n_dead += 1
+        if self._n_dead > 64 and self._n_dead > self._n_global:
+            self._compact_global()
+        return item
+
+    def _compact_global(self) -> None:
+        """Drop every tombstone from both global views (amortised O(1)
+        per pop: runs only when dead entries dominate)."""
+        self._global = deque(e for e in self._global if e[self._ALIVE])
+        for model in list(self._by_model):
+            q = deque(e for e in self._by_model[model] if e[self._ALIVE])
+            if q:
+                self._by_model[model] = q
+            else:
+                del self._by_model[model]
+        self._n_dead = 0
+
+    def _pop_global_fifo(self) -> Optional[QueueItem]:
+        while self._global:
+            entry = self._global.popleft()
+            if entry[self._ALIVE]:
+                return self._take(entry)
+        return None
+
+    def _pop_global_warm(self, worker: WorkerView) -> Optional[QueueItem]:
+        """Earliest pending global task of any model the worker has warm
+        — O(|warm_models|) head peeks on the per-model index."""
+        best = None
+        best_q = None
+        for model in worker.warm_models:
+            q = self._by_model.get(model)
+            if not q:
+                continue
+            while q and not q[0][self._ALIVE]:     # lazy tombstone drop
+                q.popleft()
+            if q and (best is None or q[0][self._SEQ] < best[self._SEQ]):
+                best, best_q = q[0], q
+        if best is None:
+            return None
+        best_q.popleft()
+        return self._take(best)
 
     def push(self, req, attempt):
         wid = self._affinity.get(req.model_name)
         if wid is not None and wid in self._local:
             self._local[wid].append((req, attempt))
         else:
-            self._global.append((req, attempt))
+            self._push_global(req, attempt)
 
     def pop(self, worker=None):
         if worker is None:                     # anonymous consumer
-            if self._global:
-                return self._global.popleft()
-            for q in self._local.values():
-                if q:
-                    return q.popleft()
+            item = self._pop_global_fifo()
+            if item is not None:
+                return item
+            for wid in sorted(self._local):    # wid order, not dict order
+                if self._local[wid]:
+                    return self._local[wid].popleft()
             return None
         mine = self._local.setdefault(worker.wid, deque())
         if mine:
             return mine.popleft()
-        if self._global:                       # prefer a warm-model task
-            for i, (req, attempt) in enumerate(self._global):
-                if req.model_name in worker.warm_models:
-                    del self._global[i]
-                    self._affinity[req.model_name] = worker.wid
-                    return req, attempt
-            req, attempt = self._global.popleft()
-            self._affinity[req.model_name] = worker.wid
-            return req, attempt
-        victim = max((q for w, q in self._local.items() if w != worker.wid),
-                     key=len, default=None)
+        if self._n_global:                     # prefer a warm-model task
+            item = self._pop_global_warm(worker)
+            if item is None:
+                item = self._pop_global_fifo()
+            self._affinity[item[0].model_name] = worker.wid
+            return item
+        victim = None
+        for wid in sorted(self._local):        # largest backlog, lowest
+            q = self._local[wid]               # wid among ties
+            if wid != worker.wid and q and \
+                    (victim is None or len(q) > len(victim)):
+                victim = q
         if victim:
             req, attempt = victim.pop()        # steal from the back
             self._affinity[req.model_name] = worker.wid
@@ -315,13 +434,14 @@ class WorkStealingPolicy(SchedulingPolicy):
         return None
 
     def pending(self):
-        out = list(self._global)
-        for q in self._local.values():
-            out.extend(q)
+        out = [(e[self._REQ], e[self._ATTEMPT]) for e in self._global
+               if e[self._ALIVE]]
+        for wid in sorted(self._local):
+            out.extend(self._local[wid])
         return out
 
     def __len__(self):
-        return len(self._global) + sum(len(q) for q in self._local.values())
+        return self._n_global + sum(len(q) for q in self._local.values())
 
     def remove_worker(self, wid):
         """Reflow a gone worker's local tasks to the FRONT of the global
@@ -329,6 +449,7 @@ class WorkStealingPolicy(SchedulingPolicy):
         starves waiting for a worker that will never pop again."""
         q = self._local.pop(wid, None)
         if q:
-            self._global.extendleft(reversed(q))
+            for req, attempt in reversed(q):   # appendleft keeps q's order
+                self._push_global(req, attempt, front=True)
         self._affinity = {m: w for m, w in self._affinity.items()
                           if w != wid}

@@ -24,8 +24,9 @@ from __future__ import annotations
 import bisect
 import math
 import threading
-from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Protocol,
-                    runtime_checkable)
+from collections import deque
+from typing import (TYPE_CHECKING, Any, Deque, Dict, List, Optional,
+                    Protocol, Sequence, runtime_checkable)
 
 from repro.sched.registry import register_predictor
 
@@ -49,6 +50,15 @@ class RuntimePredictor(Protocol):
                  ) -> Optional[float]:
         """Runtime quantile over completions (pooled, or one model's)."""
         ...
+
+    # Predictors MAY additionally expose
+    #     predict_many(reqs) -> List[Optional[float]]
+    # — one batched pass semantically equal to [predict(r) for r in reqs].
+    # `SchedulingPolicy.costs` uses it when present, so bulk re-costing
+    # (heap rebuilds, backlog ledgers) runs at batch cost: the GP
+    # predictor scores the whole queue through `gp.predict_batch`
+    # (bounded compile shapes, fused launches) instead of issuing one
+    # `gp.predict` per task.
 
 
 def flatten_parameters(parameters: Any) -> Optional[List[float]]:
@@ -79,13 +89,34 @@ def flatten_parameters(parameters: Any) -> Optional[List[float]]:
     return out
 
 
+def request_features(req: EvalRequest) -> Optional[List[float]]:
+    """`flatten_parameters(req.parameters)`, cached ON the request.
+
+    Every cost-scoring pass over a queue re-reads each request's feature
+    vector (GP predict, offload trust gate, heap rebuilds) and a request
+    survives many passes (requeues, migrations, re-costings), so the
+    flatten walk — a Python recursion over the whole payload — runs once
+    per request instead of once per scoring.  Parameters are treated as
+    immutable after submission (the UM-Bridge contract); the cache is a
+    1-tuple so an unflattenable payload (None) is cached too."""
+    cached = req.__dict__.get("_feature_cache")
+    if cached is not None:
+        return cached[0]
+    feats = flatten_parameters(req.parameters)
+    req.__dict__["_feature_cache"] = (feats,)
+    return feats
+
+
 class _RunningQuantiles:
     """Bounded sorted window of observations with linear-interp quantiles."""
 
     def __init__(self, window: int):
         self.window = window
         self._ordered: List[float] = []        # sorted values
-        self._fifo: List[float] = []           # arrival order (for eviction)
+        # arrival order (for eviction): a deque, because a full window
+        # evicts on EVERY observation — on the executor's completion path
+        # — and list.pop(0) is an O(window) memmove each time
+        self._fifo: Deque[float] = deque()
         self.count = 0
 
     def add(self, x: float):
@@ -93,7 +124,7 @@ class _RunningQuantiles:
         self._fifo.append(x)
         bisect.insort(self._ordered, x)
         if len(self._fifo) > self.window:
-            old = self._fifo.pop(0)
+            old = self._fifo.popleft()
             del self._ordered[bisect.bisect_left(self._ordered, old)]
 
     def quantile(self, q: float) -> Optional[float]:
@@ -138,6 +169,24 @@ class QuantileEstimator:
             if rq is None or rq.count < self.min_observed:
                 return None
             return rq.quantile(self.predict_quantile)
+
+    def predict_many(self, reqs: Sequence[EvalRequest]
+                     ) -> List[Optional[float]]:
+        """Batched `predict`: one lock acquisition and one quantile
+        evaluation per distinct model for the whole batch — a UQ queue is
+        thousands of requests over a handful of models."""
+        with self._lock:
+            per_model: Dict[str, Optional[float]] = {}
+            out: List[Optional[float]] = []
+            for req in reqs:
+                name = req.model_name
+                if name not in per_model:
+                    rq = self._per_model.get(name)
+                    per_model[name] = (
+                        None if rq is None or rq.count < self.min_observed
+                        else rq.quantile(self.predict_quantile))
+                out.append(per_model[name])
+            return out
 
     def quantile(self, q: float, model_name: Optional[str] = None
                  ) -> Optional[float]:
@@ -198,7 +247,7 @@ class GPRuntimePredictor:
     # -- RuntimePredictor -----------------------------------------------
     def observe(self, req: EvalRequest, compute_t: float) -> None:
         self._fallback.observe(req, compute_t)
-        feats = flatten_parameters(req.parameters)
+        feats = request_features(req)
         if feats is None:
             return
         from repro.uq import gp
@@ -244,7 +293,7 @@ class GPRuntimePredictor:
                     self._post_version += 1
 
     def predict(self, req: EvalRequest) -> Optional[float]:
-        feats = flatten_parameters(req.parameters)
+        feats = request_features(req)
         with self._lock:
             post = self._post
             dim_ok = feats is not None and self._dim == len(feats or [])
@@ -253,6 +302,43 @@ class GPRuntimePredictor:
         from repro.uq import gp
         mean, _ = gp.predict(post, [feats])
         return float(math.exp(float(mean[0, 0])))
+
+    def predict_many(self, reqs: Sequence[EvalRequest]
+                     ) -> List[Optional[float]]:
+        """Batched `predict`: every GP-eligible request in the batch is
+        scored by ONE `gp.predict_batch` pass (bucket-padded, at most
+        `len(gp.PREDICT_BUCKETS)` compile shapes per training-set size,
+        one fused launch per chunk) instead of one `gp.predict` — and one
+        XLA dispatch — per task.  Feature vectors come from the
+        per-request cache, so `flatten_parameters` never re-walks a
+        payload on re-costing.  Ineligible requests (no posterior yet,
+        unflattenable or wrong-dimension payloads) take the per-model
+        quantile fallback in one batch as well."""
+        with self._lock:
+            post = self._post
+            dim = self._dim
+        feats = [request_features(r) for r in reqs]
+        out: List[Optional[float]] = [None] * len(reqs)
+        gp_idx: List[int] = []
+        fb_idx: List[int] = []
+        for i, f in enumerate(feats):
+            if post is not None and f is not None and dim == len(f):
+                gp_idx.append(i)
+            else:
+                fb_idx.append(i)
+        if gp_idx:
+            from repro.uq import gp
+            import numpy as np
+            x = np.asarray([feats[i] for i in gp_idx], dtype=np.float32)
+            mean, _ = gp.predict_batch(post, x)
+            secs = np.exp(np.asarray(mean)[:, 0].astype(np.float64))
+            for j, i in enumerate(gp_idx):
+                out[i] = float(secs[j])
+        if fb_idx:
+            fb = self._fallback.predict_many([reqs[i] for i in fb_idx])
+            for j, i in enumerate(fb_idx):
+                out[i] = fb[j]
+        return out
 
     def version(self) -> object:
         """Changes only when predictions may have changed: per posterior

@@ -31,6 +31,33 @@ PREDICT_BUCKETS = (64, 256, 1024)
 predict_batch_shapes: collections.Counter = collections.Counter()
 
 
+def bucket_of(n: int) -> int:
+    """The padded row count a chunk of `n` queries compiles at.  Raises
+    (never a silent StopIteration — this is exported for external shape
+    accounting) for chunks beyond the largest bucket: `predict_batch`
+    splits those first, and so should any caller."""
+    if n > PREDICT_BUCKETS[-1]:
+        raise ValueError(f"chunk of {n} rows exceeds the largest predict "
+                         f"bucket ({PREDICT_BUCKETS[-1]}); chunk it first")
+    return next(b for b in PREDICT_BUCKETS if n <= b)
+
+
+def bucket_launches(s: int) -> list:
+    """The exact padded-launch sizes `predict_batch` issues for a batch
+    of `s` queries: full largest-bucket chunks plus one bucketed
+    remainder.  The set of distinct values is the compile-shape bill —
+    callers (benchmarks, shape-discipline tests) can assert against it
+    without replaying the chunk loop."""
+    if s <= 0:
+        return []
+    cap = PREDICT_BUCKETS[-1]
+    full, rest = divmod(s, cap)
+    out = [cap] * full
+    if rest:
+        out.append(bucket_of(rest))
+    return out
+
+
 @dataclasses.dataclass
 class GPParams:
     log_lengthscale: jax.Array       # [D]
@@ -230,7 +257,7 @@ def predict_batch(post: GPPosterior, x_star: jax.Array
     means, variances = [], []
     for lo in range(0, s, cap):
         chunk = x_star[lo:lo + cap]
-        bucket = next(b for b in PREDICT_BUCKETS if chunk.shape[0] <= b)
+        bucket = bucket_of(chunk.shape[0])
         pad = bucket - chunk.shape[0]
         if pad:
             chunk = jnp.pad(chunk, ((0, pad), (0, 0)))

@@ -1,0 +1,504 @@
+"""Order-equivalence suite for the O(log n) queue structures.
+
+The PR that introduced `repro.sched.costq` rebuilt every per-decision
+operation in the scheduling hot path (pack/sjf/lpt pops, the steal
+queue's warm-model match, cost-heap rebuilds) to be O(log n) or batched.
+The refactor claims to be behaviour-preserving, so this module keeps
+MINIMAL NAIVE REFERENCES — the literal pre-refactor heap/deque
+implementations — and drives both through long seeded push/pop/remove
+op traces, asserting byte-identical pop sequences and `pending()`
+snapshots.
+
+One deliberate semantic change is encoded in the steal reference rather
+than papered over: anonymous-consumer drains and steal-victim tie-breaks
+now iterate workers by ascending wid (never dict insertion order), so
+sim/live parity cannot depend on which worker happened to pop first in
+history.  The reference implements exactly that rule.
+
+Also here: the batched predictor contract (`predict_many` ==
+one-at-a-time `predict`), per-request feature caching, the GP rebuild's
+compile-shape discipline, `_RunningQuantiles` eviction after the deque
+swap, and the broker's epoch-cached allocation views.
+"""
+import heapq
+import math
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.cluster import Allocation, Broker
+from repro.core.task import EvalRequest
+from repro.sched import (GPRuntimePredictor, QuantileEstimator,
+                         SortedCostQueue, WorkerView, make_policy)
+from repro.sched.policy import SchedulingPolicy
+from repro.sched.predictor import _RunningQuantiles, request_features
+from repro.uq import gp
+
+MODELS = ("gs2", "proxy", "cheap")
+
+
+def _req(i, rng):
+    """A randomised request: some have hints, some have GP-able params,
+    some have junk payloads (predictor fallback paths)."""
+    kind = rng.integers(0, 4)
+    params = [[float(rng.uniform(0, 1)), float(rng.uniform(0, 1))]]
+    if kind == 0:
+        params = "not-numeric"                 # unflattenable
+    return EvalRequest(
+        model_name=MODELS[int(rng.integers(0, len(MODELS)))],
+        parameters=params,
+        time_request=(float(rng.uniform(0.5, 60.0))
+                      if rng.random() < 0.8 else None),
+        deadline=(float(rng.uniform(0, 500.0))
+                  if rng.random() < 0.5 else None),
+        task_id=f"eq-{i}")
+
+
+# --------------------------------------------------------------------------
+# naive references: the pre-refactor implementations, verbatim semantics
+# --------------------------------------------------------------------------
+class _NaiveCostOrdered(SchedulingPolicy):
+    """The old heap: push O(log n), rebuild via per-item `cost`."""
+
+    sign = 1.0
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._heap = []
+        self._built_version = None
+
+    def _maybe_rebuild(self):
+        if self.predictor is None or not self._heap:
+            return
+        v = self._predictor_version()
+        if v != self._built_version:
+            self._heap = [(self.sign * self.cost(item[0]), tick, item)
+                          for _, tick, item in self._heap]
+            heapq.heapify(self._heap)
+            self._built_version = v
+
+    def push(self, req, attempt):
+        heapq.heappush(self._heap, (self.sign * self.cost(req),
+                                    next(self._tick), (req, attempt)))
+
+    def pop(self, worker=None):
+        self._maybe_rebuild()
+        return heapq.heappop(self._heap)[2] if self._heap else None
+
+    def pending(self):
+        return [item for _, _, item in sorted(self._heap)]
+
+    def __len__(self):
+        return len(self._heap)
+
+
+class NaiveSJF(_NaiveCostOrdered):
+    sign = 1.0
+
+
+class NaiveLPT(_NaiveCostOrdered):
+    sign = -1.0
+
+
+class NaivePack(_NaiveCostOrdered):
+    """The old O(n log n)-per-pop budget fit: sort, scan, remove, heapify."""
+
+    sign = -1.0
+
+    def __init__(self, predictor=None, init_margin: float = 1.0):
+        super().__init__(predictor)
+        self.init_margin = init_margin
+
+    def pop(self, worker=None):
+        self._maybe_rebuild()
+        if not self._heap:
+            return None
+        if worker is None or worker.budget_left is None:
+            return heapq.heappop(self._heap)[2]
+        budget = worker.budget_left - self.init_margin
+        order = sorted(self._heap)
+        for entry in order:
+            if -entry[0] <= budget:
+                self._heap.remove(entry)
+                heapq.heapify(self._heap)
+                return entry[2]
+        entry = order[-1]
+        self._heap.remove(entry)
+        heapq.heapify(self._heap)
+        return entry[2]
+
+
+class NaiveSteal(SchedulingPolicy):
+    """The old deque-scan steal queue, with the ONE deliberate change of
+    this PR folded in: worker iteration is by ascending wid (anonymous
+    drains and steal-victim ties), never dict insertion order."""
+
+    def __init__(self, predictor=None):
+        super().__init__(predictor)
+        self._local = {}
+        self._global = deque()
+        self._affinity = {}
+
+    def push(self, req, attempt):
+        wid = self._affinity.get(req.model_name)
+        if wid is not None and wid in self._local:
+            self._local[wid].append((req, attempt))
+        else:
+            self._global.append((req, attempt))
+
+    def pop(self, worker=None):
+        if worker is None:
+            if self._global:
+                return self._global.popleft()
+            for wid in sorted(self._local):
+                if self._local[wid]:
+                    return self._local[wid].popleft()
+            return None
+        mine = self._local.setdefault(worker.wid, deque())
+        if mine:
+            return mine.popleft()
+        if self._global:
+            for i, (req, attempt) in enumerate(self._global):
+                if req.model_name in worker.warm_models:
+                    del self._global[i]
+                    self._affinity[req.model_name] = worker.wid
+                    return req, attempt
+            req, attempt = self._global.popleft()
+            self._affinity[req.model_name] = worker.wid
+            return req, attempt
+        victim = None
+        for wid in sorted(self._local):
+            q = self._local[wid]
+            if wid != worker.wid and q and \
+                    (victim is None or len(q) > len(victim)):
+                victim = q
+        if victim:
+            req, attempt = victim.pop()
+            self._affinity[req.model_name] = worker.wid
+            return req, attempt
+        return None
+
+    def pending(self):
+        out = list(self._global)
+        for wid in sorted(self._local):
+            out.extend(self._local[wid])
+        return out
+
+    def __len__(self):
+        return len(self._global) + sum(len(q) for q in self._local.values())
+
+    def remove_worker(self, wid):
+        q = self._local.pop(wid, None)
+        if q:
+            self._global.extendleft(reversed(q))
+        self._affinity = {m: w for m, w in self._affinity.items()
+                          if w != wid}
+
+
+NAIVE = {"sjf": NaiveSJF, "lpt": NaiveLPT, "pack": NaivePack,
+         "steal": NaiveSteal,
+         # fcfs/edf structures were already O(log n); their references
+         # are the policies themselves re-instantiated (the differential
+         # driver then checks determinism under the shared op trace)
+         "fcfs": lambda predictor=None: make_policy("fcfs", predictor),
+         "edf": lambda predictor=None: make_policy("edf", predictor)}
+
+
+# --------------------------------------------------------------------------
+# the differential driver
+# --------------------------------------------------------------------------
+def _ids(items):
+    return [(r.task_id, a) for r, a in items]
+
+
+def _drive(name, seed, n_ops=600, predictor_factory=None):
+    """One seeded op trace through the real policy and its reference;
+    every pop result and every pending snapshot must match exactly."""
+    rng = np.random.default_rng(seed)
+    pred_new = predictor_factory() if predictor_factory else None
+    pred_ref = predictor_factory() if predictor_factory else None
+    new = make_policy(name, pred_new)
+    ref = NAIVE[name](predictor=pred_ref)
+    wids = [0, 1, 2, 3]
+    pushed = 0
+    for op_i in range(n_ops):
+        op = rng.random()
+        if op < 0.45:                           # push
+            req = _req(f"{name}-{seed}-{pushed}", rng)
+            pushed += 1
+            attempt = int(rng.integers(1, 3))
+            new.push(req, attempt)
+            ref.push(req, attempt)
+        elif op < 0.85:                         # pop, assorted views
+            v = rng.random()
+            if v < 0.25:
+                view = None
+            else:
+                warm = frozenset(m for m in MODELS if rng.random() < 0.4)
+                budget = (float(rng.uniform(0.0, 80.0))
+                          if rng.random() < 0.6 else None)
+                view = WorkerView(wid=int(rng.choice(wids)),
+                                  warm_models=warm, budget_left=budget)
+            a, b = new.pop(view), ref.pop(view)
+            assert (a is None) == (b is None), (name, seed, op_i)
+            if a is not None:
+                assert (a[0].task_id, a[1]) == (b[0].task_id, b[1]), \
+                    (name, seed, op_i)
+        elif op < 0.90 and name == "steal":     # worker death (reflow)
+            wid = int(rng.choice(wids))
+            new.remove_worker(wid)
+            ref.remove_worker(wid)
+        else:                                   # observation (re-costing)
+            if pred_new is not None:
+                r = _req(f"{name}-{seed}-obs-{op_i}", rng)
+                t = float(rng.uniform(0.1, 50.0))
+                pred_new.observe(r, t)
+                pred_ref.observe(r, t)
+        if op_i % 37 == 0:
+            assert _ids(new.pending()) == _ids(ref.pending()), \
+                (name, seed, op_i)
+        assert len(new) == len(ref), (name, seed, op_i)
+    # drain both dry through mixed views and compare the full tail
+    view = WorkerView(wid=0, budget_left=25.0)
+    while True:
+        a, b = new.pop(view), ref.pop(view)
+        assert (a is None) == (b is None)
+        if a is None:
+            break
+        assert (a[0].task_id, a[1]) == (b[0].task_id, b[1])
+    assert len(new) == 0 and len(ref) == 0
+
+
+@pytest.mark.parametrize("name", ["fcfs", "sjf", "lpt", "pack", "steal",
+                                  "edf"])
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_pop_order_matches_naive_reference(name, seed):
+    _drive(name, seed)
+
+
+@pytest.mark.parametrize("name", ["sjf", "lpt", "pack"])
+def test_pop_order_matches_with_online_predictor(name):
+    """Re-costing rebuilds (predictor version bumps mid-trace) must leave
+    the new batched-rebuild store in exactly the old heap's order."""
+    _drive(name, seed=3, predictor_factory=lambda:
+           QuantileEstimator(min_observed=1))
+
+
+def test_steal_anonymous_drain_is_wid_ordered():
+    """The satellite fix: anonymous pops drain local queues by ascending
+    wid, regardless of which worker appeared first."""
+    p = make_policy("steal")
+    # build affinity so pushes land on locals: wid 5 first, then wid 1
+    for wid, model in ((5, "m5"), (1, "m1")):
+        p.push(EvalRequest(model, [[0.0]], task_id=f"seed-{wid}"), 1)
+        assert p.pop(WorkerView(wid=wid))[0].task_id == f"seed-{wid}"
+    p.push(EvalRequest("m5", [[0.0]], task_id="on-5"), 1)
+    p.push(EvalRequest("m1", [[0.0]], task_id="on-1"), 1)
+    assert p.pop()[0].task_id == "on-1"        # wid 1 before wid 5
+    assert p.pop()[0].task_id == "on-5"
+
+
+# --------------------------------------------------------------------------
+# SortedCostQueue unit fuzz
+# --------------------------------------------------------------------------
+def test_costq_matches_flat_sorted_list():
+    rng = np.random.default_rng(11)
+    q = SortedCostQueue()
+    ref = []
+    tick = 0
+    for _ in range(4000):
+        op = rng.random()
+        if op < 0.5 or not ref:
+            key = float(rng.integers(0, 40))   # many duplicate keys
+            q.insert(key, tick, f"it{tick}")
+            ref.append((key, tick, f"it{tick}"))
+            ref.sort(key=lambda e: (e[0], e[1]))
+            tick += 1
+        elif op < 0.65:
+            assert q.pop_first() == ref.pop(0)
+        elif op < 0.8:
+            assert q.pop_last() == ref.pop()
+        else:
+            bound = float(rng.integers(0, 40))
+            got = q.pop_first_at_least(bound)
+            want = next((e for e in ref if e[0] >= bound), None)
+            assert got == want
+            if want is not None:
+                ref.remove(want)
+        assert len(q) == len(ref)
+    assert q.entries() == ref
+
+
+def test_costq_rebuild_rebalances():
+    q = SortedCostQueue((float(k), k, k) for k in range(5000))
+    q.rebuild([(float(-e[0]), e[1], e[2]) for e in q.entries()])
+    keys = [e[0] for e in q.entries()]
+    assert keys == sorted(keys) and len(q) == 5000
+    assert q.pop_first()[2] == 4999            # biggest old key now first
+
+
+# --------------------------------------------------------------------------
+# batched predictors
+# --------------------------------------------------------------------------
+def test_quantile_predict_many_matches_predict():
+    rng = np.random.default_rng(2)
+    est = QuantileEstimator(min_observed=2)
+    reqs = [_req(f"q-{i}", rng) for i in range(50)]
+    for i, r in enumerate(reqs[:30]):
+        est.observe(r, float(rng.uniform(1, 20)))
+    assert est.predict_many(reqs) == [est.predict(r) for r in reqs]
+
+
+def test_gp_predict_many_matches_predict():
+    rng = np.random.default_rng(4)
+    pred = GPRuntimePredictor(min_fit=8, refit_every=16, fit_steps=40)
+    for x in rng.uniform(0, 1, size=(24, 2)):
+        pred.observe(EvalRequest("m", [list(map(float, x))]),
+                     0.5 + 2.0 * x[0] + x[1])
+    assert pred.n_fits >= 1
+    reqs = [EvalRequest("m", [list(map(float, x))])
+            for x in rng.uniform(0.2, 0.8, size=(12, 2))]
+    reqs.append(EvalRequest("m", "junk-params"))   # fallback row mixed in
+    many = pred.predict_many(reqs)
+    single = [pred.predict(r) for r in reqs]
+    assert many[-1] == single[-1]              # fallback path identical
+    # GP rows: batched bucket-padded path vs per-task solve — same maths,
+    # different kernels, so equality is numerical not bitwise
+    np.testing.assert_allclose(many[:-1], single[:-1], rtol=1e-3)
+
+
+def test_request_features_flattens_once(monkeypatch):
+    import repro.sched.predictor as P
+    calls = {"n": 0}
+    real = P.flatten_parameters
+
+    def counting(params):
+        calls["n"] += 1
+        return real(params)
+
+    monkeypatch.setattr(P, "flatten_parameters", counting)
+    req = EvalRequest("m", [[1.0, 2.0]])
+    assert P.request_features(req) == [1.0, 2.0]
+    assert P.request_features(req) == [1.0, 2.0]
+    bad = EvalRequest("m", "junk")
+    assert P.request_features(bad) is None     # None is cached too
+    assert P.request_features(bad) is None
+    assert calls["n"] == 2
+
+
+def test_gp_costed_rebuild_shape_discipline():
+    """The acceptance criterion: a full cost-store rebuild over a large
+    GP-costed queue issues at most len(PREDICT_BUCKETS) distinct compile
+    shapes (one batched pass), never one predict per task."""
+    rng = np.random.default_rng(9)
+    pred = GPRuntimePredictor(min_fit=8, refit_every=1000, fit_steps=30)
+    for x in rng.uniform(0, 1, size=(16, 2)):
+        pred.observe(EvalRequest("m", [list(map(float, x))]),
+                     1.0 + x[0] + x[1])
+    assert pred.n_fits >= 1
+    pol = make_policy("sjf", pred)
+    n = 300
+    for i, x in enumerate(rng.uniform(0, 1, size=(n, 2))):
+        pol.push(EvalRequest("m", [list(map(float, x))],
+                             task_id=f"sd-{i}"), 1)
+    # new observations install a fresh posterior -> version bump
+    for x in rng.uniform(0, 1, size=(8, 2)):
+        pred.observe(EvalRequest("m", [list(map(float, x))]),
+                     1.0 + x[0] + x[1])
+    before = dict(gp.predict_batch_shapes)
+    assert pol.pop() is not None               # triggers the rebuild
+    new_shapes = {k: v - before.get(k, 0)
+                  for k, v in gp.predict_batch_shapes.items()
+                  if v - before.get(k, 0) > 0}
+    assert 0 < len(new_shapes) <= len(gp.PREDICT_BUCKETS), new_shapes
+    # and the padded launch sizes are exactly the published bucket plan
+    assert sorted(s for _, s in new_shapes) == \
+        sorted(set(gp.bucket_launches(n)))
+
+
+def test_bucket_launches_matches_chunking():
+    cap = gp.PREDICT_BUCKETS[-1]
+    assert gp.bucket_launches(0) == []
+    assert gp.bucket_launches(1) == [gp.PREDICT_BUCKETS[0]]
+    assert gp.bucket_launches(cap) == [cap]
+    assert gp.bucket_launches(cap + 1) == [cap, gp.PREDICT_BUCKETS[0]]
+    assert gp.bucket_launches(5 * cap + 300) == [cap] * 5 + \
+        [gp.bucket_of(300)]
+
+
+# --------------------------------------------------------------------------
+# satellites: quantile window eviction, broker view caches
+# --------------------------------------------------------------------------
+def test_running_quantiles_deque_eviction_window():
+    rq = _RunningQuantiles(window=5)
+    for x in [9.0, 1.0, 5.0, 3.0, 7.0, 2.0, 8.0]:
+        rq.add(x)
+    # the two oldest (9, 1) were evicted; the window is the last five
+    assert rq.count == 7
+    assert rq._ordered == sorted([5.0, 3.0, 7.0, 2.0, 8.0])
+    assert rq.quantile(0.0) == 2.0 and rq.quantile(1.0) == 8.0
+
+
+def test_broker_allocation_views_track_changes():
+    b = Broker(policy="fcfs")
+    a0 = Allocation(b.next_alloc_id(), 2, 100.0).submit(0.0, 0.0)
+    a1 = Allocation(b.next_alloc_id(), 2, 100.0).submit(0.0, 0.0)
+    b.add_allocation(a0)
+    first = b.allocations()
+    assert [a.alloc_id for a in first] == [0]
+    assert b.allocations() is first            # cache hit, no resort
+    b.add_allocation(a1)
+    assert [a.alloc_id for a in b.allocations()] == [0, 1]
+    assert b._open_ids() == [0, 1]
+    b.drain_allocation(a0.alloc_id, now=1.0)   # queued -> cancelled
+    assert b._open_ids() == [1]
+    b.remove_allocation(a1.alloc_id, now=2.0)
+    assert b._open_ids() == []
+    # drain keeps the (now expired) group registered; remove forgets it
+    assert [a.alloc_id for a in b.allocations()] == [a0.alloc_id]
+    # out-of-band state change (the stepper's tick path) + invalidate
+    a2 = Allocation(b.next_alloc_id(), 1, 10.0).submit(0.0, 0.0)
+    b.add_allocation(a2)
+    a2.tick(0.0)
+    assert b._open_ids() == [a2.alloc_id]
+    a2.tick(50.0)                              # walltime expiry
+    b.invalidate_allocations()
+    assert b._open_ids() == []
+
+
+def test_steal_tombstones_do_not_accumulate():
+    """Warm-match pops tombstone the FIFO view; the tombstones must not
+    retain request payloads or grow memory with total tasks ever pushed
+    (compaction once dead entries dominate)."""
+    p = make_policy("steal")
+    n = 1000
+    for i in range(n):
+        p.push(EvalRequest("a", [[float(i)]], task_id=f"c{i}"), 1)
+    warm = WorkerView(wid=0, warm_models=frozenset({"a"}))
+    for i in range(n):
+        assert p.pop(warm)[0].task_id == f"c{i}"   # all via the warm index
+    assert len(p) == 0
+    # the FIFO view was never popped, yet holds no payloads and is small
+    assert len(p._global) <= 128
+    assert all(e[1] is None for e in p._global)
+
+
+def test_bucket_of_oversize_raises():
+    with pytest.raises(ValueError):
+        gp.bucket_of(gp.PREDICT_BUCKETS[-1] + 1)
+
+
+def test_steal_warm_match_after_tombstones():
+    """Warm-model hits must survive interleaved FIFO pops that tombstone
+    entries in the per-model index."""
+    p = make_policy("steal")
+    for i in range(6):
+        p.push(EvalRequest("a" if i % 2 else "b", [[0.0]],
+                           task_id=f"t{i}"), 1)
+    warm_a = WorkerView(wid=0, warm_models=frozenset({"a"}))
+    assert p.pop(warm_a)[0].task_id == "t1"    # earliest "a"
+    assert p.pop(None)[0].task_id == "t0"      # FIFO skips nothing yet
+    assert p.pop(warm_a)[0].task_id == "t3"    # next "a", over tombstone
+    assert p.pop(None)[0].task_id == "t2"      # FIFO skips dead t1/t3
+    assert len(p) == 2
