@@ -1,0 +1,217 @@
+"""Benchmark: where does scheduling overhead actually go?
+
+The paper (§IV-A) reports overhead as one scalar per task:
+``(end - submit) - cpu_time``.  This benchmark runs traced
+`simulate_cluster` scenarios through `repro.obs` and decomposes that
+scalar into its additive components — queue wait (capacity existed but
+was busy), allocation wait (no open allocation: autoalloc bootstrap /
+SLURM-queue share), dispatch latency, and retry (work burned by
+walltime kills) — and prints the attribution table per scenario:
+
+  * ``static``   — fixed pool, bursty arrivals: queue wait plus the
+    initial allocation's own modelled SLURM-queue wait (alloc wait);
+  * ``elastic``  — autoalloc with a short walltime: alloc-wait and
+    retry components appear (the elasticity trade the paper studies);
+  * ``offload``  — surrogate-offload routing: offload decisions traced,
+    queue wait collapses for trusted tasks.
+
+Hard checks (non-zero exit on failure):
+  * additivity: every per-task breakdown sums EXACTLY (1e-6) to the
+    `TaskRecord.overhead` scalar it decomposes;
+  * the exported Chrome trace passes `validate_chrome_trace` (B/E/X/i
+    well-formed, per-track monotone timestamps);
+  * the registry sampled a non-trivial timeseries aligned to the
+    stepper ticks.
+
+Writes ``BENCH_overhead_attribution.json`` plus a Perfetto-loadable
+``TRACE_overhead_attribution.json`` for the elastic scenario (CI
+uploads it as an artifact).
+
+    PYTHONPATH=src python benchmarks/overhead_attribution.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List
+
+from repro.cluster import AutoAllocConfig, bursty_trace, simulate_cluster
+from repro.core import backends
+from repro.obs import (MetricsRegistry, Tracer, format_breakdown,
+                       validate_chrome_trace)
+
+
+def _elastic_cfg(walltime_s: float) -> AutoAllocConfig:
+    return AutoAllocConfig(workers_per_alloc=2, walltime_s=walltime_s,
+                           backlog_high_s=30.0, backlog_low_s=5.0,
+                           max_pending=2, max_allocations=4,
+                           min_allocations=0, idle_drain_s=20.0,
+                           hysteresis_s=5.0)
+
+
+class _TrustAll:
+    """Deterministic offload engine for the routing scenario: trusts
+    every task over the runtime budget (no GP, so the scenario is
+    seed-stable)."""
+
+    latency_s = 0.05
+    n_virtual_workers = 2
+    tracer = None
+
+    def __init__(self, runtime_budget_s: float = 10.0):
+        self.runtime_budget_s = runtime_budget_s
+        self.n_considered = 0
+        self.n_offloaded = 0
+
+    def decide(self, req, cost=None):
+        self.n_considered += 1
+        offload = bool(cost and cost >= self.runtime_budget_s
+                       and not req.config.get("_no_surrogate"))
+        if offload:
+            req.config["_surrogate"] = True
+            self.n_offloaded += 1
+        if self.tracer is not None:
+            self.tracer.instant("offload.decide",
+                                args={"task": req.task_id,
+                                      "offload": offload})
+        return offload
+
+    def note_served(self):
+        pass
+
+    def observe(self, *a, **kw):
+        pass
+
+
+def run_scenario(name: str, spec, trace, **sim_kw) -> Dict[str, Any]:
+    tracer = Tracer(capacity=262_144)
+    registry = MetricsRegistry(max_samples=65_536)
+    t0 = time.perf_counter()
+    res = simulate_cluster(spec, trace, tracer=tracer, registry=registry,
+                           **sim_kw)
+    wall = time.perf_counter() - t0
+
+    att = res.overhead_attribution
+    problems: List[str] = []
+
+    # additivity: the decomposition must reproduce §IV-A exactly
+    rec_by = {r.task_id: r for r in res.records}
+    worst = 0.0
+    for tid, bd in att["per_task"].items():
+        err = abs(bd.overhead_s - rec_by[tid].overhead)
+        worst = max(worst, err)
+        if err > 1e-6:
+            problems.append(f"{name}: task {tid} decomposes to "
+                            f"{bd.overhead_s:.6f}s but record overhead "
+                            f"is {rec_by[tid].overhead:.6f}s")
+    if att["n_tasks"] != len(res.records):
+        problems.append(f"{name}: attribution covers {att['n_tasks']} "
+                        f"tasks, records have {len(res.records)}")
+
+    chrome = tracer.to_chrome()
+    problems += [f"{name}: {p}" for p in validate_chrome_trace(chrome)]
+
+    ts = registry.timeseries()
+    if len(ts["t"]) < 2:
+        problems.append(f"{name}: registry sampled {len(ts['t'])} ticks")
+    if "queue_depth" not in ts or "busy_workers" not in ts:
+        problems.append(f"{name}: registry missing cluster gauges "
+                        f"({sorted(ts)})")
+
+    print(f"\n[{name}] {len(res.records)} tasks, "
+          f"{len(tracer.events())} events "
+          f"({tracer.n_dropped} dropped), {len(ts['t'])} registry "
+          f"samples, {wall*1e3:.0f} ms wall")
+    print(format_breakdown(att))
+    if worst > 0:
+        print(f"  additivity worst |error|: {worst:.2e}s")
+
+    return {
+        "scenario": name,
+        "n_tasks": len(res.records),
+        "n_events": len(tracer.events()),
+        "n_dropped": tracer.n_dropped,
+        "n_registry_samples": len(ts["t"]),
+        "wall_s": wall,
+        "totals": att["totals"],
+        "additivity_worst_err_s": worst,
+        "problems": problems,
+        "_tracer": tracer,
+        "_timeseries": ts,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller traces")
+    ap.add_argument("--json", default="BENCH_overhead_attribution.json")
+    ap.add_argument("--trace-out",
+                    default="TRACE_overhead_attribution.json")
+    args = ap.parse_args(argv)
+
+    spec = backends.get("hq")
+    bursts, size = (2, 10) if args.quick else (4, 24)
+
+    scenarios = []
+    scenarios.append(run_scenario(
+        "static", spec,
+        bursty_trace(n_bursts=bursts, burst_size=size, seed=1),
+        n_workers=3, seed=1))
+    scenarios.append(run_scenario(
+        "elastic", spec,
+        bursty_trace(n_bursts=bursts, burst_size=size, seed=3),
+        autoalloc=_elastic_cfg(walltime_s=60.0), max_attempts=6, seed=3))
+    from repro.cluster import Broker
+    offload_broker = Broker()
+    offload_broker.attach_surrogate(_TrustAll(runtime_budget_s=10.0))
+    scenarios.append(run_scenario(
+        "offload", spec,
+        bursty_trace(n_bursts=bursts, burst_size=size, runtime_s=30.0,
+                     hints=True, seed=5),
+        broker=offload_broker,
+        autoalloc=_elastic_cfg(walltime_s=300.0), seed=5))
+
+    # the elastic scenario has the richest lifecycle: export its trace
+    elastic = next(s for s in scenarios if s["scenario"] == "elastic")
+    elastic["_tracer"].write_chrome(args.trace_out)
+    print(f"\nwrote {args.trace_out} "
+          f"({len(elastic['_tracer'].events())} events, Perfetto-loadable)")
+
+    problems = [p for s in scenarios for p in s["problems"]]
+    # cross-scenario expectations: the components the scenarios exist
+    # to surface actually showed up
+    if scenarios[1]["totals"]["retry_s"] <= 0:
+        problems.append("elastic: walltime kills produced no retry_s")
+    if scenarios[1]["totals"]["alloc_wait_s"] <= 0:
+        problems.append("elastic: autoalloc bootstrap produced no "
+                        "alloc_wait_s")
+    if scenarios[0]["totals"]["queue_wait_s"] <= 0:
+        problems.append("static: bursty arrivals produced no queue_wait_s")
+
+    out = {
+        "bench": "overhead_attribution",
+        "quick": bool(args.quick),
+        "scenarios": [{k: v for k, v in s.items()
+                       if not k.startswith("_")} for s in scenarios],
+        "timeseries": {s["scenario"]: s["_timeseries"]
+                       for s in scenarios},
+        "problems": problems,
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    if problems:
+        print("\nFAIL:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("\nall attribution checks PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

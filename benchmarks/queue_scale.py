@@ -195,6 +195,41 @@ def bench_rebuild(n: int, seed: int = 5) -> Dict[str, float]:
     }
 
 
+def bench_tracing(n: int, seed: int = 7) -> Dict[str, float]:
+    """Per-op cost of a full Broker push+pop cycle with and without a
+    `repro.obs.Tracer` attached — the opt-in tracing layer must stay
+    within 5% of the per-op budget (`--quick` gate: traced per-op
+    <= 1.05x ``--pop-budget-us``; budget-relative, so wall-clock noise
+    between the two runs cannot flake the gate)."""
+    from repro.cluster import Allocation, Broker
+    from repro.obs import Tracer
+
+    out: Dict[str, float] = {"n": n}
+    for label, tracer in (("untraced_us", None),
+                          ("traced_us", Tracer(capacity=4 * n))):
+        broker = Broker()
+        alloc = Allocation(broker.next_alloc_id(), 8, None)
+        alloc.submit(0.0, 0.0)
+        alloc.tick(0.0)                        # zero queue wait: RUNNING
+        broker.add_allocation(alloc)
+        if tracer is not None:
+            broker.set_tracer(tracer)
+        view = WorkerView(wid=0, warm_models=frozenset(),
+                          budget_left=None, alloc_id=alloc.alloc_id)
+        reqs = make_requests(n, seed=seed)
+        t0 = time.perf_counter()
+        for req in reqs:
+            broker.push(req, 1)
+        got = 0
+        while broker.pop(view) is not None:
+            got += 1
+        wall = time.perf_counter() - t0
+        assert got == n, f"broker lost items ({got}/{n})"
+        out[label] = 1e6 * wall / n
+    out["overhead_frac"] = out["traced_us"] / out["untraced_us"] - 1.0
+    return out
+
+
 def bench_sim(n_tasks: int, seed: int = 3) -> Dict[str, float]:
     """End-to-end `simulate_cluster` throughput (tasks scheduled per
     wall-second of simulator time) under the pack policy."""
@@ -258,6 +293,12 @@ def main(argv=None) -> int:
     print(f"  simulate_cluster: {sim['n_tasks']} tasks in "
           f"{sim['wall_s']:.2f} s -> {sim['tasks_per_s']:,.0f} tasks/s")
 
+    tracing = bench_tracing(10_000)
+    print(f"  tracing overhead (broker push+pop, n=10,000): "
+          f"untraced {tracing['untraced_us']:.2f} us/op, "
+          f"traced {tracing['traced_us']:.2f} us/op "
+          f"({tracing['overhead_frac']:+.1%})")
+
     # ---- criteria ------------------------------------------------------
     by = {(r["policy"], r["n"]): r for r in rows}
     naive_by = {r["n"]: r for r in naive_rows}
@@ -268,12 +309,18 @@ def main(argv=None) -> int:
     print(f"\npack pop speedup vs naive at n={cmp_n:,}: {speedup:,.1f}x "
           f"(criterion >= 10x) -> {'PASS' if ok else 'FAIL'}")
     budget_ok = True
+    traced_ok = True
     if args.quick:
         pack_10k = by[("pack", 10_000)]["pop_us"]
         budget_ok = pack_10k <= args.pop_budget_us
         print(f"pack per-pop at 10k queued: {pack_10k:.1f} us "
               f"(budget {args.pop_budget_us:.0f} us) -> "
               f"{'PASS' if budget_ok else 'FAIL'}")
+        traced_budget = 1.05 * args.pop_budget_us
+        traced_ok = tracing["traced_us"] <= traced_budget
+        print(f"traced broker per-op at 10k: {tracing['traced_us']:.1f} us"
+              f" (budget {traced_budget:.0f} us = 1.05x pop budget) -> "
+              f"{'PASS' if traced_ok else 'FAIL'}")
 
     out = {
         "bench": "queue_scale",
@@ -282,18 +329,21 @@ def main(argv=None) -> int:
         "naive_pack": naive_rows,
         "rebuild": rebuilds,
         "simulate_cluster": sim,
+        "tracing": tracing,
         "criteria": {
             "pack_vs_naive_speedup": speedup,
             "pack_vs_naive_at_n": cmp_n,
             "speedup_ok": bool(ok),
             "pop_budget_us": args.pop_budget_us,
             "pop_budget_ok": bool(budget_ok),
+            "traced_budget_us": 1.05 * args.pop_budget_us,
+            "traced_budget_ok": bool(traced_ok),
         },
     }
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.json}")
-    return 0 if (ok and budget_ok) else 1
+    return 0 if (ok and budget_ok and traced_ok) else 1
 
 
 if __name__ == "__main__":

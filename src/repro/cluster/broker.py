@@ -93,6 +93,10 @@ class Broker(SchedulingPolicy):
         # through the ordinary allocation lifecycle
         self.surrogate = None
         self._surrogate_id: Optional[int] = None
+        # optional repro.obs.Tracer (set via set_tracer): queue-entry,
+        # steal and migration instants + allocation lifecycle spans are
+        # emitted HERE, the one code path both drivers share
+        self.tracer = None
         if surrogate is not None:
             self.attach_surrogate(surrogate)
 
@@ -110,6 +114,20 @@ class Broker(SchedulingPolicy):
         super().bind(predictor)
         for q in self._queues.values():
             q.bind(self.predictor)
+        return self
+
+    def set_tracer(self, tracer) -> "Broker":
+        """Attach a `repro.obs.Tracer`.  Allocations registered BEFORE
+        the tracer arrived (the parity harness pre-seeds the sim broker
+        with the executor's initial group) retro-emit their lifecycle
+        spans from their own timestamp fields, so a late-attached tracer
+        produces the same allocation span sequence as an early one."""
+        self.tracer = tracer
+        if self.surrogate is not None:
+            self.surrogate.tracer = tracer
+        if tracer is not None:
+            for a in self.allocations():
+                tracer.alloc_state(a)
         return self
 
     def attach_surrogate(self, offload) -> Allocation:
@@ -130,6 +148,9 @@ class Broker(SchedulingPolicy):
         self._allocs[alloc.alloc_id] = alloc
         self._queues[alloc.alloc_id] = make_policy("fcfs", self.predictor)
         self.invalidate_allocations()
+        if self.tracer is not None:
+            offload.tracer = self.tracer
+            self.tracer.alloc_state(alloc)
         return alloc
 
     def _surrogate_open(self) -> bool:
@@ -166,6 +187,8 @@ class Broker(SchedulingPolicy):
         self._allocs[alloc.alloc_id] = alloc
         self._queues[alloc.alloc_id] = self._make_queue()
         self.invalidate_allocations()
+        if self.tracer is not None:
+            self.tracer.alloc_state(alloc)
         self._flush_unrouted()
         return alloc
 
@@ -178,6 +201,8 @@ class Broker(SchedulingPolicy):
             return
         alloc.drain(now)
         self.invalidate_allocations()
+        if self.tracer is not None:
+            self.tracer.alloc_state(alloc, ts=now)
         self._migrate_off(alloc_id)
 
     def remove_allocation(self, alloc_id: int, now: float) -> None:
@@ -188,6 +213,8 @@ class Broker(SchedulingPolicy):
             return
         alloc.terminate(now)
         self.invalidate_allocations()          # closed before migration...
+        if self.tracer is not None:
+            self.tracer.alloc_state(alloc, ts=now)
         self._migrate_off(alloc_id)
         self._queues.pop(alloc_id, None)
         del self._allocs[alloc_id]             # caller keeps it for records
@@ -205,6 +232,12 @@ class Broker(SchedulingPolicy):
             items.append(item)
             item = q.pop()
         for req, attempt in items:
+            if self.tracer is not None:
+                # a migrated task is the SAME queue entry rerouted — no
+                # fresh task.queued instant, its wait keeps accruing
+                self.tracer.instant("task.migrate",
+                                    args={"task": req.task_id,
+                                          "from": alloc_id})
             self._note_dequeue(req, attempt)   # re-enters via _route_push
             self._route_push(req, attempt)
 
@@ -269,6 +302,8 @@ class Broker(SchedulingPolicy):
 
     # -- SchedulingPolicy protocol ---------------------------------------
     def push(self, req, attempt: int) -> None:
+        if self.tracer is not None:
+            self.tracer.task_queued(req.task_id, attempt)
         self._route_push(req, attempt)
 
     def pop(self, worker: Optional[WorkerView] = None
@@ -316,6 +351,11 @@ class Broker(SchedulingPolicy):
             return None
         req, attempt = item
         self._affinity[req.model_name] = worker.alloc_id
+        if self.tracer is not None:
+            self.tracer.instant("task.steal",
+                                args={"task": req.task_id,
+                                      "from": victim,
+                                      "to": worker.alloc_id})
         return req, attempt
 
     def pending(self) -> List[QueueItem]:

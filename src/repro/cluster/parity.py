@@ -93,7 +93,9 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                 max_workers: Optional[int] = None,
                 seed: int = 0, tick_s: float = 5.0,
                 max_attempts: int = 3,
-                max_t: float = 1e9) -> ClusterResult:
+                max_t: float = 1e9,
+                tracer: Any = None,
+                registry: Any = None) -> ClusterResult:
     """Run one trace through a real `Executor` on a virtual clock.
 
     Same signature and semantics as `simulate_cluster`; the difference
@@ -121,7 +123,8 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
         n_workers=(0 if allocator is not None else n_workers),
         max_attempts=max_attempts, max_workers=max_workers,
         allocation_s=walltime_s, cluster=broker, autoalloc=allocator,
-        clock=clock, monitor_interval=None)
+        clock=clock, monitor_interval=None,
+        tracer=tracer, metrics_registry=registry)
 
     warm: Dict[int, Set[str]] = {}
     inflight: Dict[int, _Inflight] = {}
@@ -222,15 +225,20 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
     with ex._cv:
         ex._stepper.release(end)
     records = ex.records()
-    fill_lost(records, reqs, end)
+    fill_lost(records, reqs, end, tracer)
     alloc_records = sorted((a.record() for a in ex._retired_allocs),
                            key=lambda r: r.alloc_id)
     decisions = (list(allocator.decisions) if allocator is not None
                  else [])
     events = list(ex._stepper.events)
     ex.shutdown()
+    attribution = None
+    if tracer is not None:
+        from repro.obs.attribution import attribute_overhead
+        attribution = attribute_overhead(tracer.events())
     return ClusterResult(records=records, allocations=alloc_records,
-                         decisions=decisions, events=events)
+                         decisions=decisions, events=events,
+                         overhead_attribution=attribution)
 
 
 def _never_called():
@@ -336,13 +344,20 @@ def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
                seed: int = 0, tick_s: float = 5.0,
                max_attempts: int = 3,
                surrogate_factory: Any = None,
-               tol: float = 1e-9) -> ParityReport:
+               tol: float = 1e-9,
+               tracers: Optional[tuple] = None) -> ParityReport:
     """One differential run: same trace, same config, both drivers.
 
     Fresh-but-identical Broker/AutoAllocator instances are built per
     side (the objects are stateful, so they cannot literally be shared
     across two runs); in static mode the sim broker is seeded with a
     zero-queue-wait allocation matching the executor's initial group.
+
+    ``tracers=(sim_tracer, live_tracer)`` attaches one `repro.obs.Tracer`
+    per driver; both run on the virtual clock, so
+    `span_sequence(sim_tracer) == span_sequence(live_tracer)` on a
+    parity-clean trace — the observability layer inherits the
+    no-forked-logic guarantee.
     """
     def make_broker():
         b = Broker(policy=policy)
@@ -358,6 +373,8 @@ def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
     kw = dict(seed=seed, tick_s=tick_s, max_attempts=max_attempts,
               max_workers=max_workers, walltime_s=walltime_s,
               n_workers=n_workers)
+    sim_tracer, live_tracer = tracers if tracers is not None else (None,
+                                                                   None)
     sim_broker = make_broker()
     if autoalloc is None:
         # match the live executor's initial group: granted at t=0 with
@@ -367,8 +384,10 @@ def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
         init.submit(0.0, 0.0)
         sim_broker.add_allocation(init)
     sim = simulate_cluster(spec, trace, broker=sim_broker,
-                           allocator=make_allocator(), **kw)
+                           allocator=make_allocator(), tracer=sim_tracer,
+                           **kw)
     live = replay_live(spec, trace, broker=make_broker(),
-                       allocator=make_allocator(), **kw)
+                       allocator=make_allocator(), tracer=live_tracer,
+                       **kw)
     return ParityReport(sim=sim, live=live,
                         divergences=compare_results(sim, live, tol))

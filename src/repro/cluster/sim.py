@@ -38,6 +38,7 @@ from repro.core.backends import BackendSpec
 from repro.core.metrics import (AllocationRecord, TaskRecord,
                                 killed_task_record)
 from repro.core.task import EvalRequest
+from repro.obs.attribution import attribute_overhead
 from repro.sched.policy import WorkerView
 from repro.sched.registry import make_predictor
 
@@ -53,6 +54,9 @@ class ClusterResult:
     allocations: List[AllocationRecord]
     decisions: List[Dict[str, Any]]
     events: List[StepperEvent] = dataclasses.field(default_factory=list)
+    # per-task overhead decomposition (repro.obs.attribute_overhead
+    # output); populated only when the run was traced (``tracer=``)
+    overhead_attribution: Optional[Dict[str, Any]] = None
 
     def summary(self) -> Dict[str, float]:
         done = [r for r in self.records if r.status == "ok"]
@@ -112,7 +116,7 @@ def next_event_time(arrivals, arr_i: int, busy_ends, broker,
 
 
 def fill_lost(records: List[TaskRecord], reqs: List[EvalRequest],
-              end: float) -> None:
+              end: float, tracer: Any = None) -> None:
     """Tasks a run could never finish (e.g. a static pool whose only
     allocation expired with work still queued) MUST leave a record —
     silent loss would read as a smaller, fully-served workload."""
@@ -123,6 +127,8 @@ def fill_lost(records: List[TaskRecord], reqs: List[EvalRequest],
                 task_id=req.task_id, submit_t=req.submit_t,
                 start_t=end, end_t=end, cpu_time=0.0, compute_t=0.0,
                 worker="", attempts=0, status="lost"))
+            if tracer is not None:
+                tracer.task_lost(req.task_id, end)
 
 
 class _SimWorker:
@@ -152,7 +158,9 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                      max_workers: Optional[int] = None,
                      seed: int = 0, tick_s: float = 5.0,
                      max_attempts: int = 3,
-                     max_t: float = 1e9) -> ClusterResult:
+                     max_t: float = 1e9,
+                     tracer: Any = None,
+                     registry: Any = None) -> ClusterResult:
     """Run one trace through brokered, allocation-backed dispatch.
 
     Two modes:
@@ -193,6 +201,14 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
 
     arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
 
+    now = 0.0
+    if tracer is not None:
+        # the tracer stamps with the virtual event time — the live
+        # executor binds its own injected clock, so parity replays of
+        # the same trace produce identical span timestamps
+        tracer.bind_clock(lambda: now)
+        broker.set_tracer(tracer)
+
     if allocator is None and not any(not a.virtual
                                      for a in broker.allocations()):
         static = Allocation(broker.next_alloc_id(), n_workers, walltime_s)
@@ -207,7 +223,6 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     records: List[TaskRecord] = []
     n_final = 0                                # tasks with a final record
     arr_i = 0
-    now = 0.0
     next_tick = 0.0
     retired: List[Allocation] = []             # keep records of removed allocs
 
@@ -265,7 +280,8 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
         worker_count=lambda: len([w for w in workers.values()
                                   if not w.alloc.virtual]),
         record_failed=record_failed,
-        max_workers=max_workers, max_attempts=None, retired=retired)
+        max_workers=max_workers, max_attempts=None, retired=retired,
+        tracer=tracer, registry=registry)
 
     max_iters = 10_000 + 1_000 * len(reqs)     # runaway-config backstop
     iters = 0
@@ -309,11 +325,22 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 attempts=w.attempt, status="ok"))
             n_final += 1
             w.alloc.note_busy(w.init + w.compute)
+            if tracer is not None:
+                tracer.task_attempt(req.task_id, w.alloc.alloc_id, w.wid,
+                                    w.mark_t, w.start_t, w.init, w.end_t,
+                                    w.attempt, "ok")
             # surrogate completions are milliseconds of GP predict: they
             # must not teach the runtime predictor what the REAL model
             # costs at this theta
             if broker.predictor is not None and \
                     not req.config.get("_surrogate"):
+                if registry is not None:
+                    # pre-observe residual: |predicted - actual| before
+                    # this completion sharpens the predictor
+                    pred = broker.predictor.predict(req)
+                    if pred is not None:
+                        registry.observe("predictor_abs_residual",
+                                         abs(pred - w.compute))
                 broker.predictor.observe(req, w.compute)
             w.busy, w.req = False, None
 
@@ -356,11 +383,13 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     # cancelled (0 node-seconds, as scancel would) -----------------------
     end = max((r.end_t for r in records), default=now)
     stepper.release(end)
-    fill_lost(records, reqs, end)
+    fill_lost(records, reqs, end, tracer)
     alloc_records = sorted((a.record() for a in retired),
                            key=lambda r: r.alloc_id)
     return ClusterResult(
         records=records,
         allocations=alloc_records,
         decisions=list(allocator.decisions) if allocator is not None else [],
-        events=list(stepper.events))
+        events=list(stepper.events),
+        overhead_attribution=(attribute_overhead(tracer.events())
+                              if tracer is not None else None))

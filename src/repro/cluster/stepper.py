@@ -47,6 +47,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.cluster.allocation import (DRAINING, EXPIRED, QUEUED, RUNNING,
                                       Allocation)
+from repro.obs.trace import RingBuffer
 
 # (request, attempt, busy-since): one in-flight task killed with its group
 KilledTask = Tuple[Any, int, float]
@@ -90,6 +91,16 @@ class LifecycleStepper:
                    bound only, the sim default).
     retired:       list retired allocations are appended to (the driver's
                    record store); a fresh list when omitted.
+    tracer:        optional `repro.obs.Tracer` — the stepper is the one
+                   choke point where allocation transitions, walltime
+                   requeues/kills, and autoalloc actions happen, so one
+                   set of spans/instants emitted here covers sim and
+                   live identically.
+    registry:      optional `repro.obs.MetricsRegistry`, sampled once
+                   per `step` (queue depth, backlog cost, busy workers,
+                   allocation counts, offload rate).
+    events_cap:    audit-trail bound — `events` is a ring buffer so a
+                   long-lived executor cannot grow it without limit.
     """
 
     def __init__(self, broker, allocator=None, *,
@@ -101,7 +112,9 @@ class LifecycleStepper:
                  worker_count: Optional[Callable[[], int]] = None,
                  max_workers: Optional[int] = None,
                  max_attempts: Optional[int] = None,
-                 retired: Optional[List[Allocation]] = None):
+                 retired: Optional[List[Allocation]] = None,
+                 tracer: Any = None, registry: Any = None,
+                 events_cap: int = 10_000):
         self.broker = broker
         self.allocator = allocator
         self.now = now
@@ -114,7 +127,11 @@ class LifecycleStepper:
         self.max_attempts = max_attempts
         self.retired: List[Allocation] = retired if retired is not None \
             else []
-        self.events: List[StepperEvent] = []   # spawn/retire audit trail
+        self.tracer = tracer
+        self.registry = registry
+        # spawn/retire audit trail, bounded (oldest entries drop first;
+        # `events.n_dropped` says how many a long run shed)
+        self.events: RingBuffer = RingBuffer(events_cap)
 
     # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> float:
@@ -125,7 +142,16 @@ class LifecycleStepper:
         self._transitions(now)
         self._drained_dry(now)
         if self.allocator is not None:
-            self.allocator.step(now, self.broker, self._busy())
+            actions = self.allocator.step(now, self.broker, self._busy())
+            if self.tracer is not None and actions:
+                for action, alloc in actions:
+                    self.tracer.instant(
+                        f"autoalloc.{action}", ts=now,
+                        args={"alloc": alloc.alloc_id,
+                              "n_workers": alloc.n_workers})
+        if self.registry is not None:
+            self.registry.sample_cluster(
+                now, self.broker, sum(self.busy_count().values()))
         return now
 
     def release(self, now: float) -> None:
@@ -145,6 +171,8 @@ class LifecycleStepper:
                 # tick mutates allocation state outside the broker's own
                 # methods; its cached allocation views must not go stale
                 self.broker.invalidate_allocations()
+                if self.tracer is not None:
+                    self.tracer.alloc_state(alloc, ts=now)
             if prev == QUEUED and state == RUNNING:
                 self._grant(alloc, now)
             elif prev in (RUNNING, DRAINING) and state == EXPIRED:
@@ -163,7 +191,7 @@ class LifecycleStepper:
             if alloc.n_workers == 0:
                 self._retire(alloc, now, "cancel")
                 return
-        self.events.append((now, "spawn", alloc.alloc_id, alloc.n_workers))
+        self._event(now, "spawn", alloc.alloc_id, alloc.n_workers)
         self.spawn_workers(alloc)
 
     def _drained_dry(self, now: float) -> None:
@@ -178,14 +206,28 @@ class LifecycleStepper:
         killed = self.retire_workers(alloc)
         for _req, _attempt, since in killed:
             alloc.note_busy(max(now - since, 0.0))   # partial work burned
-        self.events.append((now, kind, alloc.alloc_id, len(killed)))
+        self._event(now, kind, alloc.alloc_id, len(killed))
         self.broker.remove_allocation(alloc.alloc_id, now)
+        if self.tracer is not None:
+            self.tracer.alloc_state(alloc, ts=now)   # terminal span
         self.retired.append(alloc)
-        for req, attempt, _since in killed:
+        for req, attempt, since in killed:
             if attempt < self._attempt_limit(req):
+                if self.tracer is not None:
+                    self.tracer.task_requeue(req.task_id, attempt, now,
+                                             since)
                 self.broker.push(req, attempt + 1)
             else:
+                if self.tracer is not None:
+                    self.tracer.task_killed(req.task_id, attempt, now,
+                                            since)
                 self.record_failed(req, attempt, alloc, now)
+
+    def _event(self, now: float, kind: str, alloc_id: int, n: int) -> None:
+        self.events.append((now, kind, alloc_id, n))
+        if self.tracer is not None:
+            self.tracer.instant(f"alloc.{kind}", ts=now, pid=alloc_id + 1,
+                                args={"alloc": alloc_id, "n": n})
 
     # -- views -----------------------------------------------------------
     def _attempt_limit(self, req) -> int:

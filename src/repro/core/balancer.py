@@ -58,6 +58,11 @@ class LoadBalancer:
         self._info: Dict[str, ModelInfo] = {}
         self._executor_kw = dict(executor_kw)
         self._executor_kw.setdefault("persistent_servers", backend == "hq")
+        # honour an injected clock (virtual-time replays): the balancer's
+        # own timestamps (registration, health checks) must come off the
+        # same clock as the executor's, or parity traces mix time bases
+        self._clock: Callable[[], float] = \
+            self._executor_kw.get("clock") or time.monotonic
         self._executor_kw["policy"] = policy
         self._executor_kw["predictor"] = predictor
         if cluster is not None:
@@ -87,7 +92,7 @@ class LoadBalancer:
         ins = probe.get_input_sizes()
         outs = probe.get_output_sizes()
         info = ModelInfo(name=name, input_sizes=ins, output_sizes=outs,
-                         registered_t=time.monotonic())
+                         registered_t=self._clock())
         if verify:
             for _ in range(READINESS_PROBES):
                 i2 = probe.get_input_sizes()
@@ -137,7 +142,7 @@ class LoadBalancer:
             info.healthy = True
         except Exception:  # noqa: BLE001
             info.healthy = False
-        info.last_health_t = time.monotonic()
+        info.last_health_t = self._clock()
         return info.healthy
 
     def models(self) -> Dict[str, ModelInfo]:

@@ -215,12 +215,21 @@ class Executor:
                  autoalloc: Any = None,
                  clock: Optional[Callable[[], float]] = None,
                  monitor_interval: Optional[float] = 0.05,
+                 tracer: Any = None,
+                 metrics_registry: Any = None,
                  name: str = "hq"):
         from repro.cluster.allocation import Allocation
         from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
         from repro.cluster.broker import Broker
         from repro.cluster.stepper import LifecycleStepper
         self._clock = clock if clock is not None else time.monotonic
+        # opt-in observability (repro.obs): spans/instants stamped with
+        # THIS executor's injected clock, so virtual-clock replays
+        # produce traces comparable with the simulator's
+        self.tracer = tracer
+        self.registry = metrics_registry
+        if tracer is not None:
+            tracer.bind_clock(self._clock)
         self.model_factories = dict(model_factories)
         self.persistent_servers = persistent_servers
         self.max_attempts = max_attempts
@@ -260,6 +269,15 @@ class Executor:
         self.predictor = self.policy.predictor
         self.allocation_s = allocation_s
         self._cluster_mode = isinstance(self.policy, Broker)
+        if tracer is not None:
+            if self._cluster_mode:
+                # BEFORE the initial allocation registers, so its whole
+                # lifecycle is on the trace
+                self.policy.set_tracer(tracer)
+            else:
+                sur = self._surrogate()
+                if sur is not None:
+                    sur.tracer = tracer
 
         if autoalloc is not None:
             self.autoalloc = (autoalloc if isinstance(autoalloc,
@@ -317,7 +335,8 @@ class Executor:
                 worker_count=self._n_real_workers,
                 record_failed=self._record_expired,
                 max_workers=max_workers, max_attempts=max_attempts,
-                retired=self._retired_allocs)
+                retired=self._retired_allocs,
+                tracer=tracer, registry=metrics_registry)
         # the initial worker group: one allocation, granted immediately
         # (thread startup is the live analogue of the queue wait).  In
         # cluster mode n_workers=0 means "bootstrap from the allocator"
@@ -335,6 +354,8 @@ class Executor:
                 self.policy.add_allocation(self._initial_alloc)
             else:
                 self._initial_alloc.tick(self._t0)
+                if tracer is not None:
+                    tracer.alloc_state(self._initial_alloc)
                 for i in range(n_workers):
                     self._add_worker(self._initial_alloc)
         if self._cluster_mode:
@@ -361,6 +382,9 @@ class Executor:
 
     def _push(self, req: EvalRequest, attempt: int):
         with self._cv:
+            if self.tracer is not None and not self._cluster_mode:
+                # cluster mode: the Broker's own push emits this
+                self.tracer.task_queued(req.task_id, attempt)
             self.policy.push(req, attempt)
             self._cv.notify()
 
@@ -395,6 +419,17 @@ class Executor:
             # of GP predict must not teach the runtime predictor what the
             # REAL model costs at this theta.
             if self.predictor is not None:
+                if self.registry is not None:
+                    # residual BEFORE observe: the prediction this run's
+                    # dispatch actually used, not the sharpened one
+                    try:
+                        pred = self.predictor.predict(req)
+                        if pred is not None:
+                            self.registry.observe(
+                                "predictor_abs_residual",
+                                abs(pred - res.compute_t))
+                    except Exception:  # noqa: BLE001 — best-effort
+                        pass
                 try:
                     self.predictor.observe(req, res.compute_t)
                 except Exception:  # noqa: BLE001 — prediction is best-effort
@@ -425,6 +460,13 @@ class Executor:
             # finish; matching simulate_cluster, its late result is void)
             if prev is None or prev.status not in ("ok", "failed"):
                 self._results[req.task_id] = res
+                if self.tracer is not None and entry is not None:
+                    w = entry[1]
+                    aid = (w.alloc.alloc_id if w.alloc is not None else 0)
+                    self.tracer.task_attempt(
+                        req.task_id, aid, w.wid, res.dispatch_t,
+                        res.start_t, res.init_t, res.end_t,
+                        res.attempts, res.status)
             self._release_dependents()
             self._cv.notify_all()
 
@@ -448,6 +490,8 @@ class Executor:
                     task_id=req.task_id, status="failed", error=error,
                     worker=worker.name, attempts=attempt,
                     submit_t=req.submit_t, start_t=now, end_t=now)
+                if self.tracer is not None:
+                    self.tracer.task_failed(req.task_id, attempt, ts=now)
                 self._release_dependents()
                 self._cv.notify_all()
 
@@ -768,8 +812,16 @@ class Executor:
             sur = self._surrogate()
             offload = (dataclasses.asdict(sur.stats())
                        if sur is not None else None)
+            attribution = None
+            if self.tracer is not None:
+                from repro.obs.attribution import attribute_overhead
+                attribution = attribute_overhead(
+                    self.tracer.events())["totals"]
             return {
                 "offload": offload,
+                "stepper_events": (list(self._stepper.events)
+                                   if self._stepper is not None else []),
+                "overhead_attribution": attribution,
                 "server_init_total_t": self._init_total_t,
                 "server_inits": self._init_count,
                 "policy": self.policy.name,

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 _task_counter = itertools.count()
@@ -104,8 +103,10 @@ class EvalRequest:
     def __post_init__(self):
         if not self.task_id:
             self.task_id = f"task-{next(_task_counter)}"
-        if not self.submit_t:
-            self.submit_t = time.monotonic()
+        # submit_t is stamped by whoever owns the clock: `Executor.submit`
+        # (its injected clock) or the simulator (trace arrival time).  A
+        # wall-clock default here would leak `time.monotonic` into
+        # virtual-clock parity replays.
 
 
 @dataclasses.dataclass

@@ -1,0 +1,30 @@
+"""`repro.obs`: unified tracing, metrics registry, overhead attribution.
+
+One observability layer for both execution paths: because the spans and
+counters are instrumented at the shared `LifecycleStepper` / `Broker`
+choke points and timestamped by the injected clock, a seeded parity run
+produces identical span sequences from `simulate_cluster` and the live
+`Executor` (see `tests/test_parity.py`).  Everything is opt-in:
+``tracer=None`` / ``registry=None`` defaults keep the hot paths free of
+even the tuple-append cost.
+"""
+from repro.obs.attribution import (OverheadBreakdown, attribute_overhead,
+                                   capacity_intervals, format_breakdown)
+from repro.obs.registry import DEFAULT_EDGES, Histogram, MetricsRegistry
+from repro.obs.trace import (RingBuffer, TraceEvent, Tracer,
+                             span_sequence, validate_chrome_trace)
+
+__all__ = [
+    "DEFAULT_EDGES",
+    "Histogram",
+    "MetricsRegistry",
+    "OverheadBreakdown",
+    "RingBuffer",
+    "TraceEvent",
+    "Tracer",
+    "attribute_overhead",
+    "capacity_intervals",
+    "format_breakdown",
+    "span_sequence",
+    "validate_chrome_trace",
+]

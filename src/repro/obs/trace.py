@@ -1,0 +1,395 @@
+"""Structured span tracing for sim and live dispatch (`repro.obs`).
+
+One tracer covers both drivers because it is instrumented at the shared
+choke points — `Broker.push`, the `LifecycleStepper` phases, and the
+completion paths of `simulate_cluster` / `Executor._complete` — and is
+timestamped by the *injected clock* (the sim binds its virtual event
+time, the executor binds `self._clock`).  A seeded parity run therefore
+produces the same span sequence from both drivers: same span names,
+task/alloc ids, and virtual-clock timestamps (asserted in
+`tests/test_parity.py`).
+
+Event model (Chrome trace-event phases):
+
+  * per-task spans on the scheduler process (pid 0, tid = task index):
+    ``task.queued`` (X: queue entry -> dispatch decision),
+    ``task.dispatch`` (X: decision -> occupancy), terminal instants
+    ``task.ok`` / ``task.failed`` / ``task.timeout`` / ``task.lost``;
+  * per-attempt execution spans on the owning allocation's process
+    (pid = alloc_id + 1, tid = worker id): ``task.init``, ``task.run``;
+  * per-allocation lifecycle spans (pid = alloc_id + 1, tid 0):
+    ``alloc.queued`` / ``alloc.running`` / ``alloc.draining`` as B/E
+    pairs, terminal ``alloc.expired`` instant — timestamped from the
+    `Allocation`'s own fields (submit/grant/end), so they are
+    parity-exact and monotone per track;
+  * instants for scheduling decisions: ``offload.decide``,
+    ``task.steal``, ``task.migrate``, ``task.requeue``, ``task.killed``,
+    ``alloc.spawn`` / ``alloc.kill`` / ``alloc.drain-dry`` /
+    ``alloc.cancel``, ``autoalloc.submit`` / ``autoalloc.drain``, and
+    ``gp.predict_batch`` compile-shape launches.
+
+Everything lands in a bounded ring buffer (oldest events drop first;
+`n_dropped` says how many), exportable as JSONL (`write_jsonl`) and
+Chrome trace-event JSON (`to_chrome` / `write_chrome`, loadable in
+Perfetto).  Tracing is opt-in everywhere (`tracer=None` default) and the
+hot-path cost of one event is a tuple append into a deque.
+"""
+from __future__ import annotations
+
+import json
+import math
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# (ts, ph, name, pid, tid, dur, args): ph in {"B","E","X","i"}; dur is
+# meaningful for "X" only; args is a small dict or None
+TraceEvent = Tuple[float, str, str, int, int, float, Optional[dict]]
+
+_ALLOC_RANK = {None: -1, "pending": -1, "queued": 0, "running": 1,
+               "draining": 2, "expired": 3}
+
+
+class RingBuffer:
+    """Bounded append-only event store: O(1) append, oldest-first drop.
+
+    Also serves as the `LifecycleStepper.events` audit trail bound (the
+    unbounded-growth fix), so it supports the list-ish surface the
+    drivers use: iteration, `len`, and `list(buf)`.
+    """
+
+    __slots__ = ("_buf", "n_seen")
+
+    def __init__(self, capacity: int = 65536):
+        self._buf: deque = deque(maxlen=int(capacity))
+        self.n_seen = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._buf.maxlen or 0
+
+    @property
+    def n_dropped(self) -> int:
+        return self.n_seen - len(self._buf)
+
+    def append(self, item) -> None:
+        self.n_seen += 1
+        self._buf.append(item)
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self.n_seen = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self):
+        return iter(self._buf)
+
+    def __getitem__(self, i):
+        return list(self._buf)[i]
+
+    def __repr__(self) -> str:
+        return (f"RingBuffer(len={len(self._buf)}, "
+                f"capacity={self.capacity}, dropped={self.n_dropped})")
+
+
+class Tracer:
+    """Low-overhead span/instant recorder shared by sim and live.
+
+    `clock` supplies default timestamps for instants; drivers bind their
+    injected clock (`bind_clock`) so both paths stamp the same virtual
+    seconds.  All helpers are plain tuple appends — safe under the
+    executor's dispatch lock.
+    """
+
+    def __init__(self, capacity: int = 65536,
+                 clock: Optional[Callable[[], float]] = None):
+        self.buf = RingBuffer(capacity)
+        self._clock: Callable[[], float] = clock or (lambda: 0.0)
+        self._task_tids: Dict[str, int] = {}
+        self._queued: Dict[Tuple[str, int], float] = {}
+        self._alloc_state: Dict[int, Optional[str]] = {}
+        self._alloc_open: Dict[int, str] = {}
+        self._pid_labels: Dict[int, str] = {0: "scheduler"}
+
+    def bind_clock(self, clock: Callable[[], float]) -> "Tracer":
+        self._clock = clock
+        return self
+
+    # -- low-level emission ---------------------------------------------
+    def emit(self, ph: str, name: str, ts: float, *, pid: int = 0,
+             tid: int = 0, dur: float = 0.0,
+             args: Optional[dict] = None) -> None:
+        self.buf.append((float(ts), ph, name, pid, tid, float(dur), args))
+
+    def instant(self, name: str, ts: Optional[float] = None, *,
+                pid: int = 0, tid: int = 0,
+                args: Optional[dict] = None) -> None:
+        if ts is None:
+            ts = self._clock()
+        self.emit("i", name, ts, pid=pid, tid=tid, args=args)
+
+    def span(self, name: str, start: float, end: float, *, pid: int = 0,
+             tid: int = 0, args: Optional[dict] = None) -> None:
+        self.emit("X", name, start, pid=pid, tid=tid,
+                  dur=max(float(end) - float(start), 0.0), args=args)
+
+    # -- task protocol ---------------------------------------------------
+    def _tid(self, task_id: str) -> int:
+        tid = self._task_tids.get(task_id)
+        if tid is None:
+            tid = len(self._task_tids)
+            self._task_tids[task_id] = tid
+        return tid
+
+    def task_queued(self, task_id: str, attempt: int,
+                    ts: Optional[float] = None) -> None:
+        """A (task, attempt) entered a scheduler queue (submit, requeue)."""
+        if ts is None:
+            ts = self._clock()
+        self._queued[(task_id, attempt)] = float(ts)
+        self.instant("task.queued", ts=ts, pid=0, tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt})
+
+    def task_attempt(self, task_id: str, alloc_id: int, wid: int,
+                     mark_t: float, start_t: float, init_t: float,
+                     end_t: float, attempt: int, status: str) -> None:
+        """One completed attempt: closes the queued span, records the
+        dispatch/init/run spans on the worker track, and stamps the
+        terminal instant (``task.<status>``)."""
+        tid = self._tid(task_id)
+        q_ts = self._queued.pop((task_id, attempt), mark_t)
+        a = {"task": task_id, "attempt": attempt}
+        self.span("task.queued", q_ts, mark_t, pid=0, tid=tid, args=a)
+        self.span("task.dispatch", mark_t, start_t, pid=0, tid=tid,
+                  args={"task": task_id, "attempt": attempt,
+                        "alloc": alloc_id})
+        pid = alloc_id + 1
+        if init_t > 0:
+            self.span("task.init", start_t, start_t + init_t, pid=pid,
+                      tid=wid, args=a)
+        self.span("task.run", start_t + init_t, end_t, pid=pid, tid=wid,
+                  args={"task": task_id, "attempt": attempt,
+                        "status": status})
+        self.instant(f"task.{status}", ts=end_t, pid=0, tid=tid, args=a)
+
+    def task_requeue(self, task_id: str, attempt: int, now: float,
+                     since: float) -> None:
+        """An in-flight attempt died with its allocation and was requeued
+        at attempt+1.  ``since`` is the killed attempt's dispatch mark:
+        the burned ``[since, now]`` interval is retry overhead."""
+        self._close_queued(task_id, attempt, since)
+        self.instant("task.requeue", ts=now, pid=0,
+                     tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt,
+                           "since": float(since)})
+
+    def task_killed(self, task_id: str, attempt: int, now: float,
+                    since: float) -> None:
+        """Killed with every attempt spent (terminal walltime kill)."""
+        self._close_queued(task_id, attempt, since)
+        self.instant("task.killed", ts=now, pid=0,
+                     tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt,
+                           "since": float(since)})
+
+    def task_failed(self, task_id: str, attempt: int,
+                    ts: Optional[float] = None) -> None:
+        """Terminal failure outside the walltime-kill path (exceptions)."""
+        if ts is None:
+            ts = self._clock()
+        self.instant("task.failed", ts=ts, pid=0, tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt})
+
+    def task_lost(self, task_id: str, now: float) -> None:
+        """The run ended with this task still queued (never served)."""
+        tid = self._tid(task_id)
+        for key in sorted(k for k in self._queued if k[0] == task_id):
+            q_ts = self._queued.pop(key)
+            self.span("task.queued", q_ts, now, pid=0, tid=tid,
+                      args={"task": task_id, "attempt": key[1]})
+        self.instant("task.lost", ts=now, pid=0, tid=tid,
+                     args={"task": task_id})
+
+    def _close_queued(self, task_id: str, attempt: int,
+                      until: float) -> None:
+        q_ts = self._queued.pop((task_id, attempt), None)
+        if q_ts is not None:
+            self.span("task.queued", q_ts, until, pid=0,
+                      tid=self._tid(task_id),
+                      args={"task": task_id, "attempt": attempt})
+
+    # -- allocation protocol ---------------------------------------------
+    def alloc_state(self, alloc, ts: Optional[float] = None) -> None:
+        """Record an allocation's lifecycle state, emitting every
+        transition since the last recorded one (so a tracer attached to
+        a broker with live allocations backfills their history).  The
+        timestamps come from the `Allocation`'s own fields — identical
+        between sim and live by the parity contract — except DRAINING,
+        which is a decision with no field (the caller passes ``ts``)."""
+        state = alloc.state
+        aid = alloc.alloc_id
+        if self._alloc_state.get(aid) == state:
+            return
+        pid = aid + 1
+        self._pid_labels.setdefault(
+            pid, f"alloc{aid}" + (" (virtual)" if alloc.virtual else ""))
+        # draining is a decision, not a fact with a timestamp field: it
+        # only exists as a state if drain() was actually called (in which
+        # case alloc_state ran then) — never synthesise it in passing on
+        # a direct RUNNING -> EXPIRED kill
+        t_of = {"queued": alloc.submit_t, "running": alloc.ready_t,
+                "draining": ts if state == "draining" else None,
+                "expired": alloc.end_t}
+        prev_rank = _ALLOC_RANK.get(self._alloc_state.get(aid), -1)
+        target_rank = _ALLOC_RANK.get(state, -1)
+        for st in ("queued", "running", "draining", "expired"):
+            rank = _ALLOC_RANK[st]
+            if rank <= prev_rank or rank > target_rank:
+                continue
+            t = t_of.get(st)
+            if t is None:
+                if st != state:
+                    continue               # state skipped (e.g. cancel)
+                t = ts if ts is not None else self._clock()
+            self._alloc_transition(aid, pid, st, float(t),
+                                   virtual=alloc.virtual)
+        self._alloc_state[aid] = state
+
+    def _alloc_transition(self, aid: int, pid: int, state: str, t: float,
+                          *, virtual: bool = False) -> None:
+        open_name = self._alloc_open.pop(aid, None)
+        if open_name is not None:
+            self.emit("E", open_name, t, pid=pid, tid=0)
+        if state == "expired":
+            self.instant("alloc.expired", ts=t, pid=pid, tid=0,
+                         args={"alloc": aid})
+        else:
+            self.emit("B", f"alloc.{state}", t, pid=pid, tid=0,
+                      args={"alloc": aid, "virtual": virtual})
+            self._alloc_open[aid] = f"alloc.{state}"
+
+    # -- export ----------------------------------------------------------
+    def events(self) -> List[TraceEvent]:
+        return list(self.buf)
+
+    @property
+    def n_dropped(self) -> int:
+        return self.buf.n_dropped
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Chrome trace-event JSON (Perfetto-loadable): ts/dur in
+        microseconds, pid = allocation (+1; 0 is the scheduler), tid =
+        worker (or task index on the scheduler process).  Events are
+        globally sorted by timestamp, so per-track timestamps are
+        monotone — `validate_chrome_trace` checks exactly that."""
+        out: List[Dict[str, Any]] = []
+        for pid in sorted(self._pid_labels):
+            out.append({"name": "process_name", "ph": "M", "pid": pid,
+                        "tid": 0,
+                        "args": {"name": self._pid_labels[pid]}})
+        # stable sort by timestamp only: same-ts events keep emission
+        # order, which is the correct B/E nesting order per track (a
+        # phase-priority tiebreak would split zero-length B/E pairs)
+        for ts, ph, name, pid, tid, dur, args in sorted(
+                self.buf, key=lambda e: e[0]):
+            ev: Dict[str, Any] = {"name": name, "ph": ph,
+                                  "ts": ts * 1e6, "pid": pid, "tid": tid}
+            if ph == "X":
+                ev["dur"] = dur * 1e6
+            if ph == "i":
+                ev["s"] = "t"
+            if args:
+                ev["args"] = args
+            out.append(ev)
+        return {"traceEvents": out, "displayTimeUnit": "ms",
+                "otherData": {"n_dropped": self.buf.n_dropped}}
+
+    def write_chrome(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_chrome(), fh)
+
+    def write_jsonl(self, path: str) -> None:
+        """One JSON object per event, in emission order (seconds)."""
+        with open(path, "w") as fh:
+            for ts, ph, name, pid, tid, dur, args in self.buf:
+                row = {"ts": ts, "ph": ph, "name": name, "pid": pid,
+                       "tid": tid}
+                if ph == "X":
+                    row["dur"] = dur
+                if args:
+                    row["args"] = args
+                fh.write(json.dumps(row) + "\n")
+
+
+def span_sequence(tracer: Tracer) -> List[Tuple]:
+    """Canonical comparable form of a trace: events sorted by
+    (timestamp, phase, name, pid, tid, dur, frozen-args).  Two parity
+    drivers emit the same events at the same virtual times but not
+    always in the same buffer order (the live executor grants its
+    initial allocation inside ``__init__``), so sequence comparison is
+    on this sorted normal form."""
+    out = []
+    for ts, ph, name, pid, tid, dur, args in tracer.buf:
+        frozen = tuple(sorted(args.items())) if args else ()
+        out.append((ts, ph, name, pid, tid, dur, frozen))
+    out.sort(key=lambda e: (e[:6], repr(e[6])))
+    return out
+
+
+def validate_chrome_trace(obj: Any) -> List[str]:
+    """Validate a Chrome trace-event JSON object (the CI smoke gate).
+
+    Checks: known phases only (B/E/X/i/M), finite numeric timestamps,
+    non-negative X durations, per-(pid, tid) monotone non-decreasing
+    timestamps in list order, and well-nested B/E pairs per track
+    (an E must close the most recent open B of the same name; unclosed
+    B at end-of-trace is allowed — a ring buffer may have dropped the
+    tail).  Returns a list of problems; empty means valid."""
+    problems: List[str] = []
+    events = obj.get("traceEvents") if isinstance(obj, dict) else obj
+    if not isinstance(events, list):
+        return ["no traceEvents list"]
+    last_ts: Dict[Tuple[int, int], float] = {}
+    stacks: Dict[Tuple[int, int], List[str]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("B", "E", "X", "i", "M"):
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            problems.append(f"event {i}: missing name")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            problems.append(f"event {i}: bad ts {ts!r}")
+            continue
+        track = (ev.get("pid", 0), ev.get("tid", 0))
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev - 1e-6:
+            problems.append(f"event {i}: ts {ts} < {prev} on track "
+                            f"{track} (non-monotone)")
+        last_ts[track] = max(ts, prev if prev is not None else ts)
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or not \
+                    math.isfinite(dur) or dur < 0:
+                problems.append(f"event {i}: bad X dur {dur!r}")
+        elif ph == "B":
+            stacks.setdefault(track, []).append(ev.get("name", ""))
+        elif ph == "E":
+            stack = stacks.get(track)
+            if not stack:
+                problems.append(f"event {i}: E without open B on track "
+                                f"{track}")
+            elif stack[-1] != ev.get("name", ""):
+                problems.append(
+                    f"event {i}: E {ev.get('name')!r} does not close "
+                    f"open B {stack[-1]!r} on track {track}")
+            else:
+                stack.pop()
+    return problems

@@ -94,6 +94,9 @@ class SurrogateOffload:
         self.latency_s = latency_s
         self.n_virtual_workers = n_virtual_workers
         self.condition_every = condition_every
+        # optional repro.obs.Tracer: decide() emits an `offload.decide`
+        # instant per decision (set by Broker.set_tracer / the executor)
+        self.tracer = None
         # recency cap on the conditioned training set (mirrors
         # GPRuntimePredictor.max_points): without it every batch of
         # completions grows N forever — O(N^3) Cholesky rebuilds and a
@@ -152,6 +155,10 @@ class SurrogateOffload:
             # after a crash, trust since lost) refunds that credit: the
             # task will burn real CPU after all
             self.rollback(req)
+        if self.tracer is not None:
+            self.tracer.instant("offload.decide",
+                                args={"task": req.task_id,
+                                      "offload": bool(offload)})
         return offload
 
     def _decide(self, req: "EvalRequest", cost: Optional[float]) -> bool:

@@ -1,0 +1,128 @@
+"""Edge-case coverage for `repro.core.metrics` (§IV-A bookkeeping).
+
+The quantile interpolation, NaN-timestamp allocation records, degenerate
+histograms, and overhead clamping are all exercised implicitly by the
+benchmark suites; these tests pin the behaviours directly so a
+refactor of the metrics layer cannot silently shift them.
+"""
+import math
+
+import pytest
+
+from repro.core.metrics import (AllocationRecord, TaskRecord, _stats,
+                                killed_task_record, sd_histogram)
+
+
+# --------------------------------------------------------------------------
+# _stats quantile interpolation
+# --------------------------------------------------------------------------
+def test_stats_empty_is_all_zero():
+    s = _stats([])
+    assert s == {k: 0.0 for k in ("min", "q1", "median", "q3", "max",
+                                  "mean")}
+
+
+def test_stats_single_sample_every_quantile_collapses():
+    s = _stats([7.0])
+    assert all(s[k] == 7.0 for k in ("min", "q1", "median", "q3", "max",
+                                     "mean"))
+
+
+def test_stats_two_samples_interpolate_linearly():
+    s = _stats([0.0, 1.0])
+    assert s["min"] == 0.0 and s["max"] == 1.0
+    assert s["q1"] == pytest.approx(0.25)
+    assert s["median"] == pytest.approx(0.5)
+    assert s["q3"] == pytest.approx(0.75)
+    assert s["mean"] == pytest.approx(0.5)
+
+
+def test_stats_is_order_insensitive():
+    assert _stats([3.0, 1.0, 2.0]) == _stats([1.0, 2.0, 3.0])
+
+
+# --------------------------------------------------------------------------
+# AllocationRecord NaN handling
+# --------------------------------------------------------------------------
+def test_allocation_record_never_granted_holds_zero_node_seconds():
+    rec = AllocationRecord(alloc_id=0, n_workers=4, submit_t=10.0,
+                           start_t=float("nan"), end_t=float("nan"),
+                           state="expired")
+    assert rec.held_s == 0.0
+    assert rec.node_seconds == 0.0
+
+
+def test_allocation_record_still_held_reads_as_zero_until_released():
+    rec = AllocationRecord(alloc_id=1, n_workers=2, submit_t=0.0,
+                           start_t=5.0, end_t=float("nan"))
+    assert rec.held_s == 0.0          # no release timestamp yet
+
+
+def test_allocation_record_node_s_sentinel_vs_billed():
+    derived = AllocationRecord(alloc_id=2, n_workers=3, submit_t=0.0,
+                               start_t=10.0, end_t=20.0)
+    assert derived.node_s == -1.0     # sentinel: derive n_workers*held
+    assert derived.node_seconds == pytest.approx(30.0)
+    billed = AllocationRecord(alloc_id=3, n_workers=3, submit_t=0.0,
+                              start_t=10.0, end_t=20.0, node_s=12.5)
+    assert billed.node_seconds == 12.5   # explicit billing wins
+    zero = AllocationRecord(alloc_id=4, n_workers=3, submit_t=0.0,
+                            start_t=10.0, end_t=20.0, node_s=0.0)
+    assert zero.node_seconds == 0.0      # 0 is a value, not the sentinel
+
+
+def test_allocation_record_negative_held_clamps_to_zero():
+    rec = AllocationRecord(alloc_id=5, n_workers=2, submit_t=0.0,
+                           start_t=20.0, end_t=10.0)
+    assert rec.held_s == 0.0
+
+
+# --------------------------------------------------------------------------
+# sd_histogram degenerate inputs
+# --------------------------------------------------------------------------
+def test_sd_histogram_empty():
+    assert sd_histogram([]) == {"edges": [], "counts": []}
+
+
+def test_sd_histogram_single_value_degenerate_range():
+    h = sd_histogram([0.3, 0.3, 0.3], n_bins=4)
+    assert len(h["edges"]) == 5 and len(h["counts"]) == 4
+    assert sum(h["counts"]) == 3.0
+    assert h["edges"][0] == pytest.approx(0.3)
+    assert h["edges"][-1] > h["edges"][0]     # widened, never zero-width
+    assert all(b >= a for a, b in zip(h["edges"], h["edges"][1:]))
+
+
+def test_sd_histogram_counts_partition_the_samples():
+    xs = [0.0, 0.1, 0.2, 0.5, 1.0]
+    h = sd_histogram(xs, n_bins=5)
+    assert sum(h["counts"]) == float(len(xs))
+    assert h["counts"][-1] >= 1.0             # max lands in the last bin
+
+
+# --------------------------------------------------------------------------
+# TaskRecord.overhead clamping + killed-record shape
+# --------------------------------------------------------------------------
+def test_task_record_overhead_clamps_at_zero():
+    # cpu_time exceeding the makespan window (clock skew, rounding) must
+    # never read as negative overhead
+    r = TaskRecord(task_id="t", submit_t=0.0, start_t=0.0, end_t=5.0,
+                   cpu_time=9.0, compute_t=9.0)
+    assert r.overhead == 0.0
+
+
+def test_task_record_overhead_positive_case():
+    r = TaskRecord(task_id="t", submit_t=0.0, start_t=3.0, end_t=10.0,
+                   cpu_time=6.0, compute_t=5.0)
+    assert r.overhead == pytest.approx(4.0)
+
+
+def test_killed_task_record_canonical_shape():
+    r = killed_task_record("t9", submit_t=2.0, now=50.0, alloc_id=3,
+                           attempts=4)
+    assert r.start_t == r.end_t == 50.0
+    assert r.cpu_time == 0.0 and r.compute_t == 0.0
+    assert r.worker == "alloc3" and r.status == "failed"
+    assert r.attempts == 4
+    # all wall time since submit is overhead: nothing was ever banked
+    assert r.overhead == pytest.approx(48.0)

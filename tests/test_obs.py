@@ -1,0 +1,302 @@
+"""`repro.obs` unit + integration suite.
+
+Unit coverage for the ring buffer, tracer span protocol, Chrome-trace
+export/validation, histogram/registry mechanics, and the overhead
+attribution math; integration coverage for the claim the module exists
+to make: traced sim runs decompose `TaskRecord.overhead` EXACTLY into
+queue-wait + alloc-wait + dispatch + retry, and the registry samples a
+coherent per-tick timeseries.  (The sim/live span-sequence parity test
+lives with the rest of the differential suite in `tests/test_parity.py`.)
+"""
+import json
+import math
+
+import pytest
+
+from repro.cluster import (AutoAllocConfig, bursty_trace, simulate_cluster)
+from repro.core import backends
+from repro.obs import (DEFAULT_EDGES, Histogram, MetricsRegistry,
+                       RingBuffer, Tracer, attribute_overhead,
+                       capacity_intervals, format_breakdown,
+                       span_sequence, validate_chrome_trace)
+
+
+# --------------------------------------------------------------------------
+# RingBuffer
+# --------------------------------------------------------------------------
+def test_ringbuffer_bounds_and_drop_accounting():
+    rb = RingBuffer(capacity=4)
+    for i in range(10):
+        rb.append(i)
+    assert len(rb) == 4
+    assert list(rb) == [6, 7, 8, 9]           # oldest dropped first
+    assert rb.n_seen == 10
+    assert rb.n_dropped == 6
+    assert rb[0] == 6 and rb[-1] == 9
+    rb.clear()
+    assert len(rb) == 0 and rb.n_dropped == 0
+
+
+# --------------------------------------------------------------------------
+# Tracer span protocol
+# --------------------------------------------------------------------------
+def test_tracer_task_attempt_spans():
+    tr = Tracer()
+    tr.task_queued("t0", 1, ts=0.0)
+    tr.task_attempt("t0", alloc_id=2, wid=5, mark_t=3.0, start_t=3.5,
+                    init_t=2.0, end_t=10.0, attempt=1, status="ok")
+    by_name = {}
+    for ev in tr.events():
+        by_name.setdefault(ev[2], []).append(ev)
+    q = by_name["task.queued"]
+    # the instant at enqueue plus the closed X span
+    assert [e[1] for e in q] == ["i", "X"]
+    assert q[1][0] == 0.0 and q[1][5] == 3.0         # [0, mark]
+    d = by_name["task.dispatch"][0]
+    assert d[0] == 3.0 and d[5] == pytest.approx(0.5)
+    init = by_name["task.init"][0]
+    assert init[0] == 3.5 and init[5] == 2.0
+    assert init[3] == 3 and init[4] == 5             # pid=alloc+1, tid=wid
+    run = by_name["task.run"][0]
+    assert run[0] == 5.5 and run[5] == pytest.approx(4.5)
+    assert by_name["task.ok"][0][0] == 10.0
+
+
+def test_tracer_requeue_closes_queued_span_at_dispatch_mark():
+    tr = Tracer()
+    tr.task_queued("t0", 1, ts=0.0)
+    tr.task_requeue("t0", 1, now=50.0, since=10.0)
+    spans = [e for e in tr.events() if e[1] == "X" and e[2] == "task.queued"]
+    assert len(spans) == 1
+    assert spans[0][0] == 0.0 and spans[0][5] == 10.0   # closed at `since`
+    inst = [e for e in tr.events() if e[2] == "task.requeue"][0]
+    assert inst[0] == 50.0 and inst[6]["since"] == 10.0
+
+
+def test_tracer_lost_closes_all_pending_queue_entries():
+    tr = Tracer()
+    tr.task_queued("t0", 1, ts=0.0)
+    tr.task_queued("t0", 2, ts=5.0)
+    tr.task_lost("t0", now=20.0)
+    spans = [e for e in tr.events() if e[1] == "X"]
+    assert sorted((s[0], s[0] + s[5]) for s in spans) == \
+        [(0.0, 20.0), (5.0, 20.0)]
+    assert any(e[2] == "task.lost" for e in tr.events())
+
+
+def test_tracer_ring_buffer_drops_oldest_events():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        tr.instant("tick", ts=float(i))
+    assert len(tr.events()) == 8
+    assert tr.n_dropped == 12
+    assert tr.events()[0][0] == 12.0
+
+
+class _FakeAlloc:
+    def __init__(self, aid, submit_t, ready_t, end_t, state,
+                 virtual=False):
+        self.alloc_id = aid
+        self.submit_t = submit_t
+        self.ready_t = ready_t
+        self.end_t = end_t
+        self.state = state
+        self.virtual = virtual
+
+
+def test_alloc_state_backfills_history_and_dedups():
+    tr = Tracer()
+    a = _FakeAlloc(3, submit_t=1.0, ready_t=4.0, end_t=None,
+                   state="running")
+    tr.alloc_state(a)            # backfills queued -> running
+    tr.alloc_state(a)            # same state: no-op
+    evs = tr.events()
+    names = [(e[1], e[2]) for e in evs]
+    assert names == [("B", "alloc.queued"), ("E", "alloc.queued"),
+                     ("B", "alloc.running")]
+    assert evs[0][0] == 1.0 and evs[1][0] == 4.0 and evs[2][0] == 4.0
+    a.state, a.end_t = "expired", 9.0
+    tr.alloc_state(a, ts=9.0)
+    tail = tr.events()[-2:]
+    # direct RUNNING -> EXPIRED: no synthetic draining span in between
+    assert [(e[1], e[2]) for e in tail] == [("E", "alloc.running"),
+                                            ("i", "alloc.expired")]
+
+
+# --------------------------------------------------------------------------
+# Chrome export + validator
+# --------------------------------------------------------------------------
+def test_chrome_export_schema_and_validator(tmp_path):
+    tr = Tracer()
+    a = _FakeAlloc(0, submit_t=0.0, ready_t=0.0, end_t=None,
+                   state="running")
+    tr.alloc_state(a)
+    tr.task_queued("t0", 1, ts=0.0)
+    tr.task_attempt("t0", 0, 0, 1.0, 1.1, 0.5, 4.0, 1, "ok")
+    obj = tr.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    # zero-length B/E pair at ts=0 must stay correctly nested
+    assert obj["traceEvents"][0]["ph"] == "M"
+    path = tmp_path / "trace.json"
+    tr.write_chrome(str(path))
+    assert validate_chrome_trace(json.loads(path.read_text())) == []
+    jl = tmp_path / "trace.jsonl"
+    tr.write_jsonl(str(jl))
+    rows = [json.loads(line) for line in jl.read_text().splitlines()]
+    assert len(rows) == len(tr.events())
+    assert all("ts" in r and "ph" in r and "name" in r for r in rows)
+
+
+def test_validator_flags_malformed_traces():
+    bad = {"traceEvents": [
+        {"name": "x", "ph": "Q", "ts": 0, "pid": 0, "tid": 0},
+        {"name": "y", "ph": "X", "ts": float("nan"), "pid": 0, "tid": 0},
+        {"name": "z", "ph": "X", "ts": 5.0, "dur": -1.0, "pid": 0,
+         "tid": 0},
+        {"name": "w", "ph": "i", "ts": 1.0, "pid": 0, "tid": 0},
+        {"name": "v", "ph": "E", "ts": 6.0, "pid": 0, "tid": 0},
+    ]}
+    probs = validate_chrome_trace(bad)
+    assert any("unknown phase" in p for p in probs)
+    assert any("bad ts" in p for p in probs)
+    assert any("bad X dur" in p for p in probs)
+    assert any("non-monotone" in p for p in probs)
+    assert any("E without open B" in p for p in probs)
+    assert validate_chrome_trace({"nope": 1}) == ["no traceEvents list"]
+
+
+def test_span_sequence_is_order_insensitive():
+    t1, t2 = Tracer(), Tracer()
+    t1.instant("a", ts=1.0)
+    t1.instant("b", ts=1.0, args={"k": 2})
+    t2.instant("b", ts=1.0, args={"k": 2})
+    t2.instant("a", ts=1.0)
+    assert span_sequence(t1) == span_sequence(t2)
+
+
+# --------------------------------------------------------------------------
+# Histogram + MetricsRegistry
+# --------------------------------------------------------------------------
+def test_histogram_bucketing_and_clamping():
+    h = Histogram(edges=(0.0, 1.0, 2.0))
+    for v in (-5.0, 0.5, 1.5, 99.0):
+        h.observe(v)
+    assert h.counts == [2, 2]     # underflow clamps low, overflow high
+    assert h.n == 4
+    assert h.mean == pytest.approx((-5.0 + 0.5 + 1.5 + 99.0) / 4)
+    with pytest.raises(ValueError):
+        Histogram(edges=(1.0,))
+
+
+def test_registry_timeseries_alignment_and_nan_fill():
+    reg = MetricsRegistry(max_samples=8)
+    reg.set_gauge("depth", 3.0)
+    reg.sample(0.0)
+    reg.inc("pops")
+    reg.observe("wait", 0.2)
+    reg.set_gauge("depth", 1.0)
+    reg.sample(1.0)
+    ts = reg.timeseries()
+    assert ts["t"] == [0.0, 1.0]
+    assert ts["depth"] == [3.0, 1.0]
+    assert math.isnan(ts["pops"][0]) and ts["pops"][1] == 1.0
+    assert math.isnan(ts["wait_mean"][0])
+    assert ts["wait_mean"][1] == pytest.approx(0.2)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"pops": 1.0}
+    assert snap["histograms"]["wait"]["n"] == 1
+    assert snap["n_samples"] == 2
+
+
+def test_registry_sample_buffer_is_bounded():
+    reg = MetricsRegistry(max_samples=4)
+    for i in range(10):
+        reg.sample(float(i))
+    assert reg.n_samples == 4
+    assert reg.timeseries()["t"] == [6.0, 7.0, 8.0, 9.0]
+
+
+# --------------------------------------------------------------------------
+# overhead attribution
+# --------------------------------------------------------------------------
+def test_capacity_intervals_merge_and_ignore_virtual():
+    events = [
+        (0.0, "B", "alloc.running", 1, 0, 0.0, {"alloc": 0,
+                                                "virtual": False}),
+        (5.0, "E", "alloc.running", 1, 0, 0.0, None),
+        (3.0, "B", "alloc.running", 2, 0, 0.0, {"alloc": 1,
+                                                "virtual": False}),
+        (8.0, "E", "alloc.running", 2, 0, 0.0, None),
+        (0.0, "B", "alloc.running", 9, 0, 0.0, {"alloc": 8,
+                                                "virtual": True}),
+        (20.0, "B", "alloc.running", 3, 0, 0.0, {"alloc": 2,
+                                                 "virtual": False}),
+        (25.0, "i", "task.ok", 0, 0, 0.0, {"task": "t9"}),
+    ]
+    # [0,5] u [3,8] merge; virtual ignored; unclosed B runs to trace end
+    assert capacity_intervals(events) == [(0.0, 8.0), (20.0, 25.0)]
+
+
+def test_attribution_splits_queue_wait_by_capacity():
+    events = [
+        (0.0, "B", "alloc.running", 1, 0, 0.0, {"alloc": 0,
+                                                "virtual": False}),
+        (4.0, "E", "alloc.running", 1, 0, 0.0, None),
+        # queued [2, 10]: capacity existed over [2, 4] only
+        (2.0, "X", "task.queued", 0, 0, 8.0, {"task": "a", "attempt": 1}),
+        (10.0, "X", "task.dispatch", 0, 0, 0.5, {"task": "a",
+                                                 "attempt": 1}),
+        (10.5, "X", "task.init", 2, 0, 1.5, {"task": "a", "attempt": 1}),
+        (30.0, "i", "task.requeue", 0, 0, 0.0, {"task": "a",
+                                                "attempt": 1,
+                                                "since": 25.0}),
+        (40.0, "i", "task.ok", 0, 0, 0.0, {"task": "a"}),
+    ]
+    out = attribute_overhead(events)
+    bd = out["per_task"]["a"]
+    assert bd.queue_wait_s == pytest.approx(2.0)
+    assert bd.alloc_wait_s == pytest.approx(6.0)
+    assert bd.dispatch_s == pytest.approx(0.5)
+    assert bd.retry_s == pytest.approx(5.0)
+    assert bd.init_s == pytest.approx(1.5)
+    assert bd.status == "ok"
+    # init is informational, not part of the overhead sum
+    assert bd.overhead_s == pytest.approx(2.0 + 6.0 + 0.5 + 5.0)
+    assert out["totals"]["overhead_s"] == pytest.approx(bd.overhead_s)
+    text = format_breakdown(out)
+    assert "queue_wait_s" in text and "not overhead" in text
+
+
+def _kill_cfg(**kw):
+    base = dict(workers_per_alloc=2, walltime_s=60.0, backlog_high_s=30.0,
+                backlog_low_s=5.0, max_pending=2, max_allocations=4,
+                min_allocations=0, idle_drain_s=20.0, hysteresis_s=5.0)
+    base.update(kw)
+    return AutoAllocConfig(**base)
+
+
+def test_attribution_matches_task_record_overhead_exactly():
+    """The headline contract: on a traced sim run (with retries from
+    walltime kills), each per-task breakdown sums EXACTLY to the
+    §IV-A `TaskRecord.overhead` scalar it decomposes."""
+    spec = backends.get("hq")
+    tr = Tracer()
+    res = simulate_cluster(spec, bursty_trace(n_bursts=2, burst_size=10,
+                                              seed=3),
+                           autoalloc=_kill_cfg(), max_attempts=6, seed=3,
+                           tracer=tr)
+    att = res.overhead_attribution
+    assert att is not None and att["n_tasks"] == len(res.records)
+    rec_by = {r.task_id: r for r in res.records}
+    assert any(r.attempts > 1 for r in res.records)   # retries exercised
+    for tid, bd in att["per_task"].items():
+        assert bd.overhead_s == pytest.approx(rec_by[tid].overhead,
+                                              abs=1e-9), tid
+    assert validate_chrome_trace(tr.to_chrome()) == []
+
+
+def test_untraced_sim_has_no_attribution():
+    spec = backends.get("hq")
+    res = simulate_cluster(spec, bursty_trace(n_bursts=1, burst_size=4,
+                                              seed=0))
+    assert res.overhead_attribution is None

@@ -314,3 +314,131 @@ def test_stepper_deterministic_under_seed(seed, n, workers_per_alloc,
     # checkable core: event times are non-decreasing
     assert all(x[0] <= y[0] for x, y in zip(a.events, a.events[1:]))
     assert all(math.isfinite(e[0]) for e in a.events)
+
+
+# --------------------------------------------------------------------------
+# observability parity: one tracer schema, two drivers, identical spans
+# --------------------------------------------------------------------------
+def _span_parity(spec, trace, **kw):
+    from repro.obs import Tracer, span_sequence, validate_chrome_trace
+    st_, lt_ = Tracer(), Tracer()
+    rep = run_parity(spec, trace, tracers=(st_, lt_), **kw)
+    _assert_parity(rep)
+    sim_spans, live_spans = span_sequence(st_), span_sequence(lt_)
+    assert sim_spans == live_spans, (
+        "span sequences diverged: first sim-only="
+        f"{next((a for a, b in zip(sim_spans, live_spans) if a != b), None)}")
+    assert sim_spans                                # non-trivial trace
+    assert validate_chrome_trace(st_.to_chrome()) == []
+    assert validate_chrome_trace(lt_.to_chrome()) == []
+    return rep, st_, lt_
+
+
+def test_span_parity_static_pool():
+    """Seeded parity trace from BOTH drivers: identical span names, ids,
+    and virtual-clock timestamps (the ISSUE 6 acceptance gate)."""
+    spec = backends.get("hq")
+    _span_parity(spec, bimodal_trace(n=20, seed=9), n_workers=3, seed=9)
+
+
+def test_span_parity_elastic_with_walltime_retries():
+    spec = backends.get("hq")
+    cfg = _elastic_cfg(walltime_s=60.0)
+    rep, st_, _ = _span_parity(spec,
+                               bursty_trace(n_bursts=2, burst_size=10,
+                                            seed=3),
+                               autoalloc=cfg, max_attempts=6, seed=3)
+    names = {e[2] for e in st_.events()}
+    # the elastic lifecycle is actually in the trace
+    assert {"alloc.spawn", "alloc.kill", "task.requeue",
+            "autoalloc.submit"} <= names
+    # and both drivers agree on the attribution totals they derive
+    sim_tot = rep.sim.overhead_attribution["totals"]
+    live_tot = rep.live.overhead_attribution["totals"]
+    for k, v in sim_tot.items():
+        assert live_tot[k] == pytest.approx(v, abs=1e-9), k
+
+
+def test_span_parity_surrogate_offload():
+    spec = backends.get("hq")
+    _, st_, _ = _span_parity(spec, bimodal_trace(n=30, seed=6),
+                             autoalloc=_elastic_cfg(), max_workers=16,
+                             seed=6, surrogate_factory=_StubOffload)
+    # the virtual allocation's lifecycle is traced but flagged virtual
+    virt = [e for e in st_.events()
+            if e[1] == "B" and e[6] and e[6].get("virtual")]
+    assert virt
+
+
+def test_stepper_events_bounded_and_exposed_in_metrics():
+    """Satellite: the stepper audit trail is a ring buffer (bounded) and
+    surfaces through `Executor.metrics()`."""
+    from repro.cluster.parity import VirtualClock, _ReplayExecutor
+    from repro.obs.trace import RingBuffer
+    from repro.core.executor import Executor
+
+    broker = Broker()
+    init = Allocation(broker.next_alloc_id(), 2, None)
+    init.submit(0.0, 0.0)
+    ex = _ReplayExecutor({"m": lambda: None}, n_workers=2,
+                         cluster=broker, clock=VirtualClock(0.0),
+                         monitor_interval=None)
+    try:
+        assert isinstance(ex._stepper.events, RingBuffer)
+        cap = ex._stepper.events.capacity
+        assert cap > 0
+        for i in range(cap + 50):
+            ex._stepper.events.append((float(i), "spawn", 0, 1))
+        assert len(ex._stepper.events) == cap
+        assert ex._stepper.events.n_dropped >= 50
+        m = ex.metrics()
+        assert len(m["stepper_events"]) == cap
+        assert m["overhead_attribution"] is None     # tracing off
+    finally:
+        ex.shutdown()
+
+
+# --------------------------------------------------------------------------
+# satellite: no wall-clock leaks past the injected clock
+# --------------------------------------------------------------------------
+def test_eval_request_does_not_stamp_wall_clock_submit_t():
+    """Regression: `EvalRequest.__post_init__` used to default submit_t
+    to `time.monotonic()`, leaking wall time into virtual-clock parity
+    replays before `Executor.submit` re-stamped it."""
+    req = EvalRequest(model_name="m", parameters=[[0.0]])
+    assert req.submit_t == 0.0
+
+
+def test_load_balancer_timestamps_use_injected_clock():
+    """Regression: ModelInfo.registered_t / last_health_t came from
+    `time.monotonic()` even when the executor ran on a virtual clock."""
+    from repro.core.balancer import LoadBalancer
+    from repro.core.task import Model
+
+    class _Probe(Model):
+        def __init__(self):
+            super().__init__("probe")
+
+        def get_input_sizes(self, config=None):
+            return [1]
+
+        def get_output_sizes(self, config=None):
+            return [1]
+
+        def __call__(self, parameters, config=None):
+            return [[parameters[0][0]]]
+
+        def supports_evaluate(self):
+            return True
+
+    clock_t = [1234.5]
+    lb = LoadBalancer("hq", n_workers=1, clock=lambda: clock_t[0])
+    info = lb.register_model("probe", _Probe)
+    assert info.registered_t == 1234.5
+    clock_t[0] = 2000.0
+    lb.start()
+    try:
+        assert lb.health_check("probe", [[0.5]], timeout=30.0)
+        assert info.last_health_t == 2000.0
+    finally:
+        lb.shutdown()
