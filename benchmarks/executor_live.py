@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import EvalRequest, Executor, LambdaModel
 from repro.core.metrics import summarize
+from repro.obs import Tracer
 from repro.uq import gp as gp_lib
 from repro.uq import gs2_proxy, sampling
 
@@ -45,20 +46,36 @@ def _gp_factory():
                        warmup_fn=lambda: fn([thetas[0].tolist()], None))
 
 
-def run(n_tasks: int = 24, n_workers: int = 4) -> List[Dict]:
+def run(n_tasks: int = 24, n_workers: int = 4,
+        trace_out: str = None) -> List[Dict]:
+    """Both modes, persistent(HQ) first.  ``trace_out`` streams the
+    persistent-mode run's span trace to a JSONL file while it executes
+    (`Tracer.stream_to`) — the recording `repro.obs.calib` calibrates
+    the simulator's overhead model from and `repro.obs.replay` replays
+    (see `benchmarks/calibration.py`)."""
     thetas = sampling.latin_hypercube(n_tasks, seed=5)
     rows = []
     for persistent in (True, False):
         factories = {"gs2": _gs2_factory, "gp": _gp_factory}
         t0 = time.monotonic()
+        tracer = None
+        kw = {}
+        if trace_out and persistent:
+            # zero-based clock so the trace's virtual timeline starts at
+            # ~0 like a sim trace (monotonic() origin is arbitrary)
+            tracer = Tracer().stream_to(trace_out)
+            kw = {"tracer": tracer,
+                  "clock": lambda: time.monotonic() - t0}
         with Executor(factories, n_workers=n_workers,
-                      persistent_servers=persistent) as ex:
+                      persistent_servers=persistent, **kw) as ex:
             reqs = []
             for i, th in enumerate(thetas):
                 name = "gs2" if i % 2 == 0 else "gp"
                 reqs.append(EvalRequest(name, [th.tolist()]))
             results = ex.run_all(reqs, timeout=600.0)
             recs = ex.records()
+        if tracer is not None:
+            tracer.close_stream()
         wall = time.monotonic() - t0
         ok = sum(r.status == "ok" for r in results)
         s = summarize("live", "hq" if persistent else "slurm", recs)
@@ -71,3 +88,27 @@ def run(n_tasks: int = 24, n_workers: int = 4) -> List[Dict]:
             "slr": s.slr,
         })
     return rows
+
+
+def main() -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-tasks", type=int, default=24)
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--trace-out", default=None,
+                    help="stream the persistent(HQ) run's span trace to "
+                         "this JSONL path (calibration/replay input)")
+    args = ap.parse_args()
+    rows = run(args.n_tasks, args.n_workers, trace_out=args.trace_out)
+    print(json.dumps(rows, indent=2))
+    if args.trace_out:
+        print(f"trace written to {args.trace_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -303,7 +303,7 @@ class Broker(SchedulingPolicy):
     # -- SchedulingPolicy protocol ---------------------------------------
     def push(self, req, attempt: int) -> None:
         if self.tracer is not None:
-            self.tracer.task_queued(req.task_id, attempt)
+            self.tracer.task_queued(req.task_id, attempt, req=req)
         self._route_push(req, attempt)
 
     def pop(self, worker: Optional[WorkerView] = None

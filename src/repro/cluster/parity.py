@@ -116,6 +116,16 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
 
     arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
 
+    if tracer is not None:
+        # the sim emits the identical spec-constants instant (the replay
+        # layer reads it back for bit-exact constants); emitting it on
+        # both sides keeps the parity span sequences comparable
+        tracer.instant("trace.spec", ts=0.0, args={
+            "backend": spec.name,
+            "dispatch_latency": float(spec.dispatch_latency),
+            "server_init": float(spec.server_init),
+            "queue_wait_sigma": float(spec.queue_wait_sigma)})
+
     clock = VirtualClock(0.0)
     factories = {tt.model_name: _never_called for tt in arrivals}
     ex = _ReplayExecutor(

@@ -160,7 +160,8 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                      max_attempts: int = 3,
                      max_t: float = 1e9,
                      tracer: Any = None,
-                     registry: Any = None) -> ClusterResult:
+                     registry: Any = None,
+                     calibration: Any = None) -> ClusterResult:
     """Run one trace through brokered, allocation-backed dispatch.
 
     Two modes:
@@ -182,6 +183,17 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
 
     Pass `broker`/`allocator` instances to drive *the same objects* you
     later hand to a live `Executor` (the no-forked-logic guarantee).
+
+    Trace replay: pass a `repro.obs.replay.ReplayBackendSpec` (built
+    from a recorded trace) as ``spec`` and the replay's reconstructed
+    trace as ``trace`` — queue waits pop from the recorded FIFO through
+    `draw_queue_wait` and per-model cold-init costs come from
+    ``spec.server_init_for`` (consulted here when the spec provides it),
+    so a sim-recorded trace reproduces its original records exactly.
+    ``calibration=`` accepts a `repro.obs.calib.CalibrationMonitor`:
+    observed per-attempt overheads and granted queue waits are streamed
+    into it for online drift detection, exactly as the live `Executor`
+    does.
     """
     rng = np.random.default_rng(seed)
     if broker is None:
@@ -207,6 +219,15 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
         # executor binds its own injected clock, so parity replays of
         # the same trace produce identical span timestamps
         tracer.bind_clock(lambda: now)
+        # the spec's exact overhead constants, recorded so a replay of
+        # this trace uses the same floats (span durs are endpoint
+        # differences and lose the last ulp); parity.replay_live emits
+        # the identical instant, keeping span sequences comparable
+        tracer.instant("trace.spec", ts=0.0, args={
+            "backend": spec.name,
+            "dispatch_latency": float(spec.dispatch_latency),
+            "server_init": float(spec.server_init),
+            "queue_wait_sigma": float(spec.queue_wait_sigma)})
         broker.set_tracer(tracer)
 
     if allocator is None and not any(not a.virtual
@@ -281,7 +302,11 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                                   if not w.alloc.virtual]),
         record_failed=record_failed,
         max_workers=max_workers, max_attempts=None, retired=retired,
-        tracer=tracer, registry=registry)
+        tracer=tracer, registry=registry, calibration=calibration)
+
+    # per-model cold-init costs: a calibrated/replay spec refines the
+    # scalar `server_init` per model; a plain BackendSpec has no hook
+    init_for = getattr(spec, "server_init_for", None)
 
     max_iters = 10_000 + 1_000 * len(reqs)     # runaway-config backstop
     iters = 0
@@ -328,7 +353,14 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
             if tracer is not None:
                 tracer.task_attempt(req.task_id, w.alloc.alloc_id, w.wid,
                                     w.mark_t, w.start_t, w.init, w.end_t,
-                                    w.attempt, "ok")
+                                    w.attempt, "ok",
+                                    model=req.model_name,
+                                    compute=w.compute)
+            if calibration is not None and \
+                    not req.config.get("_surrogate"):
+                calibration.observe_attempt(
+                    req.model_name, dispatch_s=w.start_t - w.mark_t,
+                    init_s=w.init, compute_s=w.compute, now=w.end_t)
             # surrogate completions are milliseconds of GP predict: they
             # must not teach the runtime predictor what the REAL model
             # costs at this theta
@@ -373,7 +405,9 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
             else:
                 w.compute = runtimes[req.task_id]
                 w.init = (0.0 if req.model_name in w.warm
-                          else spec.server_init)
+                          else (init_for(req.model_name)
+                                if init_for is not None
+                                else spec.server_init))
                 w.warm.add(req.model_name)
             w.mark_t = now
             w.start_t = now + spec.dispatch_latency

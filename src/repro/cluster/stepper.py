@@ -114,6 +114,7 @@ class LifecycleStepper:
                  max_attempts: Optional[int] = None,
                  retired: Optional[List[Allocation]] = None,
                  tracer: Any = None, registry: Any = None,
+                 calibration: Any = None,
                  events_cap: int = 10_000):
         self.broker = broker
         self.allocator = allocator
@@ -129,6 +130,11 @@ class LifecycleStepper:
             else []
         self.tracer = tracer
         self.registry = registry
+        # optional repro.obs.calib.CalibrationMonitor: the grant is the
+        # one place (shared by sim and live) where an allocation's drawn
+        # queue wait becomes an observed fact, so residuals against the
+        # spec's queue-wait model are fed from here
+        self.calibration = calibration
         # spawn/retire audit trail, bounded (oldest entries drop first;
         # `events.n_dropped` says how many a long run shed)
         self.events: RingBuffer = RingBuffer(events_cap)
@@ -191,6 +197,8 @@ class LifecycleStepper:
             if alloc.n_workers == 0:
                 self._retire(alloc, now, "cancel")
                 return
+        if self.calibration is not None and not alloc.virtual:
+            self.calibration.observe_queue_wait(alloc, now)
         self._event(now, "spawn", alloc.alloc_id, alloc.n_workers)
         self.spawn_workers(alloc)
 

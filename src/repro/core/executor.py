@@ -217,6 +217,7 @@ class Executor:
                  monitor_interval: Optional[float] = 0.05,
                  tracer: Any = None,
                  metrics_registry: Any = None,
+                 calibration: Any = None,
                  name: str = "hq"):
         from repro.cluster.allocation import Allocation
         from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
@@ -228,6 +229,11 @@ class Executor:
         # produce traces comparable with the simulator's
         self.tracer = tracer
         self.registry = metrics_registry
+        # optional repro.obs.calib.CalibrationMonitor: fed the observed
+        # per-attempt overheads (and, in cluster mode, granted queue
+        # waits via the stepper) so model-vs-reality drift raises alarms
+        # while the run is live
+        self.calibration = calibration
         if tracer is not None:
             tracer.bind_clock(self._clock)
         self.model_factories = dict(model_factories)
@@ -336,7 +342,8 @@ class Executor:
                 record_failed=self._record_expired,
                 max_workers=max_workers, max_attempts=max_attempts,
                 retired=self._retired_allocs,
-                tracer=tracer, registry=metrics_registry)
+                tracer=tracer, registry=metrics_registry,
+                calibration=calibration)
         # the initial worker group: one allocation, granted immediately
         # (thread startup is the live analogue of the queue wait).  In
         # cluster mode n_workers=0 means "bootstrap from the allocator"
@@ -384,7 +391,7 @@ class Executor:
         with self._cv:
             if self.tracer is not None and not self._cluster_mode:
                 # cluster mode: the Broker's own push emits this
-                self.tracer.task_queued(req.task_id, attempt)
+                self.tracer.task_queued(req.task_id, attempt, req=req)
             self.policy.push(req, attempt)
             self._cv.notify()
 
@@ -466,7 +473,15 @@ class Executor:
                     self.tracer.task_attempt(
                         req.task_id, aid, w.wid, res.dispatch_t,
                         res.start_t, res.init_t, res.end_t,
-                        res.attempts, res.status)
+                        res.attempts, res.status,
+                        model=req.model_name, compute=res.compute_t)
+                if self.calibration is not None and entry is not None \
+                        and not offloaded:
+                    self.calibration.observe_attempt(
+                        req.model_name,
+                        dispatch_s=res.start_t - res.dispatch_t,
+                        init_s=res.init_t, compute_s=res.compute_t,
+                        now=res.end_t)
             self._release_dependents()
             self._cv.notify_all()
 

@@ -1,4 +1,4 @@
-"""`repro.obs`: unified tracing, metrics registry, overhead attribution.
+"""`repro.obs`: tracing, metrics, attribution, calibration, replay.
 
 One observability layer for both execution paths: because the spans and
 counters are instrumented at the shared `LifecycleStepper` / `Broker`
@@ -7,24 +7,53 @@ produces identical span sequences from `simulate_cluster` and the live
 `Executor` (see `tests/test_parity.py`).  Everything is opt-in:
 ``tracer=None`` / ``registry=None`` defaults keep the hot paths free of
 even the tuple-append cost.
+
+On top of the recording layer sit the consumers that close the
+sim-to-reality gap: `repro.obs.calib` fits per-phase overhead
+distributions from a trace into a drop-in `CalibratedBackendSpec` and
+watches for drift online (`CalibrationMonitor`), and `repro.obs.replay`
+re-runs a recorded workload — bitwise-exactly for sim-recorded traces —
+through `simulate_cluster` (`TraceReplay` / `replay_cluster`).
 """
 from repro.obs.attribution import (OverheadBreakdown, attribute_overhead,
                                    capacity_intervals, format_breakdown)
+from repro.obs.calib import (CalibratedBackendSpec, CalibrationMonitor,
+                             PhaseFit, calibrate, extract_phase_samples,
+                             fit_lognormal, fit_phase, hlo_runtime_prior,
+                             ks_lognormal, prior_fit)
 from repro.obs.registry import DEFAULT_EDGES, Histogram, MetricsRegistry
-from repro.obs.trace import (RingBuffer, TraceEvent, Tracer,
-                             span_sequence, validate_chrome_trace)
+from repro.obs.replay import (ReplayBackendSpec, TraceReplay,
+                              replay_cluster)
+from repro.obs.trace import (RingBuffer, TraceEvent, Tracer, read_jsonl,
+                             span_sequence, validate_chrome_trace,
+                             validate_jsonl_row)
 
 __all__ = [
     "DEFAULT_EDGES",
+    "CalibratedBackendSpec",
+    "CalibrationMonitor",
     "Histogram",
     "MetricsRegistry",
     "OverheadBreakdown",
+    "PhaseFit",
+    "ReplayBackendSpec",
     "RingBuffer",
     "TraceEvent",
+    "TraceReplay",
     "Tracer",
     "attribute_overhead",
+    "calibrate",
     "capacity_intervals",
+    "extract_phase_samples",
+    "fit_lognormal",
+    "fit_phase",
     "format_breakdown",
+    "hlo_runtime_prior",
+    "ks_lognormal",
+    "prior_fit",
+    "read_jsonl",
+    "replay_cluster",
     "span_sequence",
     "validate_chrome_trace",
+    "validate_jsonl_row",
 ]

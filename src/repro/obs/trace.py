@@ -29,10 +29,22 @@ Event model (Chrome trace-event phases):
     ``gp.predict_batch`` compile-shape launches.
 
 Everything lands in a bounded ring buffer (oldest events drop first;
-`n_dropped` says how many), exportable as JSONL (`write_jsonl`) and
-Chrome trace-event JSON (`to_chrome` / `write_chrome`, loadable in
-Perfetto).  Tracing is opt-in everywhere (`tracer=None` default) and the
-hot-path cost of one event is a tuple append into a deque.
+`n_dropped` says how many), exportable as JSONL (`write_jsonl`, loadable
+back with schema validation via `read_jsonl`, or streamed incrementally
+while the run is live via `stream_to`) and Chrome trace-event JSON
+(`to_chrome` / `write_chrome`, loadable in Perfetto).  Tracing is opt-in
+everywhere (`tracer=None` default) and the hot-path cost of one event is
+a tuple append into a deque (plus one buffered line write when a stream
+sink is attached).
+
+Spans carry the exact model inputs calibration needs (`repro.obs.calib`
+/ `repro.obs.replay` consume them): ``task.queued`` instants record the
+request's model / time_request / n_cpus / parameters on first submit,
+``task.init`` / ``task.run`` record the exact init and compute seconds
+passed by the driver (a span's ``dur`` is a float *difference* of
+endpoints, which is not bit-exact), and ``alloc.queued`` records the
+drawn queue wait plus the allocation's shape — so a sim-recorded trace
+replays to the original records exactly.
 """
 from __future__ import annotations
 
@@ -111,6 +123,7 @@ class Tracer:
         self._alloc_state: Dict[int, Optional[str]] = {}
         self._alloc_open: Dict[int, str] = {}
         self._pid_labels: Dict[int, str] = {0: "scheduler"}
+        self._sink = None                      # incremental JSONL stream
 
     def bind_clock(self, clock: Callable[[], float]) -> "Tracer":
         self._clock = clock
@@ -120,7 +133,10 @@ class Tracer:
     def emit(self, ph: str, name: str, ts: float, *, pid: int = 0,
              tid: int = 0, dur: float = 0.0,
              args: Optional[dict] = None) -> None:
-        self.buf.append((float(ts), ph, name, pid, tid, float(dur), args))
+        ev = (float(ts), ph, name, pid, tid, float(dur), args)
+        self.buf.append(ev)
+        if self._sink is not None:
+            self._sink.write(_jsonl_line(ev))
 
     def instant(self, name: str, ts: Optional[float] = None, *,
                 pid: int = 0, tid: int = 0,
@@ -143,20 +159,43 @@ class Tracer:
         return tid
 
     def task_queued(self, task_id: str, attempt: int,
-                    ts: Optional[float] = None) -> None:
-        """A (task, attempt) entered a scheduler queue (submit, requeue)."""
+                    ts: Optional[float] = None, req: Any = None) -> None:
+        """A (task, attempt) entered a scheduler queue (submit, requeue).
+
+        Passing the `EvalRequest` as ``req`` records the request's shape
+        (model / time_request / n_cpus / parameters) on the first-attempt
+        instant — the metadata `repro.obs.replay` needs to reconstruct
+        the workload from the trace alone.  Requeues (attempt > 1) stay
+        minimal: the task's identity was already recorded."""
         if ts is None:
             ts = self._clock()
         self._queued[(task_id, attempt)] = float(ts)
+        args: dict = {"task": task_id, "attempt": attempt}
+        if req is not None and attempt == 1:
+            args["model"] = req.model_name
+            if getattr(req, "time_request", None) is not None:
+                args["time_request"] = float(req.time_request)
+            if getattr(req, "n_cpus", 1) != 1:
+                args["n_cpus"] = int(req.n_cpus)
+            params = getattr(req, "parameters", None)
+            if _jsonable_matrix(params):
+                args["parameters"] = params
         self.instant("task.queued", ts=ts, pid=0, tid=self._tid(task_id),
-                     args={"task": task_id, "attempt": attempt})
+                     args=args)
 
     def task_attempt(self, task_id: str, alloc_id: int, wid: int,
                      mark_t: float, start_t: float, init_t: float,
-                     end_t: float, attempt: int, status: str) -> None:
+                     end_t: float, attempt: int, status: str,
+                     model: Optional[str] = None,
+                     compute: Optional[float] = None) -> None:
         """One completed attempt: closes the queued span, records the
         dispatch/init/run spans on the worker track, and stamps the
-        terminal instant (``task.<status>``)."""
+        terminal instant (``task.<status>``).
+
+        ``model`` and ``compute`` (the driver's exact compute seconds)
+        land in the init/run span args so calibration can key samples by
+        model and replay can reproduce runtimes bit-exactly (a span's
+        ``dur`` is an endpoint difference, which loses the last ulp)."""
         tid = self._tid(task_id)
         q_ts = self._queued.pop((task_id, attempt), mark_t)
         a = {"task": task_id, "attempt": attempt}
@@ -166,11 +205,19 @@ class Tracer:
                         "alloc": alloc_id})
         pid = alloc_id + 1
         if init_t > 0:
+            ia = dict(a)
+            ia["init"] = float(init_t)
+            if model is not None:
+                ia["model"] = model
             self.span("task.init", start_t, start_t + init_t, pid=pid,
-                      tid=wid, args=a)
+                      tid=wid, args=ia)
+        ra: dict = {"task": task_id, "attempt": attempt, "status": status}
+        if model is not None:
+            ra["model"] = model
+        if compute is not None:
+            ra["compute"] = float(compute)
         self.span("task.run", start_t + init_t, end_t, pid=pid, tid=wid,
-                  args={"task": task_id, "attempt": attempt,
-                        "status": status})
+                  args=ra)
         self.instant(f"task.{status}", ts=end_t, pid=0, tid=tid, args=a)
 
     def task_requeue(self, task_id: str, attempt: int, now: float,
@@ -253,11 +300,12 @@ class Tracer:
                     continue               # state skipped (e.g. cancel)
                 t = ts if ts is not None else self._clock()
             self._alloc_transition(aid, pid, st, float(t),
-                                   virtual=alloc.virtual)
+                                   virtual=alloc.virtual, alloc=alloc)
         self._alloc_state[aid] = state
 
     def _alloc_transition(self, aid: int, pid: int, state: str, t: float,
-                          *, virtual: bool = False) -> None:
+                          *, virtual: bool = False,
+                          alloc: Any = None) -> None:
         open_name = self._alloc_open.pop(aid, None)
         if open_name is not None:
             self.emit("E", open_name, t, pid=pid, tid=0)
@@ -265,8 +313,22 @@ class Tracer:
             self.instant("alloc.expired", ts=t, pid=pid, tid=0,
                          args={"alloc": aid})
         else:
-            self.emit("B", f"alloc.{state}", t, pid=pid, tid=0,
-                      args={"alloc": aid, "virtual": virtual})
+            args: dict = {"alloc": aid, "virtual": virtual}
+            if state == "queued" and alloc is not None:
+                # the request shape + the DRAWN queue wait: a cancelled
+                # allocation's B/E span is shorter than its draw, so the
+                # drawn value must be recorded, not recovered from ts —
+                # this is what keeps replay's queue-wait FIFO aligned
+                qw = getattr(alloc, "queue_wait", None)
+                if qw is not None:
+                    args["queue_wait"] = float(qw)
+                nw = getattr(alloc, "n_workers", None)
+                if nw is not None:
+                    args["n_workers"] = int(nw)
+                wt = getattr(alloc, "walltime_s", None)
+                if wt is not None and math.isfinite(wt):
+                    args["walltime_s"] = float(wt)
+            self.emit("B", f"alloc.{state}", t, pid=pid, tid=0, args=args)
             self._alloc_open[aid] = f"alloc.{state}"
 
     # -- export ----------------------------------------------------------
@@ -310,16 +372,123 @@ class Tracer:
             json.dump(self.to_chrome(), fh)
 
     def write_jsonl(self, path: str) -> None:
-        """One JSON object per event, in emission order (seconds)."""
+        """One JSON object per event, in emission order (seconds),
+        written one line at a time (never materialises the event list)."""
         with open(path, "w") as fh:
-            for ts, ph, name, pid, tid, dur, args in self.buf:
-                row = {"ts": ts, "ph": ph, "name": name, "pid": pid,
-                       "tid": tid}
-                if ph == "X":
-                    row["dur"] = dur
-                if args:
-                    row["args"] = args
-                fh.write(json.dumps(row) + "\n")
+            for ev in self.buf:
+                fh.write(_jsonl_line(ev))
+
+    # -- incremental streaming -------------------------------------------
+    def stream_to(self, path: str) -> "Tracer":
+        """Open an incremental JSONL sink: events already buffered are
+        written now, and every subsequent `emit` appends one line — so a
+        crash mid-run still leaves a usable trace, and a run longer than
+        the ring buffer is recorded in full (the buffer may drop, the
+        stream does not).  Call `close_stream` (or rely on interpreter
+        exit) when done."""
+        self.close_stream()
+        self._sink = open(path, "w")
+        for ev in self.buf:
+            self._sink.write(_jsonl_line(ev))
+        return self
+
+    def close_stream(self) -> None:
+        if self._sink is not None:
+            try:
+                self._sink.close()
+            finally:
+                self._sink = None
+
+
+def _jsonl_line(ev: TraceEvent) -> str:
+    """The one JSONL encoding shared by `write_jsonl` and `stream_to`."""
+    ts, ph, name, pid, tid, dur, args = ev
+    row: Dict[str, Any] = {"ts": ts, "ph": ph, "name": name, "pid": pid,
+                           "tid": tid}
+    if ph == "X":
+        row["dur"] = dur
+    if args:
+        row["args"] = args
+    return json.dumps(row) + "\n"
+
+
+def _jsonable_matrix(params: Any) -> bool:
+    """True for a plain [[float, ...], ...] payload that survives a JSON
+    round trip exactly (np.float32 etc. are excluded — they are not JSON
+    serialisable and their repr is not the double the driver computed
+    with)."""
+    if not isinstance(params, list) or not params:
+        return False
+    for row in params:
+        if not isinstance(row, list):
+            return False
+        for v in row:
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                return False
+    return True
+
+
+_PHASES = ("B", "E", "X", "i")
+
+
+def validate_jsonl_row(row: Any) -> Optional[str]:
+    """Schema check for one decoded JSONL trace row; None means valid."""
+    if not isinstance(row, dict):
+        return f"not an object: {row!r}"
+    ph = row.get("ph")
+    if ph not in _PHASES:
+        return f"unknown phase {ph!r}"
+    if not isinstance(row.get("name"), str) or not row["name"]:
+        return f"missing name: {row!r}"
+    ts = row.get("ts")
+    if not isinstance(ts, (int, float)) or isinstance(ts, bool) \
+            or not math.isfinite(ts):
+        return f"bad ts {ts!r}"
+    for key in ("pid", "tid"):
+        v = row.get(key, 0)
+        if not isinstance(v, int) or isinstance(v, bool):
+            return f"bad {key} {v!r}"
+    if ph == "X":
+        dur = row.get("dur", 0.0)
+        if not isinstance(dur, (int, float)) or isinstance(dur, bool) \
+                or not math.isfinite(dur) or dur < 0:
+            return f"bad X dur {dur!r}"
+    if "args" in row and not isinstance(row["args"], dict):
+        return f"bad args {row['args']!r}"
+    return None
+
+
+def read_jsonl(path: str, *, strict: bool = True) -> List[TraceEvent]:
+    """Load a `write_jsonl` / `stream_to` trace back into `TraceEvent`
+    tuples (the inverse of the export, in file order).
+
+    Every row is schema-validated (`validate_jsonl_row`); with
+    ``strict=True`` (default) a malformed line raises `ValueError` naming
+    the line, otherwise bad lines are skipped.  This is the entry point
+    real-cluster logs take into `repro.obs.calib` / `repro.obs.replay`:
+    anything that serialises to this schema calibrates the simulator."""
+    out: List[TraceEvent] = []
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError as e:
+                if strict:
+                    raise ValueError(
+                        f"{path}:{lineno}: not JSON ({e})") from e
+                continue
+            problem = validate_jsonl_row(row)
+            if problem is not None:
+                if strict:
+                    raise ValueError(f"{path}:{lineno}: {problem}")
+                continue
+            out.append((float(row["ts"]), row["ph"], row["name"],
+                        int(row.get("pid", 0)), int(row.get("tid", 0)),
+                        float(row.get("dur", 0.0)), row.get("args")))
+    return out
 
 
 def span_sequence(tracer: Tracer) -> List[Tuple]:

@@ -1,0 +1,390 @@
+"""Tests for trace-driven calibration and replay (`repro.obs.calib` /
+`repro.obs.replay`): the BackendSpec overhead draws themselves (seeded
+moment checks), lognormal fit recovery with the KS gate and ECDF
+fallback, calibration from recorded traces, the bitwise round-trip
+replay contract, online drift detection, and the JSONL read path."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster.autoalloc import AutoAllocConfig
+from repro.cluster.sim import simulate_cluster
+from repro.cluster.traces import TraceTask, bursty_trace
+from repro.core import backends
+from repro.core.backends import QUEUE_WAIT_SATURATION_S, lognormal
+from repro.obs import (CalibratedBackendSpec, CalibrationMonitor,
+                       MetricsRegistry, ReplayBackendSpec, TraceReplay,
+                       Tracer, calibrate, extract_phase_samples,
+                       fit_lognormal, fit_phase, hlo_runtime_prior,
+                       prior_fit, read_jsonl, replay_cluster,
+                       validate_jsonl_row)
+
+
+# ---------------------------------------------------------------------------
+# the spec's own overhead draws: seeded moment checks
+# ---------------------------------------------------------------------------
+def test_lognormal_draw_moments():
+    rng = np.random.default_rng(0)
+    xs = np.array([lognormal(rng, 2.0, 0.6) for _ in range(4000)])
+    # median of the draw IS the parameter (log-symmetric around it)
+    assert np.median(xs) == pytest.approx(2.0, rel=0.1)
+    # sigma is the std of the logs
+    assert np.log(xs).std() == pytest.approx(0.6, rel=0.1)
+
+
+def test_lognormal_degenerate_cases():
+    rng = np.random.default_rng(1)
+    # sigma=0 collapses to the median exactly (deterministic specs)
+    assert lognormal(rng, 3.5, 0.0) == 3.5
+    # non-positive median is a zero draw, not an error
+    assert lognormal(rng, 0.0, 0.6) == 0.0
+    assert lognormal(rng, -1.0, 0.6) == 0.0
+
+
+def test_draw_queue_wait_matches_model():
+    spec = backends.get("hq")
+    # the median model: floor + coef * min(walltime, sat)^power
+    expect = (spec.queue_wait_floor + spec.queue_wait_coef
+              * min(7200.0, QUEUE_WAIT_SATURATION_S)
+              ** spec.queue_wait_power)
+    assert spec.queue_wait_median(7200.0) == pytest.approx(expect)
+    # saturation: a 600 h request waits like the partition max
+    assert spec.queue_wait_median(600 * 3600.0) \
+        == spec.queue_wait_median(QUEUE_WAIT_SATURATION_S)
+    # the draw's median is the model's median
+    rng = np.random.default_rng(2)
+    xs = [spec.draw_queue_wait(rng, 7200.0) for _ in range(4000)]
+    assert np.median(xs) == pytest.approx(expect, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+def test_fit_lognormal_recovers_known_params():
+    rng = np.random.default_rng(3)
+    xs = [lognormal(rng, 3.0, 0.4) for _ in range(3000)]
+    median, sigma = fit_lognormal(xs)
+    assert median == pytest.approx(3.0, rel=0.05)
+    assert sigma == pytest.approx(0.4, rel=0.05)
+    f = fit_phase("runtime", "m", xs)
+    assert f.lognormal_ok and f.ks_pvalue > 0.05
+    # draws from the fit reproduce the distribution
+    r2 = np.random.default_rng(4)
+    drawn = [f.draw(r2) for _ in range(2000)]
+    assert np.median(drawn) == pytest.approx(3.0, rel=0.1)
+
+
+def test_ks_rejects_bimodal_and_ecdf_takes_over():
+    xs = [0.1] * 200 + [10.0] * 200
+    f = fit_phase("init", None, xs)
+    assert not f.lognormal_ok and f.ks_pvalue < 0.05
+    # the ECDF fallback draws from the actual support, not the
+    # (badly-fitting) lognormal's continuum
+    r = np.random.default_rng(5)
+    drawn = [f.draw(r) for _ in range(500)]
+    lo = sum(1 for d in drawn if d <= 0.2)
+    hi = sum(1 for d in drawn if d >= 9.0)
+    assert lo + hi > 450            # almost everything lands at a mode
+    assert 100 < lo < 400           # and both modes are populated
+    assert f.quantile(0.0) == 0.1 and f.quantile(1.0) == 10.0
+
+
+def test_fit_constant_and_zero_samples():
+    f = fit_phase("init", None, [1.0, 1.0, 1.0, 1.0])
+    assert f.lognormal_ok and f.median == pytest.approx(1.0) \
+        and f.sigma == 0.0
+    z = fit_phase("dispatch", None, [0.0, 0.0, 0.0])
+    assert z.median == 0.0          # point mass at zero, not log(eps)
+    rng = np.random.default_rng(6)
+    assert z.draw(rng) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# calibration from a recorded trace
+# ---------------------------------------------------------------------------
+def _sim_trace_events(seed=3, **kw):
+    spec = backends.get("hq")
+    tracer = Tracer()
+    simulate_cluster(spec, bursty_trace(2, 10, seed=seed), seed=seed,
+                     tracer=tracer, **kw)
+    return spec, tracer.events()
+
+
+def test_extract_phase_samples_keys():
+    _spec, events = _sim_trace_events(n_workers=4)
+    groups = extract_phase_samples(events)
+    phases = {k[0] for k in groups}
+    assert {"queue_wait", "init", "dispatch", "runtime"} <= phases
+    assert ("runtime", "burst-model") in groups
+    assert len(groups[("runtime", "burst-model")]) == 20
+
+
+def test_calibrate_sim_trace_recovers_exact_constants():
+    spec, events = _sim_trace_events(n_workers=4)
+    cal = calibrate(events, spec)
+    assert isinstance(cal, CalibratedBackendSpec)
+    # every cold init in the sim is exactly spec.server_init, and the
+    # exact value rides in the span args -> the fit is bit-exact
+    assert cal.server_init == spec.server_init
+    assert cal.server_init_for("burst-model") == spec.server_init
+    # dispatch medians come from span durs (endpoint differences):
+    # close, not bitwise
+    assert cal.dispatch_latency == pytest.approx(spec.dispatch_latency,
+                                                 rel=1e-6)
+    # the fitted runtime matches the trace's ~20 s bursty runtimes
+    rf = cal.runtime_fit("burst-model")
+    assert rf is not None and rf.median == pytest.approx(20.0, rel=0.15)
+    # drop-in: the calibrated spec runs through the simulator unchanged
+    res = simulate_cluster(cal, bursty_trace(1, 4, seed=1), n_workers=2,
+                           seed=1)
+    assert all(r.status == "ok" for r in res.records)
+
+
+def test_calibrate_queue_wait_fallback_to_base_model():
+    spec, events = _sim_trace_events(n_workers=4)
+    cal = calibrate(events, spec)
+    # the trace has one unbounded-walltime allocation; its fitted wait
+    # answers nearest-key lookups...
+    fitted = cal.queue_wait_median(math.inf)
+    assert fitted == cal.fit_for("queue_wait",
+                                 (None, 4)).median  # type: ignore[union-attr]
+    # ...while a spec with NO queue fits falls back to the base model
+    bare = calibrate([e for e in events if e[2] != "alloc.queued"], spec)
+    assert bare.queue_wait_median(7200.0) \
+        == spec.queue_wait_median(7200.0)
+
+
+def test_calibrate_priors_for_unobserved_models():
+    spec, events = _sim_trace_events(n_workers=4)
+    cal = calibrate(events, spec, priors={"jax-kernel": 0.42})
+    rf = cal.runtime_fit("jax-kernel")
+    assert rf is not None and rf.median == 0.42 and rf.source == "prior"
+    # an observed model's trace fit is NOT overridden by a prior
+    cal2 = calibrate(events, spec, priors={"burst-model": 999.0})
+    assert cal2.runtime_fit("burst-model").median != 999.0
+
+
+def test_hlo_runtime_prior_roofline():
+    # compute-bound: 2e12 flops at 1e12 flop/s -> 2 s (+ floor)
+    t = hlo_runtime_prior({"flops": 2e12, "bytes": 1e9},
+                          peak_flops=1e12, mem_bw=1e11)
+    assert t == pytest.approx(2.0, abs=1e-3)
+    # memory-bound: 1e10 bytes at 1e11 B/s dominates 1e9 flops
+    t = hlo_runtime_prior({"flops": 1e9, "bytes": 1e10},
+                          peak_flops=1e12, mem_bw=1e11)
+    assert t == pytest.approx(0.1, abs=1e-3)
+    # object access path (OpCost-alikes)
+    pf = prior_fit("runtime", "k", hlo_runtime_prior(
+        type("C", (), {"flops": 1e12, "bytes": 0.0, "coll_bytes": 0.0})(),
+        peak_flops=1e12))
+    assert pf.median == pytest.approx(1.0, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# round-trip replay: THE exactness contract
+# ---------------------------------------------------------------------------
+_KILL_CFG = dict(workers_per_alloc=2, backlog_high_s=30, backlog_low_s=5,
+                 max_pending=2, max_allocations=4, min_allocations=0,
+                 idle_drain_s=20, hysteresis_s=5, walltime_s=25)
+
+
+@pytest.mark.parametrize("max_attempts", [2, 6])
+def test_roundtrip_identity_elastic(max_attempts):
+    """Replaying a sim-recorded trace reproduces the original records,
+    allocations, and makespan EXACTLY — including walltime kills,
+    requeues, and (max_attempts=2) terminal kills."""
+    spec = backends.get("hq")
+    cfg = AutoAllocConfig(**_KILL_CFG)
+    tracer = Tracer()
+    orig = simulate_cluster(spec, bursty_trace(2, 10, seed=3),
+                            autoalloc=cfg, seed=3,
+                            max_attempts=max_attempts, tracer=tracer)
+    replay = TraceReplay(tracer.events())
+    # a different seed proves the rng is fully displaced by the trace
+    again = simulate_cluster(replay.spec(spec), replay.trace(),
+                             autoalloc=cfg, seed=4242,
+                             max_attempts=max_attempts)
+    assert orig.records == again.records
+    assert orig.allocations == again.allocations
+    assert orig.summary() == again.summary()
+    if max_attempts == 2:           # the scenario must exercise kills
+        assert any(r.status == "failed" for r in orig.records)
+
+
+def test_roundtrip_identity_static_with_lost():
+    spec = backends.get("hq")
+    tracer = Tracer()
+    orig = simulate_cluster(spec, bursty_trace(2, 10, seed=3),
+                            n_workers=2, walltime_s=120, seed=7,
+                            tracer=tracer)
+    assert any(r.status == "lost" for r in orig.records)
+    again = replay_cluster(spec, tracer.events(), n_workers=2,
+                           walltime_s=120, seed=0)
+    assert orig.records == again.records
+
+
+def test_replay_spec_fifo_and_fallback():
+    spec, events = _sim_trace_events(n_workers=4)
+    replay = TraceReplay(events)
+    assert len(replay.queue_waits) == 1
+    rspec = replay.spec(spec)
+    assert isinstance(rspec, ReplayBackendSpec)
+    rng = np.random.default_rng(0)
+    # first draw pops the recorded value verbatim...
+    assert rspec.draw_queue_wait(rng, math.inf) == replay.queue_waits[0]
+    # ...and a dry FIFO falls back to the base parametric draw
+    rng2 = np.random.default_rng(11)
+    fallback = rspec.draw_queue_wait(rng2, 7200.0)
+    assert fallback == spec.draw_queue_wait(np.random.default_rng(11),
+                                            7200.0)
+    # fresh FIFO per spec() call: a second replay starts over
+    assert replay.spec(spec).queue_fifo[0] == replay.queue_waits[0]
+    # exact recorded constants from the trace.spec instant
+    assert rspec.dispatch_latency == spec.dispatch_latency
+    assert rspec.server_init_for("burst-model") == spec.server_init
+
+
+def test_replay_untimed_task_ladder():
+    # killed-terminal -> inf; lost with time_request -> the hint
+    spec = backends.get("hq")
+    tracer = Tracer()
+    simulate_cluster(spec, bursty_trace(2, 10, seed=3), n_workers=2,
+                     walltime_s=120, seed=7, tracer=tracer)
+    replay = TraceReplay(tracer.events())
+    tasks = replay.trace()
+    lost = [t for t in tasks if not math.isfinite(t.runtime)
+            or t.runtime != pytest.approx(20.0, rel=0.2)]
+    # bursty_trace hints time_request=runtime_s: untimed tasks take it
+    for t in lost:
+        assert t.runtime == t.time_request or math.isinf(t.runtime)
+    # killed-terminal tasks replay as inf
+    cfg = AutoAllocConfig(**_KILL_CFG)
+    t2 = Tracer()
+    simulate_cluster(spec, bursty_trace(2, 10, seed=3), autoalloc=cfg,
+                     seed=3, max_attempts=2, tracer=t2)
+    r2 = TraceReplay(t2.events())
+    assert r2.summary()["n_killed"] > 0
+    killed_rts = [r2.runtime_of(t) for t in r2._killed]
+    assert all(math.isinf(rt) for rt in killed_rts)
+
+
+# ---------------------------------------------------------------------------
+# online drift detection
+# ---------------------------------------------------------------------------
+def test_monitor_alarm_once_with_hysteresis():
+    spec = backends.get("hq")          # dispatch_latency = 8 ms
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    mon = CalibrationMonitor(spec, registry=reg, tracer=tracer, min_n=4,
+                             window=8)
+    # sustained excursion: observed dispatch ~0 vs predicted 8 ms
+    for i in range(10):
+        mon.observe("dispatch", spec.dispatch_latency, 0.0, float(i))
+    assert len(mon.alarms) == 1        # one excursion, ONE alarm
+    drift_events = [e for e in tracer.buf if e[2] == "calib.drift"]
+    assert len(drift_events) == 1
+    assert drift_events[0][6]["phase"] == "dispatch"
+    # recovery re-arms: accurate observations pull the window mean back
+    for i in range(10, 30):
+        mon.observe("dispatch", spec.dispatch_latency,
+                    spec.dispatch_latency, float(i))
+    for i in range(30, 40):
+        mon.observe("dispatch", spec.dispatch_latency, 0.0, float(i))
+    assert len(mon.alarms) == 2        # second excursion, second alarm
+
+
+def test_monitor_consume_trace_and_calibrated_silence():
+    spec, events = _sim_trace_events(n_workers=4)
+    # the sim trace was GENERATED by this spec: zero residual, no alarms
+    mon = CalibrationMonitor(spec, min_n=4)
+    fed = mon.consume(events)
+    assert fed > 0 and mon.alarms == []
+    # a wildly-off spec alarms on the same trace
+    wrong = backends.get("slurm")      # dispatch 0.5 s vs hq's 8 ms
+    mon2 = CalibrationMonitor(wrong, min_n=4)
+    mon2.consume(events)
+    assert len(mon2.alarms) >= 1
+    # calibrating on the trace silences the alarms again
+    cal = calibrate(events, wrong)
+    mon3 = CalibrationMonitor(cal, min_n=4)
+    mon3.consume(events)
+    assert mon3.alarms == []
+
+
+def test_monitor_registry_counters():
+    spec = backends.get("hq")
+    reg = MetricsRegistry()
+    mon = CalibrationMonitor(spec, registry=reg, min_n=4)
+    for i in range(8):
+        mon.observe("init", 1.0, 4.0, float(i))
+    assert len(mon.alarms) == 1
+    assert mon.summary()["phases"]["init"]["mean_logratio"] \
+        == pytest.approx(math.log(4.0), abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# JSONL read path + streaming
+# ---------------------------------------------------------------------------
+def test_read_jsonl_roundtrip(tmp_path):
+    _spec, events = _sim_trace_events(n_workers=4)
+    tracer = Tracer()
+    for ev in events:
+        tracer.emit(ev[1], ev[2], ev[0], pid=ev[3], tid=ev[4],
+                    dur=ev[5], args=ev[6])
+    path = str(tmp_path / "t.jsonl")
+    tracer.write_jsonl(path)
+    back = read_jsonl(path)
+    assert back == [(*e[:6], e[6] if e[6] else None) for e in events]
+
+
+def test_read_jsonl_strict_and_lenient(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    good = {"ts": 1.0, "ph": "i", "name": "x", "pid": 0, "tid": 0}
+    with open(path, "w") as fh:
+        fh.write(json.dumps(good) + "\n")
+        fh.write("not json\n")
+        fh.write(json.dumps({"ts": 2.0, "ph": "Z", "name": "y"}) + "\n")
+        fh.write(json.dumps(dict(good, ts=3.0)) + "\n")
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        read_jsonl(path)
+    rows = read_jsonl(path, strict=False)
+    assert [r[0] for r in rows] == [1.0, 3.0]
+
+
+def test_validate_jsonl_row():
+    ok = {"ts": 0.0, "ph": "X", "name": "task.run", "pid": 1, "tid": 0,
+          "dur": 2.0, "args": {"task": "t"}}
+    assert validate_jsonl_row(ok) is None
+    assert validate_jsonl_row({**ok, "ph": "Q"}) is not None
+    assert validate_jsonl_row({**ok, "ts": float("nan")}) is not None
+    assert validate_jsonl_row({**ok, "dur": -1.0}) is not None
+    assert validate_jsonl_row({**ok, "args": 3}) is not None
+    assert validate_jsonl_row([1, 2]) is not None
+
+
+def test_stream_to_matches_write_jsonl(tmp_path):
+    spec = backends.get("hq")
+    streamed = str(tmp_path / "s.jsonl")
+    tracer = Tracer().stream_to(streamed)
+    simulate_cluster(spec, bursty_trace(1, 6, seed=2), n_workers=2,
+                     seed=2, tracer=tracer)
+    tracer.close_stream()
+    batch = str(tmp_path / "b.jsonl")
+    tracer.write_jsonl(batch)
+    assert open(streamed).read() == open(batch).read()
+    # and the streamed file calibrates end-to-end
+    cal = calibrate(streamed, spec)
+    assert cal.server_init == spec.server_init
+
+
+def test_streamed_trace_survives_ring_buffer_drop(tmp_path):
+    spec = backends.get("hq")
+    path = str(tmp_path / "tiny.jsonl")
+    tracer = Tracer(capacity=8).stream_to(path)   # buffer far too small
+    simulate_cluster(spec, bursty_trace(1, 6, seed=2), n_workers=2,
+                     seed=2, tracer=tracer)
+    tracer.close_stream()
+    assert tracer.n_dropped > 0
+    assert len(read_jsonl(path)) == tracer.buf.n_seen
