@@ -1,0 +1,225 @@
+"""Benchmark: surrogate conditioning + re-costing cost across engines.
+
+The paper's UQ workloads stream completions into an online surrogate;
+PR 5 made the queues O(log n), which left the surrogate itself as the
+scaling wall: the exact engine pays one O(n³) Cholesky refactorisation
+per conditioning batch.  This benchmark is the perf anchor for the
+pluggable `repro.uq.engine` backends — it measures, at each training-set
+size n:
+
+  * conditioning latency for one k-point batch on every backend:
+    ``exact`` (full refactor, O(n³)), ``incremental`` (rank-k block
+    Cholesky update, O(n²k)), ``partitioned`` (cap-bounded expert
+    refactor, O(cap³) — flat in n);
+  * re-cost latency: one warm bucket-padded `predict_batch` pass over a
+    1024-query batch per backend (the queue re-scoring hot path).
+
+Pass criteria (printed, and non-zero exit on failure):
+  * with ``--quick`` (the CI gate): incremental conditioning at the
+    gate size (default n=5000) is >= ``--min-speedup`` (default 10x)
+    faster than exact — the ISSUE's acceptance bar;
+  * partitioned conditioning latency does not grow with n (the largest
+    size costs <= 5x the smallest — "flat" with generous CI noise).
+
+Writes every number to ``BENCH_gp_scale.json`` (``--json`` to move it)
+so future PRs can diff the trajectory.
+
+    PYTHONPATH=src python benchmarks/gp_scale.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.uq import engine as engine_lib
+from repro.uq import gp as gp_lib
+
+SIZES = (512, 1_024, 2_048, 5_000, 8_000)
+QUICK_SIZES = (1_024, 5_000)
+COND_K = 8                     # points per conditioning batch
+RECOST_Q = 1_024               # queries per re-cost pass
+EXPERT_CAP = 256
+
+
+def _dataset(n: int, d: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-2, 2, (n, d)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + 0.3 * x[:, 1] - 0.1 * x[:, 2] * x[:, 3]
+         + 0.05 * rng.standard_normal(n)).astype(np.float32)[:, None]
+    return x, y
+
+
+def _base_posterior(x, y) -> gp_lib.GPPosterior:
+    """One exact factorisation at size n under fixed hyperparameters —
+    type-II MLE at every n would swamp the numbers being measured."""
+    params = gp_lib.GPParams.init(x.shape[1])
+    x = jnp.asarray(x, jnp.float32)
+    y2 = jnp.asarray(y, jnp.float32)
+    mean = jnp.mean(y2, axis=0)
+    std = jnp.maximum(jnp.std(y2, axis=0), 1e-8)
+    chol = gp_lib.chol_factor(params, x, "rbf")
+    alpha = jax.scipy.linalg.cho_solve((chol, True), (y2 - mean) / std)
+    return gp_lib.GPPosterior(params=params, x=x, y=y2, y_mean=mean,
+                              y_std=std, chol=chol, alpha=alpha,
+                              kind="rbf")
+
+
+def _block(engine) -> None:
+    """Force pending device work so wall timings are honest."""
+    if engine.backend == "incremental":
+        return              # numpy factor lineage: already synchronous
+    if engine.backend == "partitioned":
+        for e in engine.experts:
+            jax.block_until_ready(e.chol)
+        return
+    jax.block_until_ready(engine.post.chol)
+    jax.block_until_ready(engine.post.alpha)
+
+
+def _time_condition(engine, xk, yk, repeats: int) -> float:
+    """Median seconds for one k-point conditioning batch, streaming:
+    each repeat conditions the PREVIOUS repeat's engine — the successor
+    chain a real completion stream walks.  (Re-conditioning a stale
+    generation instead would fork the incremental factor lineage and
+    bill an O(n²) defensive copy the hot path never pays.)  Size creep
+    is repeats*k points on n — noise next to the backend gaps.
+
+    The jax backends get a throwaway warm chain through the SAME size
+    sequence first, so the timings measure factorisation math, not XLA
+    retracing of each new shape (the incremental backend's conditioning
+    path is numpy/LAPACK — nothing to warm, and a warm chain would
+    advance the shared factor lineage and force forks)."""
+    if engine.backend != "incremental":
+        warm = engine
+        for r in range(repeats):
+            warm = warm.condition(xk + 1e-3 * (r + repeats), yk)
+        _block(warm)
+    ts = []
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        engine = engine.condition(xk + 1e-3 * r, yk)
+        _block(engine)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _time_recost(engine, xq, repeats: int) -> float:
+    engine.predict_batch(xq)                   # warm the bucket shapes
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        mean, _ = engine.predict_batch(xq)
+        jax.block_until_ready(mean)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_size(n: int, repeats: int = 3, seed: int = 0) -> Dict:
+    x, y = _dataset(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    xk = rng.uniform(-2, 2, (COND_K, x.shape[1])).astype(np.float32)
+    yk = rng.standard_normal((COND_K, 1)).astype(np.float32)
+    xq = rng.uniform(-2, 2, (RECOST_Q, x.shape[1])).astype(np.float32)
+
+    post = _base_posterior(x, y)
+    jax.block_until_ready(post.chol)
+    row: Dict = {"n": n, "k": COND_K, "recost_q": RECOST_Q,
+                 "condition_s": {}, "recost_s": {}}
+
+    for backend in engine_lib.BACKENDS:
+        kw = {"expert_cap": EXPERT_CAP} if backend == "partitioned" else {}
+        eng = engine_lib.wrap_posterior(post, backend, **kw)
+        if backend == "incremental":
+            # amortised steady state: the periodic refactor is the
+            # hygiene tail, the block update is the per-batch price
+            eng = eng.condition(xk - 1e-3, yk)   # leave the "fresh" state
+            _block(eng)
+        row["condition_s"][backend] = _time_condition(eng, xk, yk, repeats)
+        row["recost_s"][backend] = _time_recost(eng, xq, repeats)
+    row["speedup_incremental"] = (row["condition_s"]["exact"]
+                                  / row["condition_s"]["incremental"])
+    row["speedup_partitioned"] = (row["condition_s"]["exact"]
+                                  / row["condition_s"]["partitioned"])
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI gate: two sizes + hard speedup criterion")
+    ap.add_argument("--json", default="BENCH_gp_scale.json")
+    ap.add_argument("--gate-n", type=int, default=5_000,
+                    help="training-set size the speedup gate measures at")
+    ap.add_argument("--min-speedup", type=float, default=10.0,
+                    help="--quick fails if incremental conditioning is "
+                         "not this many times faster than exact at gate-n")
+    args = ap.parse_args(argv)
+
+    sizes = QUICK_SIZES if args.quick else SIZES
+    if args.gate_n not in sizes:
+        sizes = tuple(sorted(set(sizes) | {args.gate_n}))
+    rows: List[Dict] = []
+    print(f"gp-scale: sizes={list(sizes)} backends={list(engine_lib.BACKENDS)}"
+          f" (k={COND_K} per batch, cap={EXPERT_CAP})")
+    for n in sizes:
+        row = bench_size(n, repeats=2 if args.quick else 3)
+        rows.append(row)
+        c, r = row["condition_s"], row["recost_s"]
+        print(f"  n={n:>6,}  condition: "
+              f"exact {c['exact']*1e3:>9.1f} ms | "
+              f"incr {c['incremental']*1e3:>7.1f} ms "
+              f"({row['speedup_incremental']:>6.1f}x) | "
+              f"part {c['partitioned']*1e3:>7.1f} ms "
+              f"({row['speedup_partitioned']:>6.1f}x)")
+        print(f"          recost({RECOST_Q}): "
+              f"exact {r['exact']*1e3:>9.1f} ms | "
+              f"incr {r['incremental']*1e3:>7.1f} ms | "
+              f"part {r['partitioned']*1e3:>7.1f} ms")
+
+    gate_row = next(r for r in rows if r["n"] == args.gate_n)
+    part_first = rows[0]["condition_s"]["partitioned"]
+    part_last = rows[-1]["condition_s"]["partitioned"]
+    criteria = {
+        "gate_n": args.gate_n,
+        "min_speedup": args.min_speedup,
+        "speedup_incremental_at_gate": gate_row["speedup_incremental"],
+        "incremental_gate_ok":
+            gate_row["speedup_incremental"] >= args.min_speedup,
+        "partitioned_flat_ratio": part_last / max(part_first, 1e-12),
+        "partitioned_flat_ok": part_last <= 5.0 * part_first,
+    }
+    payload = {"bench": "gp_scale", "quick": args.quick, "rows": rows,
+               "criteria": criteria}
+    with open(args.json, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"  wrote {args.json}")
+
+    ok = True
+    msg = (f"incremental speedup at n={args.gate_n}: "
+           f"{criteria['speedup_incremental_at_gate']:.1f}x "
+           f"(need >= {args.min_speedup:.0f}x)")
+    if args.quick and not criteria["incremental_gate_ok"]:
+        print(f"  FAIL {msg}")
+        ok = False
+    else:
+        print(f"  PASS {msg}")
+    msg = (f"partitioned conditioning flat in n: "
+           f"{part_first*1e3:.1f} ms -> {part_last*1e3:.1f} ms "
+           f"({criteria['partitioned_flat_ratio']:.2f}x, need <= 5x)")
+    if not criteria["partitioned_flat_ok"]:
+        print(f"  FAIL {msg}")
+        ok = False
+    else:
+        print(f"  PASS {msg}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -154,3 +154,85 @@ def gp_predict(x_train, x_star, lengthscale, variance, alpha, linv,
     )(x1s, x2s, alpha.astype(jnp.float32), linv.astype(jnp.float32))
     var_f = variance.astype(jnp.float32)
     return var_f * mean0[:s], (var_f * var_f) * qf0[:s, 0]
+
+
+def _gp_predict_experts_kernel(x1_ref, x2_ref, alpha_ref, linv_ref,
+                               mean_ref, qf_ref, *, kind):
+    """One (expert, query-tile) grid step of the ensemble predict: the
+    same fused cross-covariance + alpha + ||L^-1 ks||^2 body as
+    `_gp_predict_kernel`, with every operand carrying a size-1 leading
+    expert block — E experts answer their routed queries in ONE launch
+    instead of E."""
+    x1 = x1_ref[0].astype(jnp.float32)                         # [n, d]
+    x2 = x2_ref[0].astype(jnp.float32)                         # [bs, d]
+    cross = jax.lax.dot_general(x1, x2, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    n1 = jnp.sum(x1 * x1, axis=-1)
+    n2 = jnp.sum(x2 * x2, axis=-1)
+    d2 = jnp.maximum(n1[:, None] + n2[None, :] - 2.0 * cross, 0.0)
+    if kind == "rbf":
+        k = jnp.exp(-0.5 * d2)                                 # [n, bs]
+    else:  # matern52
+        r = jnp.sqrt(d2 + 1e-12)
+        k = (1.0 + math.sqrt(5.0) * r + 5.0 / 3.0 * d2) * jnp.exp(
+            -math.sqrt(5.0) * r)
+    alpha = alpha_ref[0].astype(jnp.float32)                   # [n, m]
+    mean_ref[0] = jax.lax.dot_general(
+        k, alpha, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # [bs, m]
+    linv = linv_ref[0].astype(jnp.float32)                     # [n, n]
+    w = jax.lax.dot_general(linv, k, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    qf_ref[0] = jnp.sum(w * w, axis=0)[:, None]                # [bs, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block_s", "interpret"))
+def gp_predict_experts(x_train, x_star, lengthscale, variance, alpha, linv,
+                       kind: str = "rbf", *, block_s: int = DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """Stacked local-GP ensemble predict in ONE kernel launch.
+
+    x_train: [E, N, D]; x_star: [E, S, D] (each expert's routed queries,
+    zero-padded to a common width); alpha: [E, N, M]; linv: [E, N, N];
+    shared hyperparameters -> (mean [E, S, M], quadratic form [E, S]).
+
+    Grid is (E, S // bs): expert e never reads expert e2's operands, so
+    the launch shards trivially over the expert axis on a multi-device
+    mesh.  Padded TRAINING rows are exact (alpha and linv zero there,
+    identical to `gp_predict`); padded query rows produce garbage the
+    caller scatters away.
+    """
+    assert kind in ("rbf", "matern52"), kind
+    e, n, d = x_train.shape
+    s = x_star.shape[1]
+    m_out = alpha.shape[2]
+    ls = lengthscale.astype(jnp.float32)
+    x1s = x_train.astype(jnp.float32) / ls
+    x2s = x_star.astype(jnp.float32) / ls
+
+    pn = (-n) % 8                                  # sublane-align the train dim
+    if pn:
+        x1s = jnp.pad(x1s, ((0, 0), (0, pn), (0, 0)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, pn), (0, 0)))
+        linv = jnp.pad(linv, ((0, 0), (0, pn), (0, pn)))
+    bs = min(block_s, max(s, 8))
+    ps = (-s) % bs
+    if ps:
+        x2s = jnp.pad(x2s, ((0, 0), (0, ps), (0, 0)))
+
+    mean0, qf0 = pl.pallas_call(
+        functools.partial(_gp_predict_experts_kernel, kind=kind),
+        grid=(e, (s + ps) // bs),
+        in_specs=[pl.BlockSpec((1, n + pn, d), lambda ei, j: (ei, 0, 0)),
+                  pl.BlockSpec((1, bs, d), lambda ei, j: (ei, j, 0)),
+                  pl.BlockSpec((1, n + pn, m_out), lambda ei, j: (ei, 0, 0)),
+                  pl.BlockSpec((1, n + pn, n + pn),
+                               lambda ei, j: (ei, 0, 0))],
+        out_specs=(pl.BlockSpec((1, bs, m_out), lambda ei, j: (ei, j, 0)),
+                   pl.BlockSpec((1, bs, 1), lambda ei, j: (ei, j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((e, s + ps, m_out), jnp.float32),
+                   jax.ShapeDtypeStruct((e, s + ps, 1), jnp.float32)),
+        interpret=interpret,
+    )(x1s, x2s, alpha.astype(jnp.float32), linv.astype(jnp.float32))
+    var_f = variance.astype(jnp.float32)
+    return var_f * mean0[:, :s], (var_f * var_f) * qf0[:, :s, 0]

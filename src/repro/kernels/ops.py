@@ -96,3 +96,19 @@ def gp_predict(x_train, x_star, lengthscale, variance, alpha, linv,
                                     interpret=(mode == "interpret"))
     return ref.gp_predict(x_train, x_star, lengthscale, variance, alpha,
                           linv, kind)
+
+
+def gp_predict_experts(x_train, x_star, lengthscale, variance, alpha, linv,
+                       kind: str = "rbf", *, impl: Optional[str] = None):
+    """Stacked local-GP ensemble predict: every expert answers its routed
+    query tile in ONE launch (grid over experts × query tiles on TPU,
+    vmapped XLA elsewhere).  x_train: [E, N, D]; x_star: [E, S, D];
+    alpha: [E, N, M]; linv: [E, N, N] -> (mean [E, S, M], qf [E, S])."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import gp_kernel
+        return gp_kernel.gp_predict_experts(
+            x_train, x_star, lengthscale, variance, alpha, linv, kind,
+            interpret=(mode == "interpret"))
+    return ref.gp_predict_experts(x_train, x_star, lengthscale, variance,
+                                  alpha, linv, kind)

@@ -392,3 +392,22 @@ def gp_predict(x_train: jax.Array, x_star: jax.Array, lengthscale: jax.Array,
     v = linv @ ks
     qf = jnp.sum(v * v, axis=0)
     return mean, qf
+
+
+def gp_predict_experts(x_train: jax.Array, x_star: jax.Array,
+                       lengthscale: jax.Array, variance: jax.Array,
+                       alpha: jax.Array, linv: jax.Array,
+                       kind: str = "rbf") -> "tuple[jax.Array, jax.Array]":
+    """Stacked local-GP ensemble predict (XLA fallback): vmap of
+    `gp_predict` over the expert axis.
+
+    x_train: [E, N, D]; x_star: [E, S, D]; alpha: [E, N, M];
+    linv: [E, N, N]; shared hyperparameters
+    -> (normalised mean [E, S, M], quadratic form [E, S]).  Zero-padded
+    training rows contribute nothing (alpha/linv zero there), matching
+    the Pallas kernel exactly.
+    """
+    return jax.vmap(
+        lambda xt, xs, al, li: gp_predict(xt, xs, lengthscale, variance,
+                                          al, li, kind)
+    )(x_train, x_star, alpha, linv)

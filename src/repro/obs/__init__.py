@@ -17,10 +17,12 @@ through `simulate_cluster` (`TraceReplay` / `replay_cluster`).
 """
 from repro.obs.attribution import (OverheadBreakdown, attribute_overhead,
                                    capacity_intervals, format_breakdown)
-from repro.obs.calib import (CalibratedBackendSpec, CalibrationMonitor,
-                             PhaseFit, calibrate, extract_phase_samples,
-                             fit_lognormal, fit_phase, hlo_runtime_prior,
-                             ks_lognormal, prior_fit)
+from repro.obs.calib import (SACCT_DEFAULT_FIELDS, CalibratedBackendSpec,
+                             CalibrationMonitor, PhaseFit, calibrate,
+                             extract_phase_samples, fit_lognormal,
+                             fit_phase, hlo_runtime_prior, ks_lognormal,
+                             parse_slurm_duration, parse_slurm_time,
+                             prior_fit, read_sacct, sacct_to_jsonl)
 from repro.obs.registry import DEFAULT_EDGES, Histogram, MetricsRegistry
 from repro.obs.replay import (ReplayBackendSpec, TraceReplay,
                               replay_cluster)
@@ -50,9 +52,14 @@ __all__ = [
     "format_breakdown",
     "hlo_runtime_prior",
     "ks_lognormal",
+    "parse_slurm_duration",
+    "parse_slurm_time",
     "prior_fit",
     "read_jsonl",
+    "read_sacct",
     "replay_cluster",
+    "sacct_to_jsonl",
+    "SACCT_DEFAULT_FIELDS",
     "span_sequence",
     "validate_chrome_trace",
     "validate_jsonl_row",

@@ -415,6 +415,220 @@ def calibrate(source: Any, base: BackendSpec, *,
 
 
 # ---------------------------------------------------------------------------
+# SLURM sacct ingestion
+# ---------------------------------------------------------------------------
+# the canonical accounting columns the adapter consumes — the default
+# `sacct --parsable2 --format=` selection for calibration-grade logs
+SACCT_DEFAULT_FIELDS = ("JobID", "JobName", "State", "Submit", "Start",
+                        "End", "Elapsed", "Timelimit", "NNodes")
+
+# sacct State (first word; "CANCELLED by 123" and "OUT_OF_MEMORY" included)
+# -> the trace schema's task status vocabulary
+_SACCT_STATUS = {"COMPLETED": "ok", "TIMEOUT": "timeout",
+                 "FAILED": "failed", "CANCELLED": "failed",
+                 "NODE_FAIL": "failed", "OUT_OF_MEMORY": "failed",
+                 "OUT_OF_ME+": "failed", "PREEMPTED": "failed"}
+
+
+def parse_slurm_duration(s: Optional[str]) -> Optional[float]:
+    """``[DD-]HH:MM:SS[.fff]`` (also ``MM:SS``) -> seconds; None for
+    empty/UNLIMITED/Partition_Limit/INVALID — "no bound" and "no value"
+    both mean the field contributes nothing."""
+    if not s:
+        return None
+    s = s.strip()
+    if not s or s.upper() in ("UNLIMITED", "PARTITION_LIMIT", "INVALID",
+                              "NONE", "UNKNOWN"):
+        return None
+    days = 0.0
+    if "-" in s:
+        d, s = s.split("-", 1)
+        days = float(d)
+    parts = s.split(":")
+    try:
+        nums = [float(p) for p in parts]
+    except ValueError:
+        return None
+    if len(nums) == 3:
+        h, m, sec = nums
+    elif len(nums) == 2:
+        h, (m, sec) = 0.0, nums
+    elif len(nums) == 1:
+        h, m, sec = 0.0, 0.0, nums[0]
+    else:
+        return None
+    return days * 86400.0 + h * 3600.0 + m * 60.0 + sec
+
+
+def parse_slurm_time(s: Optional[str]) -> Optional[float]:
+    """sacct timestamp (ISO ``YYYY-MM-DDTHH:MM:SS``, or epoch seconds)
+    -> epoch seconds; naive timestamps are read as UTC so queue waits
+    are environment-independent.  None for Unknown/None/empty."""
+    if not s:
+        return None
+    s = s.strip()
+    if not s or s.upper() in ("UNKNOWN", "NONE", "N/A"):
+        return None
+    try:
+        return float(s)                        # epoch-seconds export
+    except ValueError:
+        pass
+    import calendar
+    import datetime
+    try:
+        dt = datetime.datetime.fromisoformat(s)
+    except ValueError:
+        return None
+    if dt.tzinfo is not None:
+        return dt.timestamp()
+    return float(calendar.timegm(dt.timetuple())) + dt.microsecond / 1e6
+
+
+def read_sacct(source: Any, *,
+               field_map: Optional[Mapping[str, str]] = None,
+               delimiter: str = "|",
+               strict: bool = True) -> List[TraceEvent]:
+    """Ingest real SLURM accounting output as `TraceEvent` tuples — the
+    field-mapping adapter that lets `sacct` logs feed `calibrate`
+    directly (the `read_jsonl` schema's real-cluster on-ramp).
+
+    `source` is a path to ``sacct --parsable2`` output (or an iterable
+    of its lines).  The first row may be the sacct header; without one,
+    columns are assumed to be `SACCT_DEFAULT_FIELDS` in order.
+    `field_map` renames: canonical field -> the column name the site's
+    export uses (e.g. ``{"JobName": "Account"}`` keys runtimes by
+    account instead), on top of the header/default layout.
+
+    Per completed job two trace structures come out, keyed exactly the
+    way `extract_phase_samples` groups them:
+
+      * an ``alloc.queued`` B/E pair at (Submit, Start) whose B args
+        carry ``queue_wait`` = Start − Submit, ``walltime_s`` from
+        Timelimit and ``n_workers`` from NNodes — one queue-wait sample
+        under the (walltime, size) request signature;
+      * a ``task.run`` X span at Start of length Elapsed with
+        ``model`` = JobName and ``status`` mapped from State
+        (COMPLETED -> ok, TIMEOUT -> timeout, failure states -> failed —
+        excluded from runtime fits by the extractor, like any failed
+        attempt).
+
+    Job *steps* (``JobID`` containing '.', e.g. ``4242.batch``) are
+    accounting detail of their parent job and are skipped.  Jobs still
+    pending/running are skipped (no complete sample yet).  Timestamps
+    are rebased so the earliest Submit is t=0 — calibration consumes
+    differences only.  With ``strict=True`` a malformed row raises
+    `ValueError` naming the line; otherwise bad rows are skipped.
+    """
+    if isinstance(source, str):
+        with open(source) as fh:
+            lines = fh.read().splitlines()
+        label = source
+    else:
+        lines = [str(ln).rstrip("\n") for ln in source]
+        label = "<lines>"
+    lines = [ln for ln in lines if ln.strip()]
+    if not lines:
+        return []
+
+    header = lines[0].split(delimiter)
+    if "JobID" in header or (field_map and
+                             any(v in header for v in field_map.values())):
+        rows = lines[1:]
+        columns = header
+    else:
+        rows = lines
+        columns = list(SACCT_DEFAULT_FIELDS)
+    fmap = dict(field_map or {})
+    index: Dict[str, int] = {}
+    for canon in SACCT_DEFAULT_FIELDS:
+        name = fmap.get(canon, canon)
+        if name in columns:
+            index[canon] = columns.index(name)
+    missing = [c for c in ("JobID", "State") if c not in index]
+    if missing:
+        raise ValueError(f"{label}: sacct columns {missing} not found in "
+                         f"{columns} (field_map={fmap or None})")
+
+    def field(parts: List[str], canon: str) -> Optional[str]:
+        i = index.get(canon)
+        if i is None or i >= len(parts):
+            return None
+        return parts[i]
+
+    jobs: List[Tuple[str, str, str, Optional[float], Optional[float],
+                     Optional[float], Optional[float], int]] = []
+    for lineno, ln in enumerate(rows, 2 if rows is not lines else 1):
+        parts = ln.split(delimiter)
+        job_id = field(parts, "JobID") or ""
+        if "." in job_id:
+            continue                           # a job STEP, not a job
+        state = (field(parts, "State") or "").split()[0:1]
+        state = state[0].upper() if state else ""
+        status = _SACCT_STATUS.get(state)
+        if status is None:
+            if state in ("", "PENDING", "RUNNING", "REQUEUED",
+                         "SUSPENDED"):
+                continue                       # not a complete sample yet
+            if strict:
+                raise ValueError(f"{label}:{lineno}: unknown sacct state "
+                                 f"{state!r} for job {job_id}")
+            continue
+        submit = parse_slurm_time(field(parts, "Submit"))
+        start = parse_slurm_time(field(parts, "Start"))
+        elapsed = parse_slurm_duration(field(parts, "Elapsed"))
+        limit = parse_slurm_duration(field(parts, "Timelimit"))
+        try:
+            nnodes = int(field(parts, "NNodes") or 1)
+        except ValueError:
+            nnodes = 1
+        name = field(parts, "JobName") or job_id
+        jobs.append((job_id, name, status, submit, start, elapsed,
+                     limit, nnodes))
+
+    t0 = min((j[3] for j in jobs if j[3] is not None), default=0.0)
+    events: List[TraceEvent] = []
+    for pid, (job_id, name, status, submit, start, elapsed, limit,
+              nnodes) in enumerate(jobs, 1):
+        if submit is not None and start is not None and start >= submit:
+            args = {"queue_wait": start - submit, "walltime_s": limit,
+                    "n_workers": nnodes, "alloc": job_id}
+            events.append((submit - t0, "B", "alloc.queued", pid, 0,
+                           0.0, args))
+            events.append((start - t0, "E", "alloc.queued", pid, 0,
+                           0.0, None))
+        if start is not None and elapsed is not None:
+            events.append((start - t0, "X", "task.run", pid, 0, elapsed,
+                           {"model": name, "compute": elapsed,
+                            "status": status, "task": job_id}))
+    events.sort(key=lambda e: (e[0], e[1] != "B"))
+    return events
+
+
+def sacct_to_jsonl(source: Any, dst: str, **read_kw) -> int:
+    """Convert sacct accounting output to the `read_jsonl` trace schema
+    on disk (every row `validate_jsonl_row`-clean), so real-cluster logs
+    flow through the same files as recorded traces.  Returns the number
+    of rows written."""
+    import json
+    from repro.obs.trace import validate_jsonl_row
+    events = read_sacct(source, **read_kw)
+    with open(dst, "w") as fh:
+        for ts, ph, name, pid, tid, dur, args in events:
+            row: Dict[str, Any] = {"ts": ts, "ph": ph, "name": name,
+                                   "pid": pid, "tid": tid}
+            if ph == "X":
+                row["dur"] = dur
+            if args is not None:
+                row["args"] = args
+            problem = validate_jsonl_row(row)
+            if problem is not None:            # schema drift = a bug here
+                raise AssertionError(f"sacct row fails trace schema: "
+                                     f"{problem}")
+            fh.write(json.dumps(row) + "\n")
+    return len(events)
+
+
+# ---------------------------------------------------------------------------
 # online drift detection
 # ---------------------------------------------------------------------------
 class CalibrationMonitor:

@@ -61,12 +61,17 @@ class SurrogateOffload:
     layer (single-node policy, cluster broker, live executor, simulator).
 
     `posterior` is a trained `repro.uq.gp.GPPosterior` over the task
-    input theta; None (or fewer than `min_train` training points) keeps
-    every task on the real path — an unarmed engine is a no-op router.
+    input theta (or an already-configured `repro.uq.engine` backend);
+    None (or fewer than `min_train` training points) keeps every task on
+    the real path — an unarmed engine is a no-op router.  `backend`
+    selects the surrogate engine a bare posterior is lifted into:
+    "exact" (default, full refit per conditioning — the reference),
+    "incremental" (O(n²) block Cholesky updates on the completion
+    stream) or "partitioned" (cap-bounded local-GP ensemble).
 
     Thread-safety: decisions run under the executor's dispatch lock,
     `evaluate`/`observe` from worker threads; the internal lock guards
-    the posterior swap and the counters.  A push-time trust check costs
+    the engine swap and the counters.  A push-time trust check costs
     one bucketed (pre-compiled) predict launch; the compile itself is
     warmed at construction and after each conditioning, OFF the dispatch
     lock, so the pool never stalls on XLA.
@@ -77,8 +82,17 @@ class SurrogateOffload:
                  sd_threshold: float = 0.1, min_train: int = 8,
                  latency_s: float = 0.05, n_virtual_workers: int = 1,
                  condition_every: int = 8, max_points: int = 256,
-                 sd_window: int = 4096):
-        self.posterior = posterior
+                 sd_window: int = 4096, backend: str = "exact",
+                 **backend_kw):
+        from repro.uq import engine as uq_engine
+        self.backend = backend
+        # backend-specific knobs (e.g. partitioned's expert_cap,
+        # incremental's refactor_every) ride through to the engine —
+        # both here and on every posterior re-arm
+        self._backend_kw = backend_kw
+        self._engine = uq_engine.as_engine(posterior, backend,
+                                           max_points=max_points,
+                                           **backend_kw)
         # which model this surrogate stands in for; None means "any" —
         # only safe when every model shares the posterior's theta space.
         # With several models whose payloads happen to flatten to the
@@ -116,31 +130,40 @@ class SurrogateOffload:
         # lock; pre-compiling the single-theta bucket shape here keeps
         # the first decide() from stalling the whole pool on an XLA
         # compile (each conditioning re-warms its new training size)
-        self._warm(posterior)
+        self._warm(self._engine)
 
-    def _warm(self, post) -> None:
-        if post is None:
-            return
-        try:
-            from repro.uq import gp
-            gp.predict_batch(post, np.asarray(post.x[:1], np.float32))
-        except Exception:  # noqa: BLE001 — warmup is best-effort
-            pass
+    @property
+    def posterior(self):
+        """The underlying `GPPosterior` (exact/incremental engines), the
+        engine itself (partitioned — there is no single factor), or None
+        when unarmed.  Assignment re-arms the router: a bare posterior is
+        lifted into this engine's configured backend."""
+        eng = self._engine
+        return getattr(eng, "post", eng)
+
+    @posterior.setter
+    def posterior(self, post) -> None:
+        from repro.uq import engine as uq_engine
+        self._engine = uq_engine.as_engine(post, self.backend,
+                                           max_points=self.max_points,
+                                           **self._backend_kw)
+
+    @staticmethod
+    def _warm(eng) -> None:
+        if eng is not None:
+            eng.warm()
 
     # -- trust scoring ---------------------------------------------------
     def trust_sd(self, thetas: Sequence[Sequence[float]]) -> np.ndarray:
         """Standardised (latent) posterior sd at each theta — one
-        bucket-padded `gp.predict_batch` pass for the whole batch.
+        bucket-padded `predict_batch` pass through the engine for the
+        whole batch.
 
         The outputs share one kernel, so the latent sd is the same for
         every column; dividing any column's original-scale sd by its own
         y_std recovers it.  Being dimensionless, one `sd_threshold`
         spans outputs of any physical scale (growth rate vs frequency)."""
-        from repro.uq import gp
-        post = self.posterior
-        _, var = gp.predict_batch(post, np.asarray(thetas, np.float32))
-        return (np.sqrt(np.asarray(var)[:, 0])
-                / max(float(post.y_std[0]), 1e-12))
+        return self._engine.latent_sd(thetas)
 
     # -- routing decision ------------------------------------------------
     def decide(self, req: "EvalRequest", cost: Optional[float]) -> bool:
@@ -165,7 +188,7 @@ class SurrogateOffload:
         req.config.pop(SURROGATE_KEY, None)
         with self._lock:
             self.n_considered += 1
-            post = self.posterior
+            eng = self._engine
         if req.config.get(NO_SURROGATE_KEY):
             return False                       # pinned to the real path
         if self.model_name is not None and \
@@ -173,10 +196,10 @@ class SurrogateOffload:
             return False                       # not this surrogate's model
         if not cost or cost < self.runtime_budget_s:
             return False                       # cheap enough to just run
-        if post is None or int(post.x.shape[0]) < self.min_train:
+        if eng is None or eng.n_train() < self.min_train:
             return False                       # no (trained) surrogate yet
         theta = request_features(req)          # flattened once per request
-        if theta is None or len(theta) != int(post.x.shape[1]):
+        if theta is None or len(theta) != eng.dim():
             return False                       # not in the surrogate's space
         sd = float(self.trust_sd([theta])[0])
         avoided = max(float(cost) - self.latency_s, 0.0)
@@ -215,22 +238,24 @@ class SurrogateOffload:
     def evaluate(self, parameters) -> List[List[float]]:
         """Serve one offloaded task: the GP posterior mean at theta, in
         UM-Bridge output shape ([[...]])."""
-        from repro.uq import gp
         theta = flatten_parameters(parameters)
         if theta is None:
             raise ValueError(f"unflattenable parameters {parameters!r}")
         with self._lock:
-            post = self.posterior
-        mean, _ = gp.predict_batch(post, np.asarray([theta], np.float32))
+            eng = self._engine
+        mean, _ = eng.predict_batch(np.asarray([theta], np.float32))
         out = [[float(v) for v in np.asarray(mean)[0]]]
         self.note_served()                     # only ANSWERED evals count
         return out
 
     def observe(self, parameters, value,
                 model_name: Optional[str] = None) -> None:
-        """Feed one completed REAL run; the posterior is conditioned in
-        batches of `condition_every` (each conditioning is a Cholesky
-        rebuild and a fresh predict shape — amortise it).  Scoped engines
+        """Feed one completed REAL run; the engine is conditioned in
+        batches of `condition_every` (every conditioning costs at least a
+        fresh predict shape — amortise it; what the conditioning itself
+        costs is the engine backend's contract: a full O(n³) refit on
+        "exact", an O(n²) block update on "incremental", an O(cap³)
+        per-affected-expert refactor on "partitioned").  Scoped engines
         ignore other models' completions — conditioning the surrogate on
         a different model's values would shrink variance on garbage."""
         if self.model_name is not None and model_name is not None \
@@ -242,12 +267,11 @@ class SurrogateOffload:
         y = flatten_parameters(value)
         if y is None:
             return
-        from repro.uq import gp
         with self._lock:
-            post = self.posterior
-            if post is None or len(theta) != int(post.x.shape[1]):
+            eng = self._engine
+            if eng is None or len(theta) != eng.dim():
                 return
-            if len(y) != int(post.y.shape[1]):
+            if len(y) != eng.n_outputs():
                 return
             self._pend_x.append(theta)
             self._pend_y.append(y)
@@ -255,18 +279,15 @@ class SurrogateOffload:
                 return
             xs, ys = self._pend_x, self._pend_y
             self._pend_x, self._pend_y = [], []
-        x_all = np.concatenate([np.asarray(post.x, np.float32),
-                                np.asarray(xs, np.float32)])
-        y_all = np.concatenate([np.asarray(post.y, np.float32),
-                                np.asarray(ys, np.float32)])
-        if len(x_all) > self.max_points:       # keep the most recent
-            x_all = x_all[-self.max_points:]
-            y_all = y_all[-self.max_points:]
-        new_post = gp.recondition(post, x_all, y_all)
-        self._warm(new_post)                   # compile off the hot path
+        # conditioning (and the recency cap, owned by the engine) runs
+        # outside the lock; engines are persistent so readers racing this
+        # update keep a consistent snapshot
+        new_engine = eng.condition(np.asarray(xs, np.float32),
+                                   np.asarray(ys, np.float32))
+        self._warm(new_engine)                 # compile off the hot path
         with self._lock:
-            if self.posterior is post:
-                self.posterior = new_post
+            if self._engine is eng:
+                self._engine = new_engine
             else:
                 # lost a conditioning race (or a re-arm): the batch is
                 # real ground truth — requeue it rather than dropping it

@@ -235,14 +235,57 @@ class PackingPolicy(_CostOrderedPolicy):
     progress beats idling, and the time *limit* still bounds the overrun.
     This generalises HQ's split between the time request (packing hint)
     and the time limit (kill bound).
+
+    `risk_lambda` opts into uncertainty-aware packing: when the predictor
+    exposes `predict_many_with_sd`, every queue key (and so every
+    budget-fit comparison) becomes mean + λ·posterior-sd, so a task whose
+    runtime the surrogate is unsure about must fit the allocation tail
+    with λ sigmas to spare — an uncertain 50 s estimate stops being
+    packed as if it were a certain one, which is what turns predictor
+    variance into fewer time-limit kills.  The default λ=0 keeps the
+    mean-only reference path bit-for-bit (the risk branch is never
+    entered), and predictors without sd support fall back to means.
     """
 
     name = "pack"
     sign = -1.0
 
-    def __init__(self, predictor=None, init_margin: float = 1.0):
+    def __init__(self, predictor=None, init_margin: float = 1.0,
+                 risk_lambda: float = 0.0):
         super().__init__(predictor)
         self.init_margin = init_margin
+        self.risk_lambda = risk_lambda
+
+    def _with_sd(self):
+        """The predictor's batched (mean, sd) hook, when risk-adjusted
+        costing is both enabled and available."""
+        if not self.risk_lambda or self.predictor is None:
+            return None
+        many = getattr(self.predictor, "predict_many_with_sd", None)
+        return many if callable(many) else None
+
+    def cost(self, req: EvalRequest) -> float:
+        many = self._with_sd()
+        if many is None:
+            return super().cost(req)
+        mean, sd = many([req])[0]
+        if mean is None:
+            return float(req.time_request) if req.time_request else 0.0
+        return float(mean) + self.risk_lambda * float(sd or 0.0)
+
+    def costs(self, reqs: List[EvalRequest]) -> List[float]:
+        many = self._with_sd()
+        if many is None:
+            return super().costs(reqs)
+        out: List[float] = []
+        for (mean, sd), req in zip(many(reqs), reqs):
+            if mean is not None:
+                out.append(float(mean) + self.risk_lambda * float(sd or 0.0))
+            elif req.time_request:
+                out.append(float(req.time_request))
+            else:
+                out.append(0.0)
+        return out
 
     def pop(self, worker=None):
         self._maybe_rebuild()

@@ -188,6 +188,28 @@ class QuantileEstimator:
                 out.append(per_model[name])
             return out
 
+    def predict_many_with_sd(self, reqs: Sequence[EvalRequest]
+                             ) -> List[tuple]:
+        """Batched (mean, sd) pairs: the p50 estimate plus a spread proxy
+        from the central quantiles — sd ≈ (p84 − p16) / 2, the normal
+        1-sigma band read off the empirical window.  Feeds the
+        uncertainty-aware packing path; (None, None) where unknown."""
+        with self._lock:
+            per_model: Dict[str, tuple] = {}
+            out: List[tuple] = []
+            for req in reqs:
+                name = req.model_name
+                if name not in per_model:
+                    rq = self._per_model.get(name)
+                    if rq is None or rq.count < self.min_observed:
+                        per_model[name] = (None, None)
+                    else:
+                        mean = rq.quantile(self.predict_quantile)
+                        sd = (rq.quantile(0.84) - rq.quantile(0.16)) / 2.0
+                        per_model[name] = (mean, max(sd, 0.0))
+                out.append(per_model[name])
+            return out
+
     def quantile(self, q: float, model_name: Optional[str] = None
                  ) -> Optional[float]:
         with self._lock:
@@ -219,11 +241,20 @@ class GPRuntimePredictor:
     Falls back to the per-model quantile estimate until `min_fit`
     observations with a consistent feature dimension have arrived, and for
     requests whose parameters cannot be flattened.
+
+    `backend` selects the surrogate engine (`repro.uq.engine`) carrying
+    the posterior: "exact" (default — every conditioning is a full
+    Cholesky refit, the reference behaviour), "incremental" (rank-k
+    block updates, O(n²) per conditioning batch — the always-on-service
+    choice once completions stream in faster than refits amortise), or
+    "partitioned" (cap-bounded local-GP ensemble for training sets one
+    Cholesky can't hold).
     """
 
     def __init__(self, min_fit: int = 8, refit_every: int = 32,
                  condition_every: int = 8, max_points: int = 256,
-                 kind: str = "rbf", fit_steps: int = 100, window: int = 512):
+                 kind: str = "rbf", fit_steps: int = 100, window: int = 512,
+                 backend: str = "exact"):
         self.min_fit = min_fit
         self.refit_every = refit_every
         # batch size for incremental conditioning: every posterior size is
@@ -233,16 +264,24 @@ class GPRuntimePredictor:
         self.max_points = max_points
         self.kind = kind
         self.fit_steps = fit_steps
+        self.backend = backend
         self._lock = threading.Lock()
         self._fallback = QuantileEstimator(window=window)
         self._xs: List[List[float]] = []       # feature rows (fixed dim)
         self._ys: List[float] = []             # log(compute_t + eps)
         self._dim: Optional[int] = None
-        self._post = None                      # gp.GPPosterior
+        self._engine = None                    # repro.uq.engine backend
         self._in_post = 0                      # rows of _xs in the posterior
         self._since_refit = 0
         self._post_version = 0                 # bumped on posterior installs
         self.n_fits = 0
+
+    @property
+    def _post(self):
+        """The underlying `GPPosterior` (None before the first fit) —
+        read-only introspection; the engine owns the conditioning."""
+        eng = self._engine
+        return getattr(eng, "post", eng)
 
     # -- RuntimePredictor -----------------------------------------------
     def observe(self, req: EvalRequest, compute_t: float) -> None:
@@ -250,7 +289,7 @@ class GPRuntimePredictor:
         feats = request_features(req)
         if feats is None:
             return
-        from repro.uq import gp
+        from repro.uq import engine as uq_engine
         import numpy as np
         fit_data = cond_args = None
         with self._lock:
@@ -263,7 +302,7 @@ class GPRuntimePredictor:
             self._since_refit += 1
             if len(self._xs) < self.min_fit:
                 return
-            if self._post is None or self._since_refit >= self.refit_every:
+            if self._engine is None or self._since_refit >= self.refit_every:
                 if len(self._xs) > self.max_points:    # keep the most recent
                     del self._xs[:-self.max_points]
                     del self._ys[:-self.max_points]
@@ -271,36 +310,36 @@ class GPRuntimePredictor:
                             np.asarray(self._ys, dtype=float))
                 self._since_refit = 0          # claim the refit
             elif len(self._xs) - self._in_post >= self.condition_every:
-                cond_args = (self._post, self._xs[self._in_post:],
+                cond_args = (self._engine, self._xs[self._in_post:],
                              self._ys[self._in_post:])
                 self._in_post = len(self._xs)
         # the expensive JAX work runs OUTSIDE the lock so concurrent
         # predict()/observe() calls are never stalled behind a refit;
         # a stale-by-one posterior install is harmless (best-effort)
         if fit_data is not None:
-            new_post = gp.fit(fit_data[0], fit_data[1], kind=self.kind,
-                              steps=self.fit_steps)
+            new_engine = uq_engine.fit_engine(
+                fit_data[0], fit_data[1], self.backend, kind=self.kind,
+                steps=self.fit_steps)
             with self._lock:
-                self._post = new_post
+                self._engine = new_engine
                 self._in_post = len(fit_data[0])
                 self._post_version += 1
                 self.n_fits += 1
         elif cond_args is not None:
-            new_post = gp.condition(cond_args[0], cond_args[1], cond_args[2])
+            new_engine = cond_args[0].condition(cond_args[1], cond_args[2])
             with self._lock:
-                if self._post is cond_args[0]: # drop if a refit won the race
-                    self._post = new_post
+                if self._engine is cond_args[0]:  # drop if a refit raced
+                    self._engine = new_engine
                     self._post_version += 1
 
     def predict(self, req: EvalRequest) -> Optional[float]:
         feats = request_features(req)
         with self._lock:
-            post = self._post
+            eng = self._engine
             dim_ok = feats is not None and self._dim == len(feats or [])
-        if post is None or not dim_ok:
+        if eng is None or not dim_ok:
             return self._fallback.predict(req)
-        from repro.uq import gp
-        mean, _ = gp.predict(post, [feats])
+        mean, _ = eng.predict([feats])
         return float(math.exp(float(mean[0, 0])))
 
     def predict_many(self, reqs: Sequence[EvalRequest]
@@ -315,22 +354,21 @@ class GPRuntimePredictor:
         unflattenable or wrong-dimension payloads) take the per-model
         quantile fallback in one batch as well."""
         with self._lock:
-            post = self._post
+            eng = self._engine
             dim = self._dim
         feats = [request_features(r) for r in reqs]
         out: List[Optional[float]] = [None] * len(reqs)
         gp_idx: List[int] = []
         fb_idx: List[int] = []
         for i, f in enumerate(feats):
-            if post is not None and f is not None and dim == len(f):
+            if eng is not None and f is not None and dim == len(f):
                 gp_idx.append(i)
             else:
                 fb_idx.append(i)
         if gp_idx:
-            from repro.uq import gp
             import numpy as np
             x = np.asarray([feats[i] for i in gp_idx], dtype=np.float32)
-            mean, _ = gp.predict_batch(post, x)
+            mean, _ = eng.predict_batch(x)
             secs = np.exp(np.asarray(mean)[:, 0].astype(np.float64))
             for j, i in enumerate(gp_idx):
                 out[i] = float(secs[j])
@@ -340,11 +378,50 @@ class GPRuntimePredictor:
                 out[i] = fb[j]
         return out
 
+    def predict_many_with_sd(self, reqs: Sequence[EvalRequest]
+                             ) -> List[tuple]:
+        """Batched (mean seconds, sd seconds) pairs for the
+        uncertainty-aware packing path — same eligibility split as
+        `predict_many`, same ONE `predict_batch` pass, but the posterior
+        variance rides along.  Runtimes are modelled log-normally
+        (mu, sigma² in log-space), so the predictive sd in seconds is
+        mean_s·sqrt(expm1(sigma²)); sigma² is clamped before `expm1` —
+        an untrained posterior's prior variance must saturate the risk
+        term, not overflow it.  (None, None) where no estimate exists."""
+        with self._lock:
+            eng = self._engine
+            dim = self._dim
+        feats = [request_features(r) for r in reqs]
+        out: List[tuple] = [(None, None)] * len(reqs)
+        gp_idx: List[int] = []
+        fb_idx: List[int] = []
+        for i, f in enumerate(feats):
+            if eng is not None and f is not None and dim == len(f):
+                gp_idx.append(i)
+            else:
+                fb_idx.append(i)
+        if gp_idx:
+            import numpy as np
+            x = np.asarray([feats[i] for i in gp_idx], dtype=np.float32)
+            mean, var = eng.predict_batch(x)
+            mu = np.asarray(mean)[:, 0].astype(np.float64)
+            s2 = np.minimum(np.asarray(var)[:, 0].astype(np.float64), 20.0)
+            secs = np.exp(mu)
+            sds = secs * np.sqrt(np.expm1(np.maximum(s2, 0.0)))
+            for j, i in enumerate(gp_idx):
+                out[i] = (float(secs[j]), float(sds[j]))
+        if fb_idx:
+            fb = self._fallback.predict_many_with_sd(
+                [reqs[i] for i in fb_idx])
+            for j, i in enumerate(fb_idx):
+                out[i] = fb[j]
+        return out
+
     def version(self) -> object:
         """Changes only when predictions may have changed: per posterior
         install once fitted, per observation while on the fallback."""
         with self._lock:
-            if self._post is None:
+            if self._engine is None:
                 return ("fallback", self._fallback.n_observed())
             return ("post", self._post_version)
 
@@ -354,3 +431,17 @@ class GPRuntimePredictor:
 
     def n_observed(self, model_name: Optional[str] = None) -> int:
         return self._fallback.n_observed(model_name)
+
+
+# Backend variants by name (the registry resolves names via a no-arg
+# call, so these are factories, not subclasses): `predictor="gp"` keeps
+# the exact reference path; the variants opt a deployment into O(n²)
+# conditioning or the cap-bounded ensemble without touching call sites.
+@register_predictor("gp-incremental")
+def _gp_incremental() -> GPRuntimePredictor:
+    return GPRuntimePredictor(backend="incremental")
+
+
+@register_predictor("gp-partitioned")
+def _gp_partitioned() -> GPRuntimePredictor:
+    return GPRuntimePredictor(backend="partitioned")

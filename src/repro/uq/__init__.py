@@ -1,3 +1,6 @@
 """UQ substrate: the paper's applications (GS2 proxy, GP surrogate,
 eigenproblem benchmarks, quasilinear QoI integral) plus samplers."""
+from repro.uq.engine import (BACKENDS, ExactEngine, IncrementalEngine,
+                             PartitionedEngine, SurrogateEngine, as_engine,
+                             fit_engine, wrap_posterior)
 from repro.uq.sampling import GS2_PARAM_RANGES, halton, latin_hypercube

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.executor import Executor
 from repro.core.task import EvalRequest
+from repro.uq import engine as engine_lib
 from repro.uq import gp as gp_lib
 
 
@@ -33,18 +34,27 @@ class AdaptiveResult:
 def evaluate_stream(executor: Executor, model_name: str,
                     post: gp_lib.GPPosterior, inputs: np.ndarray, *,
                     sd_threshold: float = 0.05, timeout: float = 600.0,
-                    batch_condition: bool = True) -> AdaptiveResult:
+                    batch_condition: bool = True,
+                    backend: str = "exact") -> AdaptiveResult:
     """Process `inputs` in order, delegating to the surrogate where its
-    uncertainty allows and to the scheduled simulator where it does not."""
+    uncertainty allows and to the scheduled simulator where it does not.
+
+    `backend` picks the conditioning engine: the per-simulation
+    `condition()` was an O(n³) refit each time on "exact" (the default,
+    reference behaviour); "incremental" pays O(n²) per accepted
+    simulation, which is what makes long delegation streams viable.  The
+    result's `posterior` is the underlying `GPPosterior` on
+    exact/incremental and the engine itself on "partitioned"."""
+    engine = engine_lib.as_engine(post, backend)
     inputs = np.asarray(inputs, np.float32)
     n = len(inputs)
-    m = post.y.shape[1]
+    m = engine.n_outputs()
     outputs = np.zeros((n, m), np.float32)
     used_sim = np.zeros(n, bool)
     n_sim = 0
 
     for i, x in enumerate(inputs):
-        mean, var = gp_lib.predict(post, x[None])
+        mean, var = engine.predict(x[None])
         # variance is per output column [1, M]; gate on the LEAST trusted
         # output — one confidently-wrong column must not unlock the
         # surrogate for the whole vector
@@ -66,6 +76,7 @@ def evaluate_stream(executor: Executor, model_name: str,
         used_sim[i] = True
         n_sim += 1
         if batch_condition:
-            post = gp_lib.condition(post, x[None], y[None])
+            engine = engine.condition(x[None], y[None])
     return AdaptiveResult(outputs=outputs, used_simulator=used_sim,
-                          posterior=post, n_sim_calls=n_sim)
+                          posterior=getattr(engine, "post", engine),
+                          n_sim_calls=n_sim)

@@ -129,6 +129,14 @@ def _chol_factor(params: GPParams, x, kind: str) -> jax.Array:
     return jnp.linalg.cholesky(k + (s2 + 1e-5 * (var + 1.0)) * jnp.eye(n))
 
 
+# Public aliases for the surrogate engines (`repro.uq.engine`): the
+# incremental and partitioned backends assemble cross-covariances and
+# cap-bounded factors out of the SAME primitives the exact path uses, so
+# their results can be pinned to `recondition` at tight tolerance.
+kernel_matrix = _kernel
+chol_factor = _chol_factor
+
+
 def nlml(tree, x, y, kind: str = "rbf") -> jax.Array:
     """Negative log marginal likelihood, summed over output columns."""
     params = GPParams.from_tree(tree)
@@ -221,12 +229,30 @@ def predict(post: GPPosterior, x_star: jax.Array
 def _ensure_linv(post: GPPosterior) -> jax.Array:
     """Cache L^-1 on the posterior: the batched predict path trades one
     triangular inversion at first use for a predict that is a single
-    fused launch (no per-call triangular solve)."""
+    fused launch (no per-call triangular solve).
+
+    Staleness contract: `linv` is valid iff it matches `chol`.  Every
+    update path constructs a NEW GPPosterior (`recondition`, `fit`, the
+    engine block-update), so a cached inverse can never outlive its
+    factor on an aliased posterior — `invalidate_linv` exists for code
+    that mutates a posterior's factor in place (none in-tree; the
+    regression test in test_surrogate_engine.py holds the line)."""
     if post.linv is None:
         n = post.x.shape[0]
         post.linv = jax.scipy.linalg.solve_triangular(
             post.chol, jnp.eye(n, dtype=jnp.float32), lower=True)
     return post.linv
+
+
+# public alias: the engines maintain / rebuild this cache explicitly
+ensure_linv = _ensure_linv
+
+
+def invalidate_linv(post: GPPosterior) -> None:
+    """Drop the cached L^-1 so the next `predict_batch` rebuilds it.
+    Required after any in-place change to `post.chol` — serving a stale
+    inverse silently corrupts every batched variance."""
+    post.linv = None
 
 
 @functools.partial(jax.jit, static_argnames=("kind",))
@@ -304,13 +330,23 @@ def recondition(post: GPPosterior, x: jax.Array, y: jax.Array
                        y_std=std, chol=chol, alpha=alpha, kind=post.kind)
 
 
-def condition(post: GPPosterior, x_new: jax.Array, y_new: jax.Array
-              ) -> GPPosterior:
-    """Add observations and re-condition (adaptive/Bayesian-quadrature use);
-    hyperparameters are kept — only the Cholesky is rebuilt."""
+def coerce_new_data(x_new: jax.Array, y_new: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Normalise a conditioning batch to (x [K, D], y [K, M]): a 1-D y is
+    a column when x carries several rows, and a single multi-output row
+    otherwise.  Shared by `condition` and every engine backend so all
+    conditioning paths accept identical shapes."""
     x_new = jnp.atleast_2d(jnp.asarray(x_new, jnp.float32))
     y_new2 = jnp.asarray(y_new, jnp.float32)
     if y_new2.ndim == 1:
         y_new2 = y_new2[:, None] if x_new.shape[0] > 1 else y_new2[None, :]
+    return x_new, y_new2
+
+
+def condition(post: GPPosterior, x_new: jax.Array, y_new: jax.Array
+              ) -> GPPosterior:
+    """Add observations and re-condition (adaptive/Bayesian-quadrature use);
+    hyperparameters are kept — only the Cholesky is rebuilt."""
+    x_new, y_new2 = coerce_new_data(x_new, y_new)
     return recondition(post, jnp.concatenate([post.x, x_new]),
                        jnp.concatenate([post.y, y_new2]))

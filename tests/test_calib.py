@@ -388,3 +388,102 @@ def test_streamed_trace_survives_ring_buffer_drop(tmp_path):
     tracer.close_stream()
     assert tracer.n_dropped > 0
     assert len(read_jsonl(path)) == tracer.buf.n_seen
+
+
+# ---------------------------------------------------------------------------
+# sacct field-mapping adapter: real SLURM accounting -> trace schema
+# ---------------------------------------------------------------------------
+SACCT_LINES = [
+    "JobID|JobName|State|Submit|Start|End|Elapsed|Timelimit|NNodes",
+    "100|gs2|COMPLETED|2024-03-05T10:00:00|2024-03-05T10:05:00"
+    "|2024-03-05T10:25:00|00:20:00|01:00:00|4",
+    "100.batch|batch|COMPLETED|2024-03-05T10:05:00|2024-03-05T10:05:00"
+    "|2024-03-05T10:25:00|00:20:00||4",
+    "100.extern|extern|COMPLETED|2024-03-05T10:05:00|2024-03-05T10:05:00"
+    "|2024-03-05T10:25:00|00:20:00||4",
+    "101|gs2|TIMEOUT|2024-03-05T10:00:30|2024-03-05T10:10:00"
+    "|2024-03-05T11:10:00|01:00:00|01:00:00|4",
+    "102|gpsurrogate|COMPLETED|2024-03-05T10:01:00|2024-03-05T10:02:00"
+    "|2024-03-05T10:02:05|00:00:05|00:10:00|1",
+    "103|gs2|CANCELLED by 1000|2024-03-05T10:02:00|Unknown|Unknown"
+    "|00:00:00|01:00:00|4",
+    "104|gs2|FAILED|2024-03-05T10:02:00|2024-03-05T10:04:00"
+    "|2024-03-05T10:05:00|00:01:00|01:00:00|4",
+    "105|gs2|RUNNING|2024-03-05T10:03:00|2024-03-05T10:06:00|Unknown"
+    "|00:30:00|01:00:00|4",
+]
+
+
+def test_parse_slurm_duration_forms():
+    from repro.obs import parse_slurm_duration
+    assert parse_slurm_duration("1-02:03:04.5") == pytest.approx(93784.5)
+    assert parse_slurm_duration("00:20:00") == 1200.0
+    assert parse_slurm_duration("12:34") == 754.0
+    assert parse_slurm_duration("UNLIMITED") is None
+    assert parse_slurm_duration("Partition_Limit") is None
+    assert parse_slurm_duration("") is None
+    assert parse_slurm_duration("garbage") is None
+
+
+def test_read_sacct_phase_samples():
+    from repro.obs import extract_phase_samples, read_sacct
+    evs = read_sacct(SACCT_LINES)
+    samples = extract_phase_samples(evs)
+    # queue waits keyed by the (walltime_s, n_workers) request signature
+    assert samples[("queue_wait", (3600.0, 4))] == [300.0, 570.0, 120.0]
+    assert samples[("queue_wait", (600.0, 1))] == [60.0]
+    # runtimes keyed by JobName; ok+timeout counted, FAILED excluded
+    assert samples[("runtime", "gs2")] == [1200.0, 3600.0]
+    assert samples[("runtime", "gpsurrogate")] == [5.0]
+
+
+def test_read_sacct_skips_steps_and_incomplete():
+    from repro.obs import read_sacct
+    evs = read_sacct(SACCT_LINES)
+    tasks = [e[6]["task"] for e in evs if e[2] == "task.run"]
+    # steps (100.batch/.extern), pending-cancelled (103) and RUNNING
+    # (105) never become samples
+    assert sorted(tasks) == ["100", "101", "102", "104"]
+    assert all("." not in t for t in tasks)
+    # the FAILED job is kept in the trace but flagged, like any failure
+    by_task = {e[6]["task"]: e[6] for e in evs if e[2] == "task.run"}
+    assert by_task["104"]["status"] == "failed"
+    assert by_task["101"]["status"] == "timeout"
+
+
+def test_sacct_to_jsonl_roundtrip_and_calibrate(tmp_path):
+    from repro.obs import read_sacct, sacct_to_jsonl
+    path = str(tmp_path / "sacct.jsonl")
+    n = sacct_to_jsonl(SACCT_LINES, path)
+    evs = read_jsonl(path)                  # every row schema-valid
+    assert len(evs) == n
+    assert evs == read_sacct(SACCT_LINES)
+    # and the converted log drops straight into calibrate()
+    base = backends.get("hq")
+    cal = calibrate(path, base, min_samples=1)
+    assert cal.queue_wait_median(3600.0, 4) == pytest.approx(
+        math.exp(np.mean(np.log([300.0, 570.0, 120.0]))), rel=1e-6)
+
+
+def test_read_sacct_field_map_and_no_header():
+    from repro.obs import read_sacct
+    # site export keyed runtimes by Account instead of JobName
+    remapped = ["JobID|Account|State|Submit|Start|End|Elapsed|Timelimit"
+                "|NNodes",
+                "300|proj-a|COMPLETED|1000|1060|1120|00:01:00|00:10:00|2"]
+    evs = read_sacct(remapped, field_map={"JobName": "Account"})
+    run = [e for e in evs if e[2] == "task.run"][0]
+    assert run[6]["model"] == "proj-a"
+    # headerless input assumes the default column order; epoch stamps ok
+    bare = ["200|m|COMPLETED|1000|1060|1120|00:01:00|00:10:00|2"]
+    (b, e, x) = read_sacct(bare)
+    assert b[6]["queue_wait"] == 60.0 and b[6]["n_workers"] == 2
+    assert x[5] == 60.0
+
+
+def test_read_sacct_strict_flags_unknown_state():
+    from repro.obs import read_sacct
+    bad = ["JobID|State", "1|WEIRD"]
+    with pytest.raises(ValueError, match="WEIRD"):
+        read_sacct(bad)
+    assert read_sacct(bad, strict=False) == []

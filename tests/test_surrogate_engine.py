@@ -1,0 +1,511 @@
+"""Differential suite for the pluggable surrogate engines
+(`repro.uq.engine`): the incremental backend is pinned to the exact
+reference at tight tolerance over long seeded conditioning streams, the
+partitioned backend's approximation error is bounded, the
+`gp.predict_batch` bucket discipline survives every backend, the cached
+triangular-inverse (`linv`) staleness contract is regression-tested, and
+every consumer (offload router, runtime predictor, adaptive delegation,
+Bayesian quadrature, uncertainty-aware packing) runs on each backend."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Executor, LambdaModel
+from repro.core.task import EvalRequest
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.sched.offload import SurrogateOffload
+from repro.sched.policy import PackingPolicy
+from repro.sched.predictor import GPRuntimePredictor, QuantileEstimator
+from repro.sched.registry import make_predictor
+from repro.uq import adaptive
+from repro.uq import engine as engine_lib
+from repro.uq import gp as gp_lib
+from repro.uq import qoi
+
+
+def _target(x: np.ndarray) -> np.ndarray:
+    return np.stack([np.sin(2.0 * x[:, 0]) + 0.5 * x[:, 1],
+                     x[:, 0] - x[:, 1] ** 2], 1)
+
+
+def _fitted_post(n: int = 30, seed: int = 0, steps: int = 120):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-2, 2, (n, 2)).astype(np.float32)
+    return gp_lib.fit(x, _target(x).astype(np.float32), steps=steps), rng
+
+
+def _stream(rng, n_batches: int, sizes=(1, 2, 3, 5)):
+    """Seeded conditioning stream of varying batch widths."""
+    for b in range(n_batches):
+        k = sizes[b % len(sizes)]
+        x = rng.uniform(-2, 2, (k, 2)).astype(np.float32)
+        yield x, _target(x).astype(np.float32)
+
+
+PROBE = np.stack(np.meshgrid(np.linspace(-2, 2, 7),
+                             np.linspace(-2, 2, 7),
+                             indexing="ij"), -1).reshape(-1, 2)
+PROBE = PROBE.astype(np.float32)
+
+
+def _assert_close_scaled(got, want, tol=1e-3):
+    """Per-output-column agreement within `tol` of that column's range
+    (plus a small absolute floor).  Both engines run the same math in
+    f32 through different backends (LAPACK vs XLA), so the honest pin
+    is uncorrelated-rounding-sized relative to the signal, not machine
+    epsilon; 1e-3 of range would still catch any algorithmic drift."""
+    got, want = np.asarray(got), np.asarray(want)
+    scale = want.max(axis=0) - want.min(axis=0)
+    err = np.abs(got - want).max(axis=0)
+    assert (err <= 5e-4 + tol * np.maximum(scale, 1.0)).all(), \
+        f"err={err} vs scale={scale}"
+
+
+# ---------------------------------------------------------------------------
+# incremental == exact: the differential contract
+# ---------------------------------------------------------------------------
+def test_incremental_matches_exact_over_long_stream():
+    """Rank-k block updates must be numerically indistinguishable from
+    full refactorisation — checked after EVERY batch of a 16-batch
+    stream, not just at the end."""
+    post, rng = _fitted_post()
+    exact = engine_lib.wrap_posterior(post, "exact")
+    inc = engine_lib.wrap_posterior(post, "incremental")
+    for x, y in _stream(rng, 16):
+        exact = exact.condition(x, y)
+        inc = inc.condition(x, y)
+        me, ve = exact.predict_batch(PROBE)
+        mi, vi = inc.predict_batch(PROBE)
+        _assert_close_scaled(mi, me)
+        _assert_close_scaled(vi, ve)
+        assert inc.n_train() == exact.n_train()
+    # the stream actually exercised the block-update path
+    assert inc.stats["block_updates"] >= 14
+
+
+def test_incremental_periodic_refactor_still_matches():
+    post, rng = _fitted_post(seed=1)
+    exact = engine_lib.wrap_posterior(post, "exact")
+    inc = engine_lib.wrap_posterior(post, "incremental",
+                                    refactor_every=3)
+    for x, y in _stream(rng, 10):
+        exact = exact.condition(x, y)
+        inc = inc.condition(x, y)
+    assert inc.stats["refactors"] >= 3         # hygiene path taken
+    me, _ = exact.predict_batch(PROBE)
+    mi, _ = inc.predict_batch(PROBE)
+    _assert_close_scaled(mi, me)
+
+
+def test_incremental_recency_window_matches_exact():
+    """A sliding `max_points` window must keep both backends on the SAME
+    most-recent subset (the window slide forces a refactor)."""
+    post, rng = _fitted_post(seed=2)
+    exact = engine_lib.wrap_posterior(post, "exact", max_points=40)
+    inc = engine_lib.wrap_posterior(post, "incremental", max_points=40)
+    for x, y in _stream(rng, 12):
+        exact = exact.condition(x, y)
+        inc = inc.condition(x, y)
+    assert exact.n_train() <= 40 and inc.n_train() == exact.n_train()
+    np.testing.assert_allclose(np.asarray(inc.x), np.asarray(exact.x))
+    me, _ = exact.predict_batch(PROBE)
+    mi, _ = inc.predict_batch(PROBE)
+    _assert_close_scaled(mi, me)
+
+
+def test_incremental_maintains_linv_invariant():
+    """After a block update the cached inverse factor must still BE the
+    inverse of the extended Cholesky — the whole point of extending it
+    instead of re-inverting (O(n³)) or serving a stale one (wrong)."""
+    post, rng = _fitted_post(seed=3)
+    inc = engine_lib.wrap_posterior(post, "incremental")
+    for x, y in _stream(rng, 4):
+        inc = inc.condition(x, y)
+    assert inc.stats["block_updates"] >= 4
+    n = inc.n_train()
+    prod = np.asarray(inc.post.linv) @ np.asarray(inc.post.chol)
+    np.testing.assert_allclose(prod, np.eye(n), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# partitioned: bounded error, bounded experts
+# ---------------------------------------------------------------------------
+def test_partitioned_error_bounded_vs_exact():
+    rng = np.random.default_rng(4)
+    x = rng.uniform(-2, 2, (200, 2)).astype(np.float32)
+    y = _target(x).astype(np.float32)
+    post = gp_lib.fit(x, y, steps=150)
+    exact = engine_lib.wrap_posterior(post, "exact")
+    part = engine_lib.wrap_posterior(post, "partitioned", expert_cap=64)
+    me, _ = exact.predict_batch(PROBE)
+    mp, _ = part.predict_batch(PROBE)
+    me, mp = np.asarray(me), np.asarray(mp)
+    rng_y = me.max(axis=0) - me.min(axis=0)
+    err = np.abs(mp - me)
+    # local experts approximate: bound mean and worst-case error
+    # relative to the exact posterior's output range
+    assert (err.mean(axis=0) <= 0.10 * rng_y).all()
+    assert (err.max(axis=0) <= 0.35 * rng_y).all()
+
+
+def test_partitioned_single_expert_is_exact():
+    """With everything in one expert the ensemble IS an exact GP under
+    the frozen fit-time standardisation — zero approximation."""
+    post, _ = _fitted_post(seed=5)
+    exact = engine_lib.wrap_posterior(post, "exact")
+    part = engine_lib.wrap_posterior(post, "partitioned",
+                                     expert_cap=1000)
+    assert len(part.experts) == 1
+    me, ve = exact.predict_batch(PROBE)
+    mp, vp = part.predict_batch(PROBE)
+    np.testing.assert_allclose(np.asarray(mp), np.asarray(me),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(vp), np.asarray(ve),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_partitioned_condition_keeps_cap_and_splits():
+    post, rng = _fitted_post(n=20, seed=6)
+    part = engine_lib.wrap_posterior(post, "partitioned", expert_cap=16)
+    total = part.n_train()
+    for x, y in _stream(rng, 10, sizes=(7,)):
+        part = part.condition(x, y)
+        total += 7
+    assert part.n_train() == total             # no point ever dropped
+    assert all(int(e.x.shape[0]) <= 16 for e in part.experts)
+    assert part.stats["splits"] >= 1
+    mean, var = part.predict_batch(PROBE)
+    assert np.isfinite(np.asarray(mean)).all()
+    assert (np.asarray(var) > 0).all()
+
+
+def test_partitioned_condition_is_persistent():
+    """Conditioning returns a NEW engine; the old generation must keep
+    answering from its own (cached) operands."""
+    post, rng = _fitted_post(seed=7)
+    part = engine_lib.wrap_posterior(post, "partitioned", expert_cap=16)
+    before, _ = part.predict_batch(PROBE)
+    x, y = next(_stream(rng, 1))
+    part2 = part.condition(x, y)
+    assert part2 is not part
+    again, _ = part.predict_batch(PROBE)
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(again))
+    assert part2.n_train() == part.n_train() + len(x)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-expert predict: padding exactness + dispatch parity
+# ---------------------------------------------------------------------------
+def _expert_operands(seed=8, n1=12, n2=7):
+    """Two different-size experts stacked with zero padding."""
+    post, rng = _fitted_post(seed=seed)
+    part = engine_lib.wrap_posterior(post, "partitioned", expert_cap=16)
+    xs = rng.uniform(-2, 2, (2, 5, 2)).astype(np.float32)
+    xt, al, li = part._stacked()
+    ls = jnp.exp(jnp.clip(post.params.log_lengthscale, -5.0, 5.0))
+    var = jnp.exp(jnp.clip(post.params.log_variance, -8.0, 8.0))
+    return part, xs, xt, al, li, ls, var
+
+
+def test_gp_predict_experts_matches_per_expert_reference():
+    part, xs, xt, al, li, ls, var = _expert_operands()
+    mean, qf = kops.gp_predict_experts(xt, jnp.asarray(xs), ls, var,
+                                       al, li, part.kind)
+    assert mean.shape == (len(part.experts), 5, part.n_outputs())
+    # per-expert single-GP reference on the UNPADDED operands: padded
+    # training rows (alpha = 0, linv rows/cols = 0) must be exact no-ops
+    for e, ex in enumerate(part.experts):
+        n = int(ex.x.shape[0])
+        m1, q1 = kref.gp_predict(ex.x, jnp.asarray(xs[e]), ls, var,
+                                 ex.alpha, ex.linv, part.kind)
+        np.testing.assert_allclose(np.asarray(mean[e]), np.asarray(m1),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(qf[e]),
+                                   np.asarray(q1).reshape(-1),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_gp_predict_experts_ops_dispatch():
+    part, xs, xt, al, li, ls, var = _expert_operands(seed=9)
+    m_def, q_def = kops.gp_predict_experts(xt, jnp.asarray(xs), ls, var,
+                                           al, li, part.kind)
+    m_ref, q_ref = kops.gp_predict_experts(xt, jnp.asarray(xs), ls, var,
+                                           al, li, part.kind, impl="ref")
+    np.testing.assert_allclose(np.asarray(m_def), np.asarray(m_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(q_def), np.asarray(q_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bucket discipline: bounded compile shapes on every backend
+# ---------------------------------------------------------------------------
+def test_bucket_discipline_unchanged_on_exact():
+    post, _ = _fitted_post(seed=10)
+    eng = engine_lib.wrap_posterior(post, "exact")
+    gp_lib.predict_batch_shapes.clear()
+    for s in (3, 17, 63, 65, 200):
+        eng.predict_batch(PROBE[:s])
+    widths = {k[-1] for k in gp_lib.predict_batch_shapes}
+    assert widths <= set(gp_lib.PREDICT_BUCKETS)
+
+
+def test_bucket_discipline_partitioned():
+    """Partitioned predicts log ("part", E, n_stack, bucket) keys — the
+    per-(ensemble shape) compile bill stays len(PREDICT_BUCKETS)."""
+    post, _ = _fitted_post(seed=11)
+    part = engine_lib.wrap_posterior(post, "partitioned", expert_cap=16)
+    gp_lib.predict_batch_shapes.clear()
+    for s in (1, 5, 30, 49):
+        part.predict_batch(PROBE[:s])
+    keys = [k for k in gp_lib.predict_batch_shapes if k[0] == "part"]
+    assert keys and all(k[1] == len(part.experts) for k in keys)
+    assert {k[-1] for k in keys} <= set(gp_lib.PREDICT_BUCKETS)
+
+
+# ---------------------------------------------------------------------------
+# linv staleness contract (cached-inverse audit)
+# ---------------------------------------------------------------------------
+def test_linv_contract_fresh_after_condition():
+    """Every update path must yield a posterior whose cached linv (if
+    any) inverts ITS chol — a stale carry-over from the pre-update
+    posterior would silently corrupt predict_batch variances."""
+    post, rng = _fitted_post(seed=12)
+    gp_lib.ensure_linv(post)
+    for backend in ("exact", "incremental"):
+        eng = engine_lib.wrap_posterior(post, backend)
+        x, y = next(_stream(rng, 1))
+        new = eng.condition(x, y)
+        p = new.post
+        assert p is not post
+        if p.linv is not None:
+            n = int(p.x.shape[0])
+            np.testing.assert_allclose(
+                np.asarray(p.linv) @ np.asarray(p.chol), np.eye(n),
+                atol=2e-3)
+
+
+def test_invalidate_linv_forces_recompute():
+    post, _ = _fitted_post(seed=13)
+    m0, v0 = gp_lib.predict_batch(post, PROBE[:5])   # populates linv
+    assert post.linv is not None
+    gp_lib.invalidate_linv(post)
+    assert post.linv is None
+    m1, v1 = gp_lib.predict_batch(post, PROBE[:5])   # recomputes
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m0),
+                               atol=1e-6)
+    assert post.linv is not None
+
+
+def test_stale_linv_would_be_wrong_guard():
+    """The audit that motivates the contract: grafting posterior A's
+    linv onto conditioned posterior B produces measurably wrong
+    variances — proving no in-tree path may ever reuse a factor."""
+    post, rng = _fitted_post(seed=14)
+    gp_lib.ensure_linv(post)
+    x, y = next(_stream(rng, 1))
+    eng = engine_lib.wrap_posterior(post, "exact").condition(x, y)
+    good = np.asarray(eng.predict_batch(PROBE[:9])[1])
+    forged = gp_lib.GPPosterior(
+        params=eng.post.params, x=eng.post.x, y=eng.post.y,
+        y_mean=eng.post.y_mean, y_std=eng.post.y_std,
+        chol=eng.post.chol, alpha=eng.post.alpha, kind=eng.post.kind,
+        linv=jnp.pad(post.linv, ((0, 1), (0, 1))))   # stale, padded
+    bad = np.asarray(gp_lib.predict_batch(forged, PROBE[:9])[1])
+    assert not np.allclose(bad, good, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# consumers run on every backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", engine_lib.BACKENDS)
+def test_offload_router_on_backend(backend):
+    rng = np.random.default_rng(15)
+    x = rng.uniform(-2, 2, (40, 2)).astype(np.float32)
+    post = gp_lib.fit(x, _target(x).astype(np.float32), steps=120)
+    sur = SurrogateOffload(post, backend=backend, sd_threshold=0.3,
+                           condition_every=4)
+    sds = sur.trust_sd(PROBE[:10].tolist())
+    assert sds.shape == (10,) and np.isfinite(sds).all()
+    n0 = sur._engine.n_train()
+    for i in range(8):                          # batches of condition_every
+        theta = rng.uniform(-2, 2, 2).astype(np.float32)
+        sur.observe(theta.tolist(),
+                    _target(theta[None])[0].tolist())
+    assert sur._engine.n_train() > n0           # stream absorbed
+    req = EvalRequest("m", [PROBE[0].tolist()], time_request=30.0)
+    assert sur.decide(req, cost=30.0) in (True, False)
+
+
+@pytest.mark.parametrize("name,backend", [("gp", "exact"),
+                                          ("gp-incremental", "incremental"),
+                                          ("gp-partitioned", "partitioned")])
+def test_predictor_registry_backends(name, backend):
+    pred = make_predictor(name)
+    assert isinstance(pred, GPRuntimePredictor)
+    assert pred.backend == backend
+    rng = np.random.default_rng(16)
+    for _ in range(24):
+        z = float(rng.uniform(0.1, 2.0))
+        req = EvalRequest("m", [[z, z / 2]])
+        pred.observe(req, 0.5 + z)              # runtime grows with z
+    assert pred._post is not None
+    req = EvalRequest("m", [[1.0, 0.5]])
+    p = pred.predict(req)
+    assert p is not None and 0.0 < p < 60.0
+    many = pred.predict_many([req] * 3)
+    assert all(abs(m - p) < 1e-6 for m in many)
+    (mean, sd), = pred.predict_many_with_sd([req])
+    assert mean == pytest.approx(p) and sd >= 0.0
+
+
+def _quad_factory():
+    return LambdaModel("quad",
+                       lambda x: (float(x[0] ** 2 + x[1]),
+                                  float(x[0] - x[1] ** 2)), 2, 2)
+
+
+@pytest.mark.parametrize("backend", engine_lib.BACKENDS)
+def test_adaptive_stream_on_backend(backend):
+    rng = np.random.default_rng(17)
+    x = rng.uniform(-2, 2, (40, 2)).astype(np.float32)
+    y = np.stack([x[:, 0] ** 2 + x[:, 1], x[:, 0] - x[:, 1] ** 2], 1)
+    post = gp_lib.fit(x, y.astype(np.float32), steps=150)
+    probe = rng.uniform(-1.5, 1.5, (8, 2)).astype(np.float32)
+    with Executor({"quad": _quad_factory}, n_workers=2) as ex:
+        res = adaptive.evaluate_stream(ex, "quad", post, probe,
+                                       sd_threshold=0.25,
+                                       backend=backend)
+    want = np.stack([probe[:, 0] ** 2 + probe[:, 1],
+                     probe[:, 0] - probe[:, 1] ** 2], 1)
+    np.testing.assert_allclose(res.outputs, want, atol=0.5)
+    if backend in ("exact", "incremental"):
+        assert isinstance(res.posterior, gp_lib.GPPosterior)
+
+
+@pytest.mark.parametrize("backend", ["exact", "incremental"])
+def test_bayesian_quadrature_backend_agrees(backend):
+    def model(x):
+        return float(np.sin(x[6])), 0.2
+
+    base = np.zeros(7)
+    res = qoi.bayesian_quadrature(model, base, n_init=5, n_adaptive=5,
+                                  candidate_grid=8, backend=backend)
+    assert np.isfinite(res.value) and res.n_evals == 10
+    if backend == "incremental":
+        ref = qoi.bayesian_quadrature(model, base, n_init=5,
+                                      n_adaptive=5, candidate_grid=8,
+                                      backend="exact")
+        # identical seeds + matching engines -> the same node choices
+        assert res.value == pytest.approx(ref.value, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# uncertainty-aware packing (risk_lambda)
+# ---------------------------------------------------------------------------
+class _FakeSDPredictor:
+    """predict_many_with_sd stub: runtime = first param, sd = second."""
+
+    def predict(self, req):
+        return float(req.parameters[0][0])
+
+    def predict_many(self, reqs):
+        return [self.predict(r) for r in reqs]
+
+    def predict_many_with_sd(self, reqs):
+        return [(float(r.parameters[0][0]), float(r.parameters[0][1]))
+                for r in reqs]
+
+
+def test_pack_risk_lambda_zero_is_reference():
+    """λ=0 must leave the mean-only path untouched (never even calls
+    the sd hook)."""
+
+    class Exploding(_FakeSDPredictor):
+        def predict_many_with_sd(self, reqs):
+            raise AssertionError("sd hook must not run at lambda=0")
+
+    pol = PackingPolicy(predictor=Exploding())
+    req = EvalRequest("m", [[7.0, 3.0]])
+    assert pol.cost(req) == 7.0
+    assert pol.costs([req]) == [7.0]
+
+
+def test_pack_risk_lambda_inflates_uncertain_costs():
+    pol = PackingPolicy(predictor=_FakeSDPredictor(), risk_lambda=2.0)
+    certain = EvalRequest("m", [[10.0, 0.0]])
+    uncertain = EvalRequest("m", [[10.0, 4.0]])
+    assert pol.cost(certain) == 10.0
+    assert pol.cost(uncertain) == pytest.approx(18.0)
+    assert pol.costs([certain, uncertain]) == [10.0, 18.0]
+
+
+def test_pack_risk_lambda_budget_fit_prefers_certain_task():
+    """Two tasks with equal mean runtime: under a tight remaining
+    budget, the risk-adjusted key must stop the uncertain one from
+    being packed as if it were certain."""
+    from repro.sched.policy import WorkerView
+    pol = PackingPolicy(predictor=_FakeSDPredictor(), risk_lambda=2.0)
+    certain = EvalRequest("m", [[10.0, 0.0]])
+    uncertain = EvalRequest("m", [[10.0, 4.0]])
+    pol.push(uncertain, 0)
+    pol.push(certain, 0)
+    # remaining budget fits 10s + margin but not the risk-adjusted 18s
+    got, _ = pol.pop(WorkerView(budget_left=12.0))
+    assert got is certain
+
+
+def test_pack_risk_lambda_falls_back_without_estimate():
+    class NonePredictor(_FakeSDPredictor):
+        def predict_many_with_sd(self, reqs):
+            return [(None, None)] * len(reqs)
+
+    pol = PackingPolicy(predictor=NonePredictor(), risk_lambda=1.0)
+    req = EvalRequest("m", [[1.0, 1.0]], time_request=42.0)
+    assert pol.cost(req) == 42.0
+
+
+def test_quantile_estimator_sd_proxy():
+    est = QuantileEstimator(min_observed=3)
+    for s in (1.0, 2.0, 3.0, 4.0, 5.0):
+        est.observe(EvalRequest("m", [[0.0]]), s)
+    (mean, sd), = est.predict_many_with_sd([EvalRequest("m", [[0.0]])])
+    assert mean == pytest.approx(3.0)
+    assert sd > 0.0
+    # unseen model: no estimate, not a crash
+    (m2, s2), = est.predict_many_with_sd([EvalRequest("zz", [[0.0]])])
+    assert m2 is None and s2 is None
+
+
+# ---------------------------------------------------------------------------
+# factories / interface
+# ---------------------------------------------------------------------------
+def test_factories_and_protocol():
+    post, _ = _fitted_post(n=16, seed=18, steps=40)
+    for b in engine_lib.BACKENDS:
+        eng = engine_lib.wrap_posterior(post, b)
+        assert isinstance(eng, engine_lib.SurrogateEngine)
+        assert eng.backend == b
+        assert eng.dim() == 2 and eng.n_outputs() == 2
+        again = engine_lib.as_engine(eng, "exact")
+        assert again is eng                     # engines pass through
+    assert engine_lib.as_engine(None) is None
+    with pytest.raises(ValueError, match="unknown surrogate backend"):
+        engine_lib.wrap_posterior(post, "bogus")
+
+
+def test_fit_engine_each_backend():
+    rng = np.random.default_rng(19)
+    x = rng.uniform(-2, 2, (40, 2)).astype(np.float32)
+    y = _target(x).astype(np.float32)
+    for b in engine_lib.BACKENDS:
+        eng = engine_lib.fit_engine(x, y, b, steps=40)
+        assert eng.backend == b and eng.n_train() == 40
+        mean, var = eng.predict_batch(PROBE[:6])
+        assert np.isfinite(np.asarray(mean)).all()
+        assert (np.asarray(var) > 0).all()
+        sds = eng.latent_sd(PROBE[:6])
+        assert sds.shape == (6,) and (sds >= 0).all()
