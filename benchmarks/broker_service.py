@@ -1,0 +1,222 @@
+"""Benchmark: the multi-tenant broker service's three headline numbers.
+
+The broker-service milestone turns the single-owner `Executor` into an
+always-on, fair-share, crash-safe service (`repro.service`).  This
+benchmark gates its three contracts:
+
+  * fair-share error — tenants weighted 1:2:4 on a seeded saturating
+    trace (loaded proportionally via `with_tenants`, measured at the
+    3/4-drain horizon through `simulate_cluster`): max relative error of
+    per-tenant CPU-second shares against the weight targets;
+  * restart-recovery makespan penalty — a live `ServiceBroker` killed
+    mid-workload and recovered from its journal must finish EVERY task
+    (zero lost — hard-asserted), and the wall-clock penalty vs an
+    uninterrupted run of the same workload is reported;
+  * ingestion throughput — sustained `submit` rate through admission
+    control (quota ledger + tenant-labelled counters) into the broker,
+    measured with workers cold so dispatch cost stays out of the number.
+
+Pass criteria (printed, and non-zero exit on failure):
+  * zero lost tasks across the kill/recover cycle, terminal record set
+    identical to the uninterrupted run's;
+  * fair-share max relative error <= 10% (the milestone acceptance bar);
+  * ingestion overhead stays under ``--submit-budget-us`` per task
+    (default 2000 us — admission must be queue-push cheap, not
+    dispatch-priced).
+
+Writes every number to ``BENCH_broker_service.json`` (``--json`` to
+move it) so future PRs can diff the trajectory.  ``--quick`` shrinks
+the workloads for the CI smoke lane.
+
+    PYTHONPATH=src python benchmarks/broker_service.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.cluster import bursty_trace, simulate_cluster, with_tenants
+from repro.core import EvalRequest, backends
+from repro.core.task import LambdaModel
+from repro.sched import FairSharePolicy
+from repro.service import ServiceBroker
+
+WEIGHTS = {"a": 1.0, "b": 2.0, "c": 4.0}
+
+
+def _req(i: int, tenant: str, task_id: str = "", sleep_s: float = 0.0
+         ) -> EvalRequest:
+    return EvalRequest("toy", [[float(i)]], time_request=1.0,
+                       time_limit=60.0, tenant=tenant, task_id=task_id)
+
+
+def _model_factory(sleep_s: float):
+    def mk():
+        def fn(p, c):
+            if sleep_s:
+                time.sleep(sleep_s)
+            return [[float(p[0][0])]]
+        return LambdaModel("toy", fn, 1, 1)
+    return mk
+
+
+# --------------------------------------------------------------------------
+# 1. fair-share error (sim-measured, deterministic)
+# --------------------------------------------------------------------------
+def bench_fair_share(quick: bool) -> dict:
+    burst = 56 if quick else 112
+    trace = with_tenants(
+        bursty_trace(n_bursts=1, burst_size=burst, burst_span_s=1.0,
+                     runtime_s=4.0, jitter=0.0, seed=3), WEIGHTS)
+    tenant_of = {f"trace-{i}": tt.tenant for i, tt in enumerate(trace)}
+    res = simulate_cluster(
+        backends.get("hq"), trace,
+        policy=lambda: FairSharePolicy(weights=WEIGHTS, quantum_s=8.0),
+        n_workers=2, seed=3)
+    done = sorted((r for r in res.records if r.status == "ok"),
+                  key=lambda r: r.end_t)
+    part = done[:(3 * len(done)) // 4]
+    cpu = {t: 0.0 for t in WEIGHTS}
+    for r in part:
+        cpu[tenant_of[r.task_id]] += r.cpu_time
+    total = sum(cpu.values())
+    wsum = sum(WEIGHTS.values())
+    shares = {t: cpu[t] / total for t in WEIGHTS}
+    err = {t: abs(shares[t] - w / wsum) / (w / wsum)
+           for t, w in WEIGHTS.items()}
+    out = {"n_tasks": len(trace), "horizon_tasks": len(part),
+           "shares": shares,
+           "targets": {t: w / wsum for t, w in WEIGHTS.items()},
+           "max_rel_error": max(err.values())}
+    print(f"fair share (1:2:4, {len(part)} tasks at 3/4 drain):")
+    for t in sorted(WEIGHTS):
+        print(f"  tenant {t}: share {shares[t]:.3f} "
+              f"(target {WEIGHTS[t] / wsum:.3f}, err {err[t]:.1%})")
+    print(f"  max relative error: {out['max_rel_error']:.1%}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# 2. restart-recovery makespan penalty (live, kill mid-workload)
+# --------------------------------------------------------------------------
+def bench_recovery(quick: bool, tmpdir: str) -> dict:
+    n = 16 if quick else 40
+    sleep_s = 0.02 if quick else 0.05
+    reqs = [_req(i, "a" if i % 3 else "b", task_id=f"bench-{i}")
+            for i in range(n)]
+
+    def run_uninterrupted() -> tuple:
+        t0 = time.monotonic()
+        with ServiceBroker({"toy": _model_factory(sleep_s)},
+                           n_workers=2) as svc:
+            ids = [svc.submit(EvalRequest(
+                "toy", r.parameters, time_request=1.0, time_limit=60.0,
+                tenant=r.tenant, task_id=r.task_id)) for r in reqs]
+            res = [svc.result(t, timeout=120.0) for t in ids]
+        return time.monotonic() - t0, {(r.task_id, r.status) for r in res}
+
+    base_s, base_terminal = run_uninterrupted()
+
+    t0 = time.monotonic()
+    svc = ServiceBroker({"toy": _model_factory(sleep_s)},
+                        weights=WEIGHTS,
+                        journal_dir=tmpdir, journal_every_s=0.02,
+                        n_workers=2)
+    ids = [svc.submit(r) for r in reqs]
+    while len([r for r in svc.records() if r.status == "ok"]) < n // 3:
+        time.sleep(0.005)
+    svc.checkpoint()
+    svc.kill()
+    done_before = len([r for r in svc.records() if r.status == "ok"])
+
+    svc2 = ServiceBroker.recover({"toy": _model_factory(sleep_s)},
+                                 journal_dir=tmpdir, n_workers=2)
+    res = [svc2.result(t, timeout=120.0) for t in ids]
+    svc2.shutdown()
+    recovered_s = time.monotonic() - t0
+    terminal = {(r.task_id, r.status) for r in res}
+
+    lost = len(reqs) - len(terminal)
+    assert lost == 0, f"{lost} tasks lost across the kill/recover cycle"
+    assert terminal == base_terminal, \
+        "recovered terminal record set differs from the uninterrupted run"
+    out = {"n_tasks": n, "done_before_kill": done_before,
+           "lost_tasks": lost,
+           "uninterrupted_s": base_s, "kill_recover_s": recovered_s,
+           "makespan_penalty": recovered_s / base_s - 1.0}
+    print(f"restart recovery ({n} tasks, killed after {done_before}):")
+    print(f"  uninterrupted: {base_s:.2f}s   kill+recover: "
+          f"{recovered_s:.2f}s   penalty: {out['makespan_penalty']:+.1%}")
+    print(f"  lost tasks: {lost} (zero required)")
+    return out
+
+
+# --------------------------------------------------------------------------
+# 3. ingestion throughput (admission control hot path)
+# --------------------------------------------------------------------------
+def bench_ingestion(quick: bool) -> dict:
+    n = 2_000 if quick else 20_000
+    # zero workers: measure admission (quota ledger + labelled counters +
+    # broker push), not model dispatch
+    svc = ServiceBroker({"toy": _model_factory(0.0)}, n_workers=0,
+                        weights=WEIGHTS,
+                        quotas={t: n * 2 for t in WEIGHTS})
+    tenants = sorted(WEIGHTS)
+    reqs = [_req(i, tenants[i % 3]) for i in range(n)]
+    t0 = time.monotonic()
+    for r in reqs:
+        svc.submit(r)
+    dt = time.monotonic() - t0
+    svc.kill()                     # n_workers=0: nothing in flight
+    out = {"n_tasks": n, "total_s": dt,
+           "per_submit_us": dt / n * 1e6,
+           "submits_per_s": n / dt}
+    print(f"ingestion: {n} submits in {dt:.3f}s  "
+          f"({out['per_submit_us']:.1f} us/task, "
+          f"{out['submits_per_s']:.0f}/s)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workloads (the CI smoke lane)")
+    ap.add_argument("--json", default="BENCH_broker_service.json")
+    ap.add_argument("--submit-budget-us", type=float, default=2000.0)
+    args = ap.parse_args()
+
+    import tempfile
+    results = {"quick": args.quick}
+    results["fair_share"] = bench_fair_share(args.quick)
+    with tempfile.TemporaryDirectory() as d:
+        results["recovery"] = bench_recovery(args.quick, d)
+    results["ingestion"] = bench_ingestion(args.quick)
+
+    failures = []
+    if results["recovery"]["lost_tasks"] != 0:
+        failures.append("tasks lost across kill/recover")
+    if results["fair_share"]["max_rel_error"] > 0.10:
+        failures.append(
+            f"fair-share error {results['fair_share']['max_rel_error']:.1%}"
+            " > 10%")
+    if results["ingestion"]["per_submit_us"] > args.submit_budget_us:
+        failures.append(
+            f"ingestion {results['ingestion']['per_submit_us']:.0f} us/task"
+            f" > budget {args.submit_budget_us:.0f} us")
+    results["pass"] = not failures
+
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {args.json}")
+    if failures:
+        print("FAIL: " + "; ".join(failures))
+        return 1
+    print("PASS: zero lost tasks, fair-share error <= 10%, "
+          "ingestion within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,2 +1,3 @@
 from repro.checkpoint.checkpoint import (CheckpointManager, load_pytree,
                                          save_pytree, latest_step)
+from repro.checkpoint.journal import Journal

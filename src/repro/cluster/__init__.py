@@ -19,7 +19,7 @@ from repro.cluster.broker import Broker
 from repro.cluster.sim import ClusterResult, simulate_cluster
 from repro.cluster.stepper import LifecycleStepper
 from repro.cluster.traces import (TraceTask, bimodal_trace, bursty_trace,
-                                  trace_span)
+                                  trace_span, with_tenants)
 
 # the parity harness imports repro.core.executor at module level (which
 # imports repro.cluster only lazily, inside functions) — re-export it

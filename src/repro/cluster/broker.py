@@ -387,6 +387,28 @@ class Broker(SchedulingPolicy):
             n -= self.queued_on(self._surrogate_id)
         return n
 
+    def tenant_backlogs(self) -> Dict[str, int]:
+        """Queued tasks per tenant, summed across every real
+        per-allocation queue plus the unrouted buffer.  Empty when no
+        per-allocation policy is tenant-aware (i.e. anything but
+        "fairshare") — per-tenant gauges then simply don't exist, so the
+        single-tenant observability surface is unchanged."""
+        out: Dict[str, int] = {}
+        aware = False
+        for i in sorted(self._queues):
+            if i == self._surrogate_id:
+                continue
+            fn = getattr(self._queues[i], "tenant_pending_all", None)
+            if callable(fn):
+                aware = True
+                for tenant, n in fn().items():
+                    out[tenant] = out.get(tenant, 0) + n
+        if aware:
+            for req, _ in self._unrouted:
+                tenant = getattr(req, "tenant", "") or "default"
+                out[tenant] = out.get(tenant, 0) + 1
+        return out
+
     def backlog_cost(self, default: float = 1.0) -> float:
         """Total queued seconds of work cluster-wide (predictor estimate,
         else time_request hint, else `default` per task) — the signal the

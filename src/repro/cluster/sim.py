@@ -87,7 +87,8 @@ def trace_requests(trace: List[TraceTask], max_attempts: int):
                           time_request=tt.time_request,
                           n_cpus=tt.n_cpus,
                           task_id=f"trace-{i}",
-                          max_attempts=max_attempts)
+                          max_attempts=max_attempts,
+                          tenant=getattr(tt, "tenant", "default"))
         req.submit_t = tt.t        # after init: 0.0 must survive as-is
         runtimes[req.task_id] = tt.runtime
         reqs.append(req)

@@ -115,6 +115,7 @@ class LifecycleStepper:
                  retired: Optional[List[Allocation]] = None,
                  tracer: Any = None, registry: Any = None,
                  calibration: Any = None,
+                 on_tick: Optional[Callable[[float], None]] = None,
                  events_cap: int = 10_000):
         self.broker = broker
         self.allocator = allocator
@@ -135,6 +136,11 @@ class LifecycleStepper:
         # queue wait becomes an observed fact, so residuals against the
         # spec's queue-wait model are fed from here
         self.calibration = calibration
+        # end-of-tick hook: the one cadence point shared by sim and live
+        # (`repro.service` hangs its journal snapshots here, so a
+        # virtual-clock test and a wall-clock service checkpoint on the
+        # same schedule).  Runs under the driver's dispatch lock.
+        self.on_tick = on_tick
         # spawn/retire audit trail, bounded (oldest entries drop first;
         # `events.n_dropped` says how many a long run shed)
         self.events: RingBuffer = RingBuffer(events_cap)
@@ -158,6 +164,8 @@ class LifecycleStepper:
         if self.registry is not None:
             self.registry.sample_cluster(
                 now, self.broker, sum(self.busy_count().values()))
+        if self.on_tick is not None:
+            self.on_tick(now)
         return now
 
     def release(self, now: float) -> None:

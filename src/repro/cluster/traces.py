@@ -35,6 +35,33 @@ class TraceTask:
     # parameters are what runtime predictors and the surrogate-offload
     # trust gate discriminate on.
     parameters: Optional[List[List[float]]] = None
+    # owning tenant; "default" keeps single-tenant traces unchanged
+    tenant: str = "default"
+
+
+def with_tenants(trace: List[TraceTask],
+                 weights: "dict[str, float]") -> List[TraceTask]:
+    """Assign tenants to a trace so each tenant's task *count* is
+    proportional to its weight (D'Hondt divisor rounding, interleaved).
+
+    Under exact weighted fair sharing of equal-cost tasks, tenants loaded
+    proportionally to their weights all drain together — the saturating
+    shape the fairness benchmarks measure shares on.  Deterministic: same
+    trace + same weights -> same assignment (ties break on tenant name).
+    """
+    if not weights:
+        return list(trace)
+    names = sorted(weights)
+    for t in names:
+        if weights[t] <= 0:
+            raise ValueError(f"tenant weight must be > 0: {t}={weights[t]}")
+    counts = {t: 0 for t in names}
+    out: List[TraceTask] = []
+    for tt in trace:
+        t = max(names, key=lambda n: (weights[n] / (counts[n] + 1), n))
+        counts[t] += 1
+        out.append(dataclasses.replace(tt, tenant=t))
+    return out
 
 
 def bursty_trace(n_bursts: int = 4, burst_size: int = 24,

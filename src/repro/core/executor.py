@@ -218,6 +218,9 @@ class Executor:
                  tracer: Any = None,
                  metrics_registry: Any = None,
                  calibration: Any = None,
+                 on_result: Optional[Callable[[EvalRequest, EvalResult],
+                                              None]] = None,
+                 on_tick: Optional[Callable[[float], None]] = None,
                  name: str = "hq"):
         from repro.cluster.allocation import Allocation
         from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
@@ -246,6 +249,10 @@ class Executor:
         self.autoscale_backlog = autoscale_backlog
         self.max_workers = max_workers
         self.name = name
+        # terminal-result hook (repro.service billing/SLO accounting):
+        # fired once per stored result, UNDER the dispatch lock — must be
+        # O(1) and must never call back into this executor
+        self.on_result = on_result
 
         if pack_by_cost and policy in (None, "fcfs"):
             policy = "sjf"
@@ -343,7 +350,7 @@ class Executor:
                 max_workers=max_workers, max_attempts=max_attempts,
                 retired=self._retired_allocs,
                 tracer=tracer, registry=metrics_registry,
-                calibration=calibration)
+                calibration=calibration, on_tick=on_tick)
         # the initial worker group: one allocation, granted immediately
         # (thread startup is the live analogue of the queue wait).  In
         # cluster mode n_workers=0 means "bootstrap from the allocator"
@@ -482,6 +489,7 @@ class Executor:
                         dispatch_s=res.start_t - res.dispatch_t,
                         init_s=res.init_t, compute_s=res.compute_t,
                         now=res.end_t)
+                self._notify_result(req, res)
             self._release_dependents()
             self._cv.notify_all()
 
@@ -507,6 +515,7 @@ class Executor:
                     submit_t=req.submit_t, start_t=now, end_t=now)
                 if self.tracer is not None:
                     self.tracer.task_failed(req.task_id, attempt, ts=now)
+                self._notify_result(req, self._results[req.task_id])
                 self._release_dependents()
                 self._cv.notify_all()
 
@@ -702,7 +711,18 @@ class Executor:
             error="allocation expired", worker=f"alloc{alloc.alloc_id}",
             attempts=attempt, submit_t=req.submit_t,
             start_t=now, end_t=now)
+        self._notify_result(req, self._results[req.task_id])
         self._release_dependents()
+
+    def _notify_result(self, req: EvalRequest, res: EvalResult):
+        """Fire the `on_result` hook for a just-stored result.  Runs
+        under the dispatch lock; the hook is best-effort — accounting
+        failures must never take dispatch down with them."""
+        if self.on_result is not None:
+            try:
+                self.on_result(req, res)
+            except Exception:  # noqa: BLE001
+                pass
 
     def _monitor_loop(self):
         while not self._stopping:
@@ -780,11 +800,16 @@ class Executor:
     # checkpoint / restart
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
-        """Serialisable queue state: done ids + pending request payloads."""
+        """Serialisable queue state: done ids + pending request payloads
+        + the predictor's learned state (where it supports persistence —
+        engine backend name and conditioning set included, so a restored
+        broker re-costs with the SAME surrogate backend instead of
+        silently falling back to a cold default)."""
         with self._lock:
             pending = [req for req, _ in self.policy.pending()]
             pending += [req for req, _ in self._waiting]
             pending += [req for req, _, _, _ in self._running.values()]
+            sd = getattr(self.predictor, "state_dict", None)
             return {
                 "completed": {tid: {"value": r.value, "status": r.status}
                               for tid, r in self._results.items()},
@@ -798,8 +823,10 @@ class Executor:
                     "n_cpus": r.n_cpus,
                     "max_attempts": r.max_attempts,
                     "deadline": r.deadline,
+                    "tenant": r.tenant,
                     "depends_on": list(r.depends_on),
                 } for r in pending],
+                "predictor": sd() if callable(sd) else None,
             }
 
     @classmethod
@@ -807,6 +834,13 @@ class Executor:
                 model_factories: Dict[str, Callable[[], Model]],
                 **kw) -> "Executor":
         ex = cls(model_factories, **kw)
+        pred_state = snap.get("predictor")
+        if pred_state and ex.predictor is not None:
+            # before any resubmission, so the very first re-costing pass
+            # already uses the persisted posterior
+            ls = getattr(ex.predictor, "load_state", None)
+            if callable(ls):
+                ls(pred_state)
         with ex._lock:
             for tid, r in snap["completed"].items():
                 ex._results[tid] = EvalResult(task_id=tid, value=r["value"],

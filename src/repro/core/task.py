@@ -17,6 +17,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 _task_counter = itertools.count()
 
+# Tenant every request belongs to unless it says otherwise.  Single-owner
+# deployments never see any other value.
+DEFAULT_TENANT = "default"
+
 
 class Model:
     """Base class mirroring umbridge.Model."""
@@ -99,6 +103,11 @@ class EvalRequest:
     # absolute completion deadline on the scheduler's clock (drives the
     # "edf" policy; None = no SLO, sorts after every deadlined task)
     deadline: Optional[float] = None
+    # owning tenant (multi-tenant broker service); the default tenant
+    # keeps every single-owner code path byte-for-byte identical —
+    # fair-share scheduling, quotas, and per-tenant SLO accounting only
+    # engage when requests carry distinct tenants
+    tenant: str = DEFAULT_TENANT
 
     def __post_init__(self):
         if not self.task_id:

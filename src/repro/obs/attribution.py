@@ -27,6 +27,13 @@ killed (see `tests/test_obs.py`); `attribute_overhead` returns per-task
 breakdowns plus aggregate totals, and the drivers surface the totals in
 `Executor.metrics()["overhead_attribution"]` and
 `ClusterResult.overhead_attribution`.
+
+Multi-tenant runs additionally get ``"by_tenant"``: the same overhead
+components aggregated per tenant, plus served ``cpu_s`` (init + compute
+from the attempt spans) and the deadline SLO tallies
+(``deadline_total`` / ``deadline_missed`` / ``deadline_miss_rate``) —
+the per-tenant accounting the broker service reports.  Tasks with no
+recorded tenant fall under ``"default"``.
 """
 from __future__ import annotations
 
@@ -119,6 +126,13 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
     events = list(events)
     capacity = capacity_intervals(events)
     tasks: Dict[str, OverheadBreakdown] = {}
+    # per-tenant SLO sidecar state, keyed by task id (tenant/deadline
+    # ride on the first-attempt task.queued instant; cpu and terminal
+    # time come from the attempt spans)
+    tenant_of: Dict[str, str] = {}
+    deadline_of: Dict[str, float] = {}
+    cpu_of: Dict[str, float] = {}
+    end_of: Dict[str, float] = {}
 
     def task(args) -> Optional[OverheadBreakdown]:
         tid = args.get("task") if args else None
@@ -136,6 +150,13 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
                 busy = _overlap(ts, ts + dur, capacity)
                 bd.queue_wait_s += busy
                 bd.alloc_wait_s += dur - busy
+        elif name == "task.queued" and ph == "i" and args:
+            tid = args.get("task")
+            if tid is not None:
+                if "tenant" in args:
+                    tenant_of[tid] = args["tenant"]
+                if "deadline" in args:
+                    deadline_of[tid] = float(args["deadline"])
         elif name == "task.dispatch" and ph == "X":
             bd = task(args)
             if bd is not None:
@@ -144,6 +165,15 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
             bd = task(args)
             if bd is not None:
                 bd.init_s += dur
+                tid = args.get("task")
+                if tid is not None:
+                    cpu_of[tid] = cpu_of.get(tid, 0.0) + \
+                        float(args.get("init", dur))
+        elif name == "task.run" and ph == "X" and args:
+            tid = args.get("task")
+            if tid is not None:
+                cpu_of[tid] = cpu_of.get(tid, 0.0) + \
+                    float(args.get("compute", dur))
         elif name in ("task.requeue", "task.killed") and ph == "i":
             bd = task(args)
             if bd is not None and args and "since" in args:
@@ -152,14 +182,39 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
             bd = task(args)
             if bd is not None:
                 bd.status = name.split(".", 1)[1]
+                end_of[bd.task_id] = ts
 
     totals = {"queue_wait_s": 0.0, "alloc_wait_s": 0.0, "dispatch_s": 0.0,
               "retry_s": 0.0, "init_s": 0.0, "overhead_s": 0.0}
+    by_tenant: Dict[str, Dict[str, float]] = {}
     for bd in tasks.values():
         d = bd.as_dict()
         for k in totals:
             totals[k] += d[k]
-    return {"per_task": tasks, "totals": totals, "n_tasks": len(tasks)}
+        tenant = tenant_of.get(bd.task_id, "default")
+        agg = by_tenant.get(tenant)
+        if agg is None:
+            agg = by_tenant[tenant] = dict.fromkeys(totals, 0.0)
+            agg.update(n_tasks=0.0, cpu_s=0.0, deadline_total=0.0,
+                       deadline_missed=0.0, deadline_miss_rate=0.0)
+        for k in totals:
+            agg[k] += d[k]
+        agg["n_tasks"] += 1.0
+        agg["cpu_s"] += cpu_of.get(bd.task_id, 0.0)
+        deadline = deadline_of.get(bd.task_id)
+        if deadline is not None:
+            agg["deadline_total"] += 1.0
+            end = end_of.get(bd.task_id)
+            # no terminal event in the trace window counts as a miss:
+            # an SLO that never resolved is not an SLO that was met
+            if end is None or end > deadline:
+                agg["deadline_missed"] += 1.0
+    for agg in by_tenant.values():
+        if agg["deadline_total"]:
+            agg["deadline_miss_rate"] = (agg["deadline_missed"]
+                                         / agg["deadline_total"])
+    return {"per_task": tasks, "totals": totals, "by_tenant": by_tenant,
+            "n_tasks": len(tasks)}
 
 
 def format_breakdown(result: Dict[str, Any]) -> str:

@@ -13,6 +13,12 @@ Contract for third-party policies / drivers:
   * `inc(name)` for monotone counters, `set_gauge(name, v)` for
     point-in-time values, `observe(name, v)` for distributions (fixed
     bucket edges; also maintains a running ``<name>_mean`` gauge);
+  * every write accepts ``labels={"tenant": ...}`` — the series is then
+    keyed ``name{k=v,...}`` (keys sorted, Prometheus-style).  Label
+    cardinality is BOUNDED per base name (`max_label_sets`, default 64):
+    writes that would mint a series beyond the cap are dropped and
+    counted in ``labels_dropped``, so an adversarial stream of unique
+    tenant names cannot grow the registry without limit;
   * `sample(now)` snapshots every counter and gauge with timestamp
     ``now`` — the stepper calls it once per tick when a registry is
     attached, so drivers never need to;
@@ -67,26 +73,61 @@ class Histogram:
 class MetricsRegistry:
     """Counters + gauges + histograms with a bounded sample history."""
 
-    def __init__(self, max_samples: int = 4096):
+    def __init__(self, max_samples: int = 4096,
+                 max_label_sets: int = 64):
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
         self.hists: Dict[str, Histogram] = {}
+        self.max_label_sets = max_label_sets
+        self._label_sets: Dict[str, set] = {}  # base name -> series keys
         self._rows = RingBuffer(max_samples)
 
-    # -- writes ----------------------------------------------------------
-    def inc(self, name: str, v: float = 1.0) -> None:
-        self.counters[name] = self.counters.get(name, 0.0) + v
+    def _series(self, name: str,
+                labels: Optional[Dict[str, str]]) -> Optional[str]:
+        """Resolve (name, labels) to a series key, or None when the
+        write must be dropped: a base name may mint at most
+        `max_label_sets` labelled series, and overflow increments the
+        unlabelled ``labels_dropped`` counter instead of allocating —
+        cardinality abuse costs the abuser a counter bump, not memory."""
+        if not labels:
+            return name
+        key = "{}{{{}}}".format(
+            name, ",".join(f"{k}={labels[k]}" for k in sorted(labels)))
+        seen = self._label_sets.setdefault(name, set())
+        if key not in seen:
+            if len(seen) >= self.max_label_sets:
+                self.counters["labels_dropped"] = \
+                    self.counters.get("labels_dropped", 0.0) + 1.0
+                return None
+            seen.add(key)
+        return key
 
-    def set_gauge(self, name: str, v: float) -> None:
-        self.gauges[name] = float(v)
+    # -- writes ----------------------------------------------------------
+    def inc(self, name: str, v: float = 1.0,
+            labels: Optional[Dict[str, str]] = None) -> None:
+        series = self._series(name, labels)
+        if series is None:
+            return
+        self.counters[series] = self.counters.get(series, 0.0) + v
+
+    def set_gauge(self, name: str, v: float,
+                  labels: Optional[Dict[str, str]] = None) -> None:
+        series = self._series(name, labels)
+        if series is None:
+            return
+        self.gauges[series] = float(v)
 
     def observe(self, name: str, v: float,
-                edges: Optional[Sequence[float]] = None) -> None:
-        h = self.hists.get(name)
+                edges: Optional[Sequence[float]] = None,
+                labels: Optional[Dict[str, str]] = None) -> None:
+        series = self._series(name, labels)
+        if series is None:
+            return
+        h = self.hists.get(series)
         if h is None:
-            h = self.hists[name] = Histogram(edges or DEFAULT_EDGES)
+            h = self.hists[series] = Histogram(edges or DEFAULT_EDGES)
         h.observe(v)
-        self.gauges[name + "_mean"] = h.mean
+        self.gauges[series + "_mean"] = h.mean
 
     # -- sampling --------------------------------------------------------
     def sample(self, now: float) -> None:
@@ -118,6 +159,13 @@ class MetricsRegistry:
             g("offload_rate",
               getattr(sur, "n_offloaded", 0) / considered
               if considered else 0.0)
+        tb = getattr(broker, "tenant_backlogs", None)
+        if callable(tb):
+            # per-tenant depth gauges exist only when a tenant-aware
+            # policy (fairshare) is queuing — single-tenant rows keep
+            # their exact pre-multi-tenant schema
+            for tenant, n in sorted(tb().items()):
+                g("queue_depth", float(n), labels={"tenant": tenant})
         self.sample(now)
 
     # -- reads -----------------------------------------------------------

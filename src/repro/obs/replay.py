@@ -187,7 +187,8 @@ class TraceReplay:
                 model_name=row.get("model", "model"),
                 time_request=row.get("time_request"),
                 n_cpus=int(row.get("n_cpus", 1)),
-                parameters=row.get("parameters")))
+                parameters=row.get("parameters"),
+                tenant=row.get("tenant", "default")))
         return out
 
     def spec(self, base: BackendSpec) -> ReplayBackendSpec:

@@ -177,6 +177,12 @@ class Tracer:
                 args["time_request"] = float(req.time_request)
             if getattr(req, "n_cpus", 1) != 1:
                 args["n_cpus"] = int(req.n_cpus)
+            tenant = getattr(req, "tenant", "default")
+            if tenant and tenant != "default":
+                # default omitted: single-tenant traces stay byte-stable
+                args["tenant"] = tenant
+            if getattr(req, "deadline", None) is not None:
+                args["deadline"] = float(req.deadline)
             params = getattr(req, "parameters", None)
             if _jsonable_matrix(params):
                 args["parameters"] = params

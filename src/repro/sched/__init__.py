@@ -8,9 +8,9 @@ instances; register new ones with `@register_policy` / `@register_predictor`.
 """
 from repro.sched.costq import SortedCostQueue
 from repro.sched.offload import SurrogateOffload, SurrogateOffloadPolicy
-from repro.sched.policy import (EDFPolicy, FCFSPolicy, LPTPolicy,
-                                PackingPolicy, SchedulingPolicy, SJFPolicy,
-                                WorkStealingPolicy, WorkerView)
+from repro.sched.policy import (EDFPolicy, FairSharePolicy, FCFSPolicy,
+                                LPTPolicy, PackingPolicy, SchedulingPolicy,
+                                SJFPolicy, WorkStealingPolicy, WorkerView)
 from repro.sched.predictor import (GPRuntimePredictor, QuantileEstimator,
                                    RuntimePredictor, flatten_parameters,
                                    request_features)

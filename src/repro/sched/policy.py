@@ -34,14 +34,16 @@ policies are plain data structures (and stay deterministic in simulation).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
+import math
 from collections import deque
 from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple
 
 from repro.sched.costq import SortedCostQueue
-from repro.sched.registry import register_policy
+from repro.sched.registry import make_policy, register_policy
 
 if TYPE_CHECKING:                              # hint-only: keeps repro.sched
     from repro.core.task import EvalRequest    # import-cycle-free
@@ -496,3 +498,228 @@ class WorkStealingPolicy(SchedulingPolicy):
                 self._push_global(req, attempt, front=True)
         self._affinity = {m: w for m, w in self._affinity.items()
                           if w != wid}
+
+
+@register_policy("fairshare")
+class FairSharePolicy(SchedulingPolicy):
+    """Weighted fair sharing across tenants (deficit round robin).
+
+    Composes one inner `SchedulingPolicy` per tenant — any registered
+    name or zero-arg factory, sharing this policy's predictor — and
+    serves pops by weighted deficit round robin over estimated
+    cost-seconds: whenever no backlogged tenant holds credit, every
+    backlogged tenant is credited ``quantum_s * weight`` per round
+    (rounds batched in closed form, so one huge task can't make the
+    replenish loop O(cost/quantum)); a pop serves the first
+    credit-holding tenant after the last-served one in sorted tenant
+    order, and charges the task's PUSH-TIME cost estimate against its
+    deficit.  Consequences, both pinned by tests:
+
+      * over any saturated stretch each tenant's served cost-seconds
+        converge to its weight share (weighted max-min fairness);
+      * a backlogged tenant is served at least ``quantum_s * weight``
+        cost-seconds per round — bounded-delay, so bursty competitors
+        can't starve anyone.
+
+    Costs are cached at push (keyed ``(tenant, task_id, attempt)`` with
+    duplicate counting for speculative re-pushes) so the pop hot path
+    never touches the predictor — the same discipline the Broker's
+    backlog ledger established.  Unknown/zero estimates charge
+    ``default_cost`` so free-looking tasks still consume bandwidth.
+    Classic DRR rule: a tenant whose queue empties forfeits banked
+    credit (no saving up while idle).
+
+    If every credit-holding tenant declines the asking worker (e.g. a
+    budget-fit inner ``pack`` pop finds nothing that fits), the scan
+    repeats ignoring credit — progress beats idling, and the charge
+    still lands on the served tenant.
+
+    Determinism: tenant ring order is sorted, the cursor is part of the
+    state, and charges derive from push-time caches — identical
+    push/pop sequences (the parity harness's guarantee) produce
+    identical pop orders in sim and live.
+
+    ``quotas`` (max queued tasks per tenant) are carried for admission
+    layers: the policy itself never rejects work (queue contract), but
+    `quota_headroom` is what `repro.service.ServiceBroker` turns into
+    per-tenant backpressure.
+    """
+
+    name = "fairshare"
+
+    def __init__(self, predictor=None, policy="fcfs",
+                 weights: Optional[Dict[str, float]] = None,
+                 quotas: Optional[Dict[str, int]] = None,
+                 quantum_s: float = 1.0, default_cost: float = 1.0):
+        super().__init__(predictor)
+        if isinstance(policy, SchedulingPolicy):
+            raise TypeError(
+                "FairSharePolicy builds one inner queue PER tenant: pass "
+                "a registered policy name or a zero-arg factory, not an "
+                "instance")
+        if policy == "fairshare":
+            raise TypeError("fairshare inside fairshare is not supported")
+        self._sub_spec = policy
+        self.weights = {str(t): float(w)
+                        for t, w in (weights or {}).items()}
+        for t, w in self.weights.items():
+            if w <= 0:
+                raise ValueError(f"tenant weight must be > 0: {t}={w}")
+        self.quotas = {str(t): int(q) for t, q in (quotas or {}).items()}
+        self.quantum_s = float(quantum_s)
+        self.default_cost = float(default_cost)
+        self._tenants: Dict[str, SchedulingPolicy] = {}
+        self._ring: List[str] = []             # sorted tenant names
+        self._cursor: Optional[str] = None     # last-served tenant
+        self._deficit: Dict[str, float] = {}
+        self._served: Dict[str, float] = {}    # cumulative charged cost
+        self._backlog: Dict[str, float] = {}   # queued cost (push-time est)
+        # (tenant, task_id, attempt) -> (cost, multiplicity)
+        self._push_cost: Dict[Tuple[str, str, int], Tuple[float, int]] = {}
+
+    @staticmethod
+    def tenant_of(req) -> str:
+        return getattr(req, "tenant", "") or "default"
+
+    def bind(self, predictor):
+        super().bind(predictor)
+        for q in self._tenants.values():
+            q.bind(self.predictor)
+        return self
+
+    def _weight(self, tenant: str) -> float:
+        return self.weights.get(tenant, 1.0)
+
+    def _inner(self, tenant: str) -> SchedulingPolicy:
+        q = self._tenants.get(tenant)
+        if q is None:
+            if callable(self._sub_spec) and \
+                    not isinstance(self._sub_spec, str):
+                q = self._sub_spec()
+                q.bind(self.predictor)
+            else:
+                q = make_policy(self._sub_spec, self.predictor)
+            self._tenants[tenant] = q
+            bisect.insort(self._ring, tenant)
+            self._deficit.setdefault(tenant, 0.0)
+            self._served.setdefault(tenant, 0.0)
+            self._backlog.setdefault(tenant, 0.0)
+        return q
+
+    # -- queue protocol -------------------------------------------------
+    def push(self, req, attempt):
+        tenant = self.tenant_of(req)
+        inner = self._inner(tenant)
+        key = (tenant, req.task_id, attempt)
+        entry = self._push_cost.get(key)
+        if entry is not None:                  # speculative duplicate:
+            cost, n = entry                    # same charge both times
+            self._push_cost[key] = (cost, n + 1)
+        else:
+            cost = self.cost(req)
+            if cost <= 0.0:
+                cost = self.default_cost
+            self._push_cost[key] = (cost, 1)
+        self._backlog[tenant] += cost
+        inner.push(req, attempt)
+
+    def _charge_of(self, tenant: str, req, attempt: int) -> float:
+        key = (tenant, req.task_id, attempt)
+        entry = self._push_cost.get(key)
+        if entry is None:                      # never pushed here (migrated
+            return self.default_cost           # in?): nominal charge
+        cost, n = entry
+        if n <= 1:
+            del self._push_cost[key]
+        else:
+            self._push_cost[key] = (cost, n - 1)
+        return cost
+
+    def _replenish(self, active: List[str]) -> None:
+        """Credit every backlogged tenant until at least one is positive
+        — the number of quantum rounds computed in closed form, so a
+        single task far larger than the quantum costs O(active), not
+        O(cost / quantum)."""
+        if any(self._deficit[t] > 0.0 for t in active):
+            return
+        rounds = min(
+            math.floor(-self._deficit[t] / (self.quantum_s *
+                                            self._weight(t))) + 1
+            for t in active)
+        for t in active:
+            self._deficit[t] += rounds * self.quantum_s * self._weight(t)
+
+    def _scan(self, active: List[str], worker,
+              need_credit: bool) -> Optional[QueueItem]:
+        if self._cursor is not None:           # resume after last served
+            i = bisect.bisect_right(active, self._cursor)
+            order = active[i:] + active[:i]
+        else:
+            order = active
+        for tenant in order:
+            if need_credit and self._deficit[tenant] <= 0.0:
+                continue
+            item = self._tenants[tenant].pop(worker)
+            if item is None:
+                continue
+            req, attempt = item
+            cost = self._charge_of(tenant, req, attempt)
+            self._deficit[tenant] -= cost
+            self._served[tenant] += cost
+            self._backlog[tenant] = max(self._backlog[tenant] - cost, 0.0)
+            self._cursor = tenant
+            if not len(self._tenants[tenant]):
+                self._deficit[tenant] = 0.0    # DRR: emptied -> no banking
+            return item
+        return None
+
+    def pop(self, worker=None):
+        active = [t for t in self._ring if len(self._tenants[t])]
+        if not active:
+            return None
+        self._replenish(active)
+        item = self._scan(active, worker, need_credit=True)
+        if item is None:                       # every credit holder declined
+            item = self._scan(active, worker, need_credit=False)
+        return item
+
+    def pending(self):
+        out: List[QueueItem] = []
+        for tenant in self._ring:
+            out.extend(self._tenants[tenant].pending())
+        return out
+
+    def __len__(self):
+        return sum(len(q) for q in self._tenants.values())
+
+    def remove_worker(self, wid):
+        for tenant in self._ring:
+            self._tenants[tenant].remove_worker(wid)
+
+    # -- tenant introspection (SLO accounting / admission) --------------
+    def tenant_pending_all(self) -> Dict[str, int]:
+        """Queued tasks per tenant (only tenants with backlog)."""
+        return {t: len(q) for t, q in self._tenants.items() if len(q)}
+
+    def tenant_backlog_cost(self) -> Dict[str, float]:
+        """Queued cost-seconds per tenant, at push-time estimates (an
+        SLO-accounting probe; the Broker's version-cached ledger remains
+        the autoalloc signal)."""
+        return {t: c for t, c in self._backlog.items()
+                if len(self._tenants[t])}
+
+    def served_cost(self) -> Dict[str, float]:
+        """Cumulative charged cost-seconds per tenant — the quantity the
+        fairness tests measure shares on."""
+        return dict(self._served)
+
+    def quota_headroom(self, tenant: str) -> Optional[int]:
+        """How many more tasks `tenant` may queue under its quota (None
+        = unlimited).  Advisory: enforced by admission layers, not by
+        `push`."""
+        quota = self.quotas.get(tenant)
+        if quota is None:
+            return None
+        queued = len(self._tenants[tenant]) if tenant in self._tenants \
+            else 0
+        return max(quota - queued, 0)

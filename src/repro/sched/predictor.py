@@ -228,6 +228,40 @@ class QuantileEstimator:
         """Changes whenever predictions may have changed (every obs)."""
         return self.n_observed()
 
+    # -- persistence (broker journal / Executor.snapshot) ---------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-able state: each model's observation window (arrival
+        order) plus lifetime counts, so `min_observed` gates and
+        `version()` resume where they left off."""
+        with self._lock:
+            return {
+                "kind": "quantile",
+                "per_model": {m: list(rq._fifo)
+                              for m, rq in self._per_model.items()},
+                "counts": {m: rq.count
+                           for m, rq in self._per_model.items()},
+                "pooled_count": self._pooled.count,
+            }
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Inverse of `state_dict`.  The pooled window is rebuilt from
+        the per-model windows (original interleaving is not preserved —
+        per-model predictions, the scheduling signal, round-trip
+        exactly; pooled quantiles are window-equivalent)."""
+        with self._lock:
+            self._per_model = {}
+            self._pooled = _RunningQuantiles(self.window)
+            counts = state.get("counts", {})
+            for model, vals in state.get("per_model", {}).items():
+                rq = _RunningQuantiles(self.window)
+                for v in vals:
+                    rq.add(float(v))
+                    self._pooled.add(float(v))
+                rq.count = int(counts.get(model, rq.count))
+                self._per_model[model] = rq
+            self._pooled.count = int(state.get("pooled_count",
+                                               self._pooled.count))
+
 
 @register_predictor("gp")
 class GPRuntimePredictor:
@@ -431,6 +465,59 @@ class GPRuntimePredictor:
 
     def n_observed(self, model_name: Optional[str] = None) -> int:
         return self._fallback.n_observed(model_name)
+
+    # -- persistence (broker journal / Executor.snapshot) ---------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-able state: the engine BACKEND NAME and the conditioning
+        set (feature rows + log-runtimes), plus the quantile fallback.
+        The fitted posterior itself is not serialised — `load_state`
+        refits the same backend from the same data, which is cheaper
+        than it sounds (one `fit_engine` call) and keeps the journal
+        free of jax arrays."""
+        with self._lock:
+            return {
+                "kind": "gp",
+                "backend": self.backend,
+                "gp_kind": self.kind,
+                "dim": self._dim,
+                "xs": [list(row) for row in self._xs],
+                "ys": [float(y) for y in self._ys],
+                "n_fits": self.n_fits,
+                "fallback": self._fallback.state_dict(),
+            }
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Inverse of `state_dict`: restores the conditioning set AND
+        the engine backend recorded in the state — a broker restored
+        from a journal re-costs with the surrogate it was running, not
+        whatever backend the fresh constructor defaulted to."""
+        self._fallback.load_state(state.get("fallback", {}))
+        xs = [[float(v) for v in row] for row in state.get("xs", [])]
+        ys = [float(y) for y in state.get("ys", [])]
+        backend = str(state.get("backend", self.backend))
+        kind = str(state.get("gp_kind", self.kind))
+        new_engine = None
+        if len(xs) >= self.min_fit:
+            from repro.uq import engine as uq_engine
+            import numpy as np
+            new_engine = uq_engine.fit_engine(
+                np.asarray(xs, dtype=float), np.asarray(ys, dtype=float),
+                backend, kind=kind, steps=self.fit_steps)
+        with self._lock:
+            self.backend = backend
+            self.kind = kind
+            self._xs = xs
+            self._ys = ys
+            dim = state.get("dim")
+            self._dim = (int(dim) if dim is not None
+                         else (len(xs[0]) if xs else None))
+            self._engine = new_engine
+            self._in_post = len(xs) if new_engine is not None else 0
+            self._since_refit = 0
+            self._post_version += 1
+            self.n_fits = int(state.get("n_fits", self.n_fits))
+            if new_engine is not None:
+                self.n_fits += 1
 
 
 # Backend variants by name (the registry resolves names via a no-arg

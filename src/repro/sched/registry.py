@@ -2,8 +2,9 @@
 
 Mirrors the `BackendSpec` idiom in `repro.core.backends` (the `BACKENDS`
 dict + `get`): call sites name a policy ("fcfs", "sjf", "lpt", "pack",
-"steal", "edf", or the cluster-level "broker") or predictor ("quantile",
-"gp", "none") by string, or pass a configured instance straight through.
+"steal", "edf", the multi-tenant "fairshare", or the cluster-level
+"broker") or predictor ("quantile", "gp", "none") by string, or pass a
+configured instance straight through.
 Downstream work (surrogate-offload routing, SLO-aware admission) plugs
 in with `@register_policy("my-policy")` — no core-module edits.
 """

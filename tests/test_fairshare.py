@@ -1,0 +1,224 @@
+"""Fair-share scheduling: `FairSharePolicy` unit behaviour, starvation
+freedom, conservation properties, and sim/live parity for multi-tenant
+traces.
+
+The acceptance bar from the broker-service milestone: tenants weighted
+1:2:4 on a seeded saturating trace receive CPU-second shares within 10%
+relative error of 1/7 : 2/7 : 4/7 while the queue is backlogged, and
+`run_parity` holds EXACT pop-order equality between `simulate_cluster`
+and the live `Executor` under the fair-share policy.
+"""
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.cluster import (bimodal_trace, bursty_trace, run_parity,
+                           simulate_cluster, with_tenants)
+from repro.core import EvalRequest, backends
+from repro.sched import FairSharePolicy, make_policy
+
+
+def _req(tenant: str, i: int, cost: float = 10.0) -> EvalRequest:
+    return EvalRequest("m", [float(i)], time_request=cost,
+                       time_limit=100.0, task_id=f"{tenant}-{i}",
+                       tenant=tenant)
+
+
+# --------------------------------------------------------------------------
+# unit behaviour
+# --------------------------------------------------------------------------
+def test_registered_and_constructible():
+    p = make_policy("fairshare", None)
+    assert isinstance(p, FairSharePolicy)
+    assert p.name == "fairshare"
+
+
+def test_single_tenant_is_inner_policy_passthrough():
+    """One tenant => the configured inner policy, byte-for-byte: FCFS
+    order for fcfs, no fair-share reordering."""
+    p = FairSharePolicy(policy="fcfs")
+    reqs = [_req("solo", i) for i in range(20)]
+    for r in reqs:
+        p.push(r, 0)
+    popped = [p.pop(None)[0].task_id for _ in range(20)]
+    assert popped == [r.task_id for r in reqs]
+    assert p.pop(None) is None
+
+
+def test_default_tenant_untagged_requests():
+    """Requests with no tenant field behaviour land under 'default'."""
+    p = FairSharePolicy()
+    r = EvalRequest("m", [0.0], time_request=1.0, time_limit=10.0)
+    p.push(r, 0)
+    assert p.tenant_pending_all() == {"default": 1}
+    assert p.pop(None)[0] is r
+
+
+def test_weighted_shares_converge():
+    """1:2:4 weights, equal-cost saturating backlog: served cost-seconds
+    at half drain match the weights within 10% relative error."""
+    weights = {"a": 1.0, "b": 2.0, "c": 4.0}
+    p = FairSharePolicy(policy="fcfs", weights=weights, quantum_s=10.0)
+    n_per = 70
+    for i in range(n_per):
+        for t in weights:
+            p.push(_req(t, i), 0)
+    half = (3 * n_per) // 2
+    for _ in range(half):
+        assert p.pop(None) is not None
+    served = p.served_cost()
+    total = sum(served.values())
+    wsum = sum(weights.values())
+    for t, w in weights.items():
+        share = served[t] / total
+        target = w / wsum
+        assert abs(share - target) / target <= 0.10, \
+            f"tenant {t}: share {share:.3f} vs target {target:.3f}"
+
+
+def test_no_starvation_under_adversarial_bursts():
+    """A weight-1 victim against two weight-8 adversaries that keep the
+    queue saturated: the victim still pops within a bounded window —
+    deficit round robin guarantees service every round."""
+    p = FairSharePolicy(weights={"victim": 1.0, "adv1": 8.0, "adv2": 8.0},
+                        quantum_s=10.0)
+    for i in range(4):
+        p.push(_req("victim", i), 0)
+    k = 0
+    pops_between_victim = 0
+    victim_served = 0
+    worst = 0
+    for step in range(600):
+        # adversaries refill continuously — the queue never drains
+        p.push(_req("adv1", 1000 + k), 0)
+        p.push(_req("adv2", 2000 + k), 0)
+        k += 1
+        item = p.pop(None)
+        assert item is not None
+        if item[0].tenant == "victim":
+            victim_served += 1
+            worst = max(worst, pops_between_victim)
+            pops_between_victim = 0
+            if victim_served == 4:
+                break
+        else:
+            pops_between_victim += 1
+    assert victim_served == 4, "victim starved behind weight-8 tenants"
+    # 1:8:8 weights => at most ~16 adversary pops per victim pop, plus
+    # round-boundary slack
+    assert worst <= 40
+
+
+def test_unknown_tenant_gets_default_weight():
+    p = FairSharePolicy(weights={"a": 4.0})
+    p.push(_req("a", 0), 0)
+    p.push(_req("mystery", 0), 0)
+    got = {p.pop(None)[0].tenant for _ in range(2)}
+    assert got == {"a", "mystery"}
+
+
+def test_backlog_cost_and_pending_introspection():
+    p = FairSharePolicy()
+    for i in range(3):
+        p.push(_req("a", i, cost=5.0), 0)
+    p.push(_req("b", 0, cost=7.0), 0)
+    assert p.tenant_pending_all() == {"a": 3, "b": 1}
+    bc = p.tenant_backlog_cost()
+    assert bc["a"] == pytest.approx(15.0)
+    assert bc["b"] == pytest.approx(7.0)
+    assert len(p) == 4
+    assert sorted(r.task_id for r, _ in p.pending()) == \
+        ["a-0", "a-1", "a-2", "b-0"]
+
+
+def test_quota_headroom_advisory():
+    p = FairSharePolicy(quotas={"a": 2})
+    assert p.quota_headroom("a") == 2
+    p.push(_req("a", 0), 0)
+    assert p.quota_headroom("a") == 1
+    assert p.quota_headroom("unlimited") is None
+
+
+# --------------------------------------------------------------------------
+# properties
+# --------------------------------------------------------------------------
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["a", "b", "c", "d"]),
+                          st.integers(min_value=1, max_value=8)),
+                min_size=1, max_size=60),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=8))
+def test_property_conservation(pushes, wa, wb):
+    """Whatever the weights and arrival pattern: every pushed item pops
+    exactly once, pop never returns None while non-empty, and the queue
+    reports empty afterwards."""
+    p = FairSharePolicy(weights={"a": float(wa), "b": float(wb)},
+                        quantum_s=2.0)
+    pushed = []
+    for j, (tenant, cost) in enumerate(pushes):
+        r = _req(tenant, j, cost=float(cost))
+        pushed.append(r.task_id)
+        p.push(r, 0)
+    popped = []
+    while len(p):
+        item = p.pop(None)
+        assert item is not None, "pop returned None on non-empty queue"
+        popped.append(item[0].task_id)
+    assert sorted(popped) == sorted(pushed)
+    assert p.pop(None) is None
+    assert p.tenant_pending_all() == {}
+
+
+# --------------------------------------------------------------------------
+# sim / live
+# --------------------------------------------------------------------------
+def _fair_factory():
+    return FairSharePolicy(policy="fcfs",
+                           weights={"a": 1.0, "b": 2.0, "c": 4.0},
+                           quantum_s=20.0)
+
+
+def test_parity_fairshare_multitenant():
+    """Sim and live must pop the fair-share queue in the same order:
+    identical terminal records on a multi-tenant trace."""
+    spec = backends.get("hq")
+    trace = with_tenants(bimodal_trace(n=24, seed=11),
+                         {"a": 1.0, "b": 2.0, "c": 4.0})
+    rep = run_parity(spec, trace, policy=_fair_factory, n_workers=3,
+                     seed=7)
+    assert rep.ok, "sim/live diverged:\n" + "\n".join(rep.divergences)
+    assert len(rep.sim.records) == 24
+
+
+def test_sim_cpu_second_shares():
+    """Weights 1:2:4 on a saturating burst: CPU-seconds completed while
+    the backlog persists split within 10% relative error of the weights.
+    Tenants are loaded proportionally (via `with_tenants`) so exact fair
+    sharing drains them together."""
+    weights = {"a": 1.0, "b": 2.0, "c": 4.0}
+    trace = with_tenants(
+        bursty_trace(n_bursts=1, burst_size=112, burst_span_s=1.0,
+                     runtime_s=4.0, jitter=0.0, seed=3),
+        weights)
+    tenant_of = {f"trace-{i}": tt.tenant for i, tt in enumerate(trace)}
+    res = simulate_cluster(
+        backends.get("hq"), trace,
+        policy=lambda: FairSharePolicy(weights=weights, quantum_s=8.0),
+        n_workers=2, seed=3)
+    # share measured at the 3/4-drain horizon: order records by finish
+    # time and take the prefix (the backlog is still saturated there;
+    # the full drain would be trivially proportional)
+    done = sorted((r for r in res.records if r.status == "ok"),
+                  key=lambda r: r.end_t)
+    part = done[:(3 * len(done)) // 4]
+    cpu = {t: 0.0 for t in weights}
+    for r in part:
+        cpu[tenant_of[r.task_id]] += r.cpu_time
+    total = sum(cpu.values())
+    wsum = sum(weights.values())
+    for t, w in weights.items():
+        share = cpu[t] / total
+        target = w / wsum
+        assert abs(share - target) / target <= 0.10, \
+            f"tenant {t}: cpu share {share:.3f} vs target {target:.3f}"

@@ -1,0 +1,328 @@
+"""Multi-tenant broker service: journal atomicity (including a real
+SIGKILL mid-write), predictor state persistence through
+snapshot/restore, labelled-metrics cardinality bounds, and the
+`ServiceBroker` ingestion / backpressure / crash-recovery contract.
+
+The crash-safety bar: a broker killed at an arbitrary instant restarts
+from its newest loadable journal with ZERO lost tasks — every admitted
+task reaches the same terminal record set an uninterrupted run produces
+(at-least-once execution; results are keyed by task id, so re-running a
+task that finished after the last snapshot changes nothing)."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.checkpoint import Journal
+from repro.core import EvalRequest, EvalResult
+from repro.core.task import LambdaModel
+from repro.obs.registry import MetricsRegistry
+from repro.sched.predictor import GPRuntimePredictor, QuantileEstimator
+from repro.service import Backpressure, ServiceBroker
+
+
+def _toy():
+    return LambdaModel("toy", lambda p, c: [[float(p[0][0]) * 2]], 1, 1)
+
+
+def _slow(dt=0.05):
+    def fn(p, c):
+        time.sleep(dt)
+        return [[float(p[0][0])]]
+    return LambdaModel("toy", fn, 1, 1)
+
+
+def _req(i, tenant="a", **kw):
+    return EvalRequest("toy", [[float(i)]], time_request=1.0,
+                       time_limit=30.0, tenant=tenant, **kw)
+
+
+# --------------------------------------------------------------------------
+# journal
+# --------------------------------------------------------------------------
+def test_journal_write_load_latest(tmp_path):
+    j = Journal(tmp_path, keep=3)
+    for i in range(5):
+        j.write({"i": i})
+    # keep-N gc: only the last 3 sequences survive
+    assert j.seqs() == [3, 4, 5]
+    assert j.latest() == (5, {"i": 4})
+    assert j.load(3) == {"i": 2}
+
+
+def test_journal_skips_corrupt_latest(tmp_path):
+    j = Journal(tmp_path, keep=5)
+    j.write({"good": 1})
+    j.write({"good": 2})
+    # simulate a torn write published by a broken filesystem
+    (tmp_path / "journal_00000003.json").write_text('{"seq": 3, "sta')
+    assert j.latest() == (2, {"good": 2})
+    # a fresh Journal still resumes numbering past the corrupt file
+    j2 = Journal(tmp_path, keep=5)
+    j2.write({"good": 3})
+    assert j2.latest() == (4, {"good": 3})
+
+
+def test_journal_no_tmp_debris(tmp_path):
+    j = Journal(tmp_path, keep=2)
+    j.write({"x": [1, 2, 3]})
+    assert [p.name for p in tmp_path.iterdir()] == ["journal_00000001.json"]
+    with pytest.raises(TypeError):
+        j.write({"bad": object()})             # not JSON-able: fail loudly
+    # the failed write left no tmpfile and no half-published journal
+    assert [p.name for p in tmp_path.iterdir()] == ["journal_00000001.json"]
+    assert j.latest() == (1, {"x": [1, 2, 3]})
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="POSIX signals")
+def test_journal_survives_sigkill_mid_write(tmp_path):
+    """SIGKILL a writer process at random instants: the newest LOADABLE
+    journal must always parse and carry internally-consistent state
+    (payload invariant: state['n'] values all equal state['seq_echo'])."""
+    script = r"""
+import sys
+sys.path.insert(0, %r)
+from repro.checkpoint import Journal
+j = Journal(%r, keep=3)
+i = j.latest_seq() or 0
+while True:
+    i += 1
+    j.write({"seq_echo": i, "n": [i] * 2000})
+""" % (os.path.join(os.path.dirname(os.path.dirname(__file__)), "src"),
+       str(tmp_path))
+    for round_no in range(4):
+        proc = subprocess.Popen([sys.executable, "-c", script],
+                                stdout=subprocess.DEVNULL,
+                                stderr=subprocess.DEVNULL)
+        # let it publish a few, then kill hard mid-stream
+        deadline = time.monotonic() + 10.0
+        j = Journal(tmp_path, keep=3)
+        while j.latest_seq() is None or j.latest_seq() < 2 * (round_no + 1):
+            if time.monotonic() > deadline:
+                break
+            time.sleep(0.005)
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        loaded = Journal(tmp_path, keep=3).latest()
+        assert loaded is not None, "no loadable journal after SIGKILL"
+        seq, state = loaded
+        assert state["n"] == [state["seq_echo"]] * 2000, \
+            "journal state torn across the kill"
+    # no tmpfile debris counted as journals
+    for p in tmp_path.iterdir():
+        if p.suffix == ".tmp":
+            continue                           # orphaned tmp is allowed…
+        assert p.name.startswith("journal_")   # …but never a torn journal
+
+
+# --------------------------------------------------------------------------
+# predictor persistence (satellite: snapshot/restore round-trips GP state)
+# --------------------------------------------------------------------------
+def test_quantile_estimator_state_roundtrip():
+    q = QuantileEstimator(window=16)
+    for i in range(10):
+        q.observe(_req(i, tenant="default"), compute_t=float(i + 1))
+    state = q.state_dict()
+    assert json.loads(json.dumps(state)) == state     # JSON-able
+    q2 = QuantileEstimator(window=16)
+    q2.load_state(state)
+    r = _req(99)
+    assert q2.predict(r) == q.predict(r)
+    assert q2.quantile(0.95, "toy") == q.quantile(0.95, "toy")
+
+
+def test_gp_predictor_state_roundtrip():
+    gp = GPRuntimePredictor(min_fit=4, fit_steps=5, backend="incremental")
+    for i in range(6):
+        gp.observe(_req(i), compute_t=0.5 + 0.1 * i)
+    state = gp.state_dict()
+    assert state["backend"] == "incremental"
+    assert json.loads(json.dumps(state)) == state     # JSON-able
+    gp2 = GPRuntimePredictor(min_fit=4, fit_steps=5)  # default backend
+    gp2.load_state(state)
+    # the persisted engine backend wins over the constructor default
+    assert gp2.backend == "incremental"
+    assert gp2.n_observed("toy") == gp.n_observed("toy")
+    p1, p2 = gp.predict(_req(3)), gp2.predict(_req(3))
+    assert p1 is not None and p2 is not None
+    assert p2 == pytest.approx(p1, rel=0.2)
+
+
+def test_executor_snapshot_carries_predictor_and_tenant():
+    from repro.core.executor import Executor
+    ex = Executor({"toy": _toy}, n_workers=1,
+                  predictor=GPRuntimePredictor(min_fit=4, fit_steps=5,
+                                               backend="incremental"))
+    ex.run_all([_req(i, tenant="t1") for i in range(5)])
+    snap = ex.snapshot()
+    ex.shutdown()
+    assert snap["predictor"] is not None
+    assert snap["predictor"]["backend"] == "incremental"
+    ex2 = Executor.restore(
+        snap, {"toy": _toy}, n_workers=1,
+        predictor=GPRuntimePredictor(min_fit=4, fit_steps=5))
+    try:
+        assert ex2.predictor.backend == "incremental"
+        assert ex2.predictor.n_observed("toy") == 5
+    finally:
+        ex2.shutdown()
+
+
+def test_snapshot_pending_records_tenant(tmp_path):
+    """Pending payloads carry the tenant, so a recovered broker refills
+    the right per-tenant queues."""
+    from repro.core.executor import Executor
+    ex = Executor({"toy": _toy}, n_workers=0)
+    ex.submit(_req(0, tenant="vip"))
+    snap = ex.snapshot()
+    ex.shutdown()
+    assert snap["pending"][0]["tenant"] == "vip"
+    restored = EvalRequest(**snap["pending"][0])
+    assert restored.tenant == "vip"
+
+
+# --------------------------------------------------------------------------
+# labelled metrics (satellite: bounded cardinality)
+# --------------------------------------------------------------------------
+def test_labeled_metrics_series():
+    reg = MetricsRegistry()
+    reg.inc("tasks_submitted", labels={"tenant": "a"})
+    reg.inc("tasks_submitted", v=2.0, labels={"tenant": "b"})
+    reg.inc("tasks_submitted")                 # unlabelled stays separate
+    assert reg.counters["tasks_submitted{tenant=a}"] == 1.0
+    assert reg.counters["tasks_submitted{tenant=b}"] == 2.0
+    assert reg.counters["tasks_submitted"] == 1.0
+    reg.set_gauge("queue_depth", 7.0, labels={"tenant": "a"})
+    assert reg.gauges["queue_depth{tenant=a}"] == 7.0
+
+
+def test_labeled_metrics_cardinality_cap():
+    reg = MetricsRegistry(max_label_sets=4)
+    for i in range(10):
+        reg.inc("hits", labels={"tenant": f"t{i:02d}"})
+    kept = [k for k in reg.counters if k.startswith("hits{")]
+    assert len(kept) == 4                      # cap holds
+    assert reg.counters["labels_dropped"] == 6.0
+    # established series keep counting after the cap trips
+    reg.inc("hits", labels={"tenant": "t00"})
+    assert reg.counters["hits{tenant=t00}"] == 2.0
+
+
+# --------------------------------------------------------------------------
+# service broker
+# --------------------------------------------------------------------------
+def test_service_end_to_end_with_billing(tmp_path):
+    with ServiceBroker({"toy": _toy}, weights={"a": 1.0, "b": 2.0},
+                       journal_dir=str(tmp_path), journal_every_s=0.05,
+                       n_workers=2, registry=MetricsRegistry()) as svc:
+        reqs = [_req(i, tenant="a" if i % 2 else "b") for i in range(10)]
+        res = svc.run_all(reqs, timeout=30.0)
+        assert all(r.status == "ok" for r in res)
+        bill = svc.billing()
+        assert bill.get("a", 0.0) >= 0.0 and set(bill) == {"a", "b"}
+        assert svc.open_tasks() == {}
+        assert svc.registry.counters["tasks_submitted{tenant=a}"] == 5.0
+        assert svc.registry.counters["tasks_ok{tenant=b}"] == 5.0
+        path = svc.checkpoint()
+        assert path is not None and os.path.exists(path)
+    # context-manager shutdown published a final checkpoint
+    assert Journal(tmp_path).latest() is not None
+
+
+def test_service_backpressure_quota():
+    svc = ServiceBroker({"toy": lambda: _slow(0.3)}, quotas={"a": 2},
+                        n_workers=1)
+    try:
+        ids = [svc.submit(_req(i)) for i in range(2)]
+        with pytest.raises(Backpressure) as ei:
+            svc.submit(_req(9), block=False)
+        assert ei.value.tenant == "a"
+        assert ei.value.open_tasks == 2
+        # bounded blocking submit times out while the queue stays full
+        with pytest.raises(Backpressure):
+            svc.submit(_req(9), timeout=0.05)
+        # other tenants are unaffected by tenant a's quota
+        other = svc.submit(_req(0, tenant="b"), block=False)
+        # a blocking submit admits as soon as a slot frees
+        t0 = time.monotonic()
+        svc.submit(_req(3), timeout=10.0)
+        assert time.monotonic() - t0 < 10.0
+        for t in ids + [other]:
+            assert svc.result(t, timeout=30.0).status == "ok"
+    finally:
+        svc.shutdown()
+
+
+def test_service_deadline_slo_accounting():
+    with ServiceBroker({"toy": lambda: _slow(0.05)}, n_workers=1) as svc:
+        ok = svc.submit(_req(0, deadline=1e9))
+        miss = svc.submit(_req(1, deadline=1e-9))
+        svc.result(ok, 30.0), svc.result(miss, 30.0)
+        c = svc.registry.counters
+        assert c["deadline_total{tenant=a}"] == 2.0
+        assert c["deadline_missed{tenant=a}"] == 1.0
+
+
+def test_service_crash_recovery_zero_lost(tmp_path):
+    """Kill mid-workload, recover from the journal: the terminal record
+    set equals the uninterrupted run's — zero lost tasks."""
+    reqs = [_req(i, tenant="a" if i % 3 else "b",
+                 task_id=f"crash-{i}") for i in range(16)]
+
+    # uninterrupted reference run
+    with ServiceBroker({"toy": lambda: _slow(0.02)}, n_workers=2) as ref:
+        ref_res = ref.run_all([EvalRequest(**{
+            "model_name": r.model_name, "parameters": r.parameters,
+            "time_request": r.time_request, "time_limit": r.time_limit,
+            "tenant": r.tenant, "task_id": r.task_id}) for r in reqs],
+            timeout=60.0)
+    ref_terminal = {(r.task_id, r.status) for r in ref_res}
+
+    svc = ServiceBroker({"toy": lambda: _slow(0.05)},
+                        weights={"a": 1.0, "b": 4.0},
+                        journal_dir=str(tmp_path), journal_every_s=0.02,
+                        n_workers=2)
+    ids = [svc.submit(r) for r in reqs]
+    while len([r for r in svc.records() if r.status == "ok"]) < 6:
+        time.sleep(0.01)
+    svc.checkpoint()                           # deterministic snapshot
+    svc.kill()                                 # hard crash, no cleanup
+    done_before = {r.task_id for r in svc.records() if r.status == "ok"}
+    assert 0 < len(done_before) < len(reqs)    # genuinely mid-workload
+
+    svc2 = ServiceBroker.recover({"toy": lambda: _slow(0.05)},
+                                 journal_dir=str(tmp_path), n_workers=2)
+    try:
+        # recovered config came from the journal
+        assert svc2.weights == {"a": 1.0, "b": 4.0}
+        res = [svc2.result(t, timeout=60.0) for t in ids]
+        assert {(r.task_id, r.status) for r in res} == ref_terminal
+        assert all(r.status == "ok" for r in res)
+        # billing survived the crash
+        assert sum(svc2.billing().values()) > 0.0
+    finally:
+        svc2.shutdown()
+
+
+def test_service_recover_empty_dir(tmp_path):
+    svc = ServiceBroker.recover({"toy": _toy}, journal_dir=str(tmp_path),
+                                n_workers=1)
+    try:
+        assert svc.result(svc.submit(_req(0)), 30.0).status == "ok"
+    finally:
+        svc.shutdown()
+
+
+def test_service_default_tenant_single_owner_path():
+    """No tenants configured, untagged requests: the service behaves as
+    a plain executor front-end (default tenant, no quotas)."""
+    with ServiceBroker({"toy": _toy}, n_workers=1) as svc:
+        r = EvalRequest("toy", [[2.0]], time_request=1.0, time_limit=10.0)
+        assert r.tenant == "default"
+        out = svc.result(svc.submit(r), 30.0)
+        assert out.status == "ok" and out.value == [[4.0]]
+        assert set(svc.billing()) == {"default"}
