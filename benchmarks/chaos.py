@@ -1,0 +1,239 @@
+"""Benchmark: deterministic fault injection + hardened recovery gates.
+
+Sweeps seeded `FaultPlan` intensities (none / low / med / high) over an
+elastic autoalloc scenario with retry backoff, poison-task quarantine
+and speculative re-execution enabled, and gates CI on the recovery
+contract the `repro.chaos` subsystem promises:
+
+  * **parity** — `run_parity` with every faulted plan stays EXACT: the
+    sim and live-replay drivers observe identical fault sequences and
+    produce identical records, allocation events, billing and span
+    sequences (zero divergences);
+  * **invariants** — `InvariantChecker` reports zero violations on both
+    drivers at every intensity: exactly one terminal state per task,
+    node-second billing additive across crashes / preemptions /
+    speculation, no orphaned workers, allocations closed;
+  * **no lost tasks** — every submitted task reaches a terminal record
+    at every intensity (crash-requeue, preemption-migrate and backoff
+    machinery never drop work; quarantine is a deliberate terminal
+    state, not loss);
+  * **bounded recovery overhead** — the faulted makespan stays within
+    ``MAX_MAKESPAN_PENALTY`` of the fault-free baseline (recovery
+    works by re-execution, not by waiting out the horizon).
+
+Writes ``BENCH_chaos.json`` (per-intensity fault mix, outcome counts,
+makespan penalty, invariant measures); non-zero exit on any gate
+failure.
+
+    PYTHONPATH=src python benchmarks/chaos.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List
+
+from repro.chaos import FaultEvent, FaultPlan, InvariantChecker
+from repro.cluster import AutoAllocConfig, TraceTask, bursty_trace
+from repro.cluster.parity import run_parity
+from repro.core import backends
+from repro.core.task import RetryPolicy
+from repro.obs import Tracer
+
+# recovery must beat re-submission: a faulted sweep whose makespan
+# exceeds the fault-free baseline by more than this fraction fails CI
+MAX_MAKESPAN_PENALTY = 1.5
+
+# expected fault events per 600 s horizon, scaled per intensity
+_RATE_UNIT = {
+    "worker_crash": 2.0, "preempt": 1.0, "slow_node": 1.0,
+    "corrupt_result": 1.0, "surrogate_outage": 1.0,
+}
+INTENSITIES = {"none": 0.0, "low": 1.0, "med": 2.0, "high": 4.0}
+
+
+def _cfg() -> AutoAllocConfig:
+    return AutoAllocConfig(workers_per_alloc=2, walltime_s=300.0,
+                           backlog_high_s=10.0, backlog_low_s=2.0,
+                           max_pending=3, max_allocations=6,
+                           min_allocations=1, idle_drain_s=30.0,
+                           hysteresis_s=5.0)
+
+
+def _plan(intensity: float, seed: int, horizon_s: float) -> FaultPlan:
+    if intensity <= 0.0:
+        return FaultPlan()
+    rates = {k: v * intensity / 600.0 for k, v in _RATE_UNIT.items()}
+    return FaultPlan.generate(seed=seed, horizon_s=horizon_s,
+                              rates=rates, grace_s=60.0,
+                              slow_factor=3.0, slow_duration_s=120.0,
+                              outage_s=120.0)
+
+
+def run_intensity(name: str, intensity: float, trace, *,
+                  seed: int, horizon_s: float,
+                  plan: FaultPlan = None,
+                  retry: RetryPolicy = None,
+                  max_attempts: int = 8) -> Dict[str, Any]:
+    spec = backends.get("hq")
+    if plan is None:
+        plan = _plan(intensity, seed=seed + 17, horizon_s=horizon_s)
+    if retry is None:
+        retry = RetryPolicy(base_s=2.0, factor=2.0, max_s=30.0,
+                            jitter=0.5, quarantine_after=4)
+    sim_tr, live_tr = Tracer(capacity=262_144), Tracer(capacity=262_144)
+
+    t0 = time.perf_counter()
+    rep = run_parity(spec, trace, autoalloc=_cfg(), max_workers=12,
+                     max_attempts=max_attempts, seed=seed,
+                     fault_plan=plan, retry_policy=retry,
+                     straggler_factor=4.0, straggler_min_completed=5,
+                     tracers=(sim_tr, live_tr))
+    wall = time.perf_counter() - t0
+
+    problems: List[str] = []
+    if not rep.ok:
+        problems += [f"{name}: parity diverged: {d}"
+                     for d in rep.divergences[:8]]
+
+    expected = [f"trace-{i}" for i in range(len(trace))]
+    checker = InvariantChecker()
+    measures: Dict[str, Dict[str, float]] = {}
+    for side, res, tr in (("sim", rep.sim, sim_tr),
+                          ("live", rep.live, live_tr)):
+        inv = checker.check(records=res.records,
+                            allocations=res.allocations,
+                            events=tr.events(),
+                            expected_tasks=expected)
+        measures[side] = inv.measures
+        problems += [f"{name}/{side}: {v}" for v in inv.violations]
+
+    by_status: Dict[str, int] = {}
+    for r in rep.sim.records:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    lost = [t for t in expected
+            if t not in {r.task_id for r in rep.sim.records}]
+    lost += [r.task_id for r in rep.sim.records if r.status == "lost"]
+    if lost:
+        problems.append(f"{name}: {len(lost)} lost tasks: "
+                        f"{sorted(lost)[:5]}")
+
+    summary = rep.sim.summary()
+    fired = [e for e in sim_tr.events() if e[2] == "chaos.fire"]
+    recovery = {k: sum(1 for e in sim_tr.events() if e[2] == f"task.{k}")
+                for k in ("requeue", "migrate", "speculate",
+                          "hedge_cancel", "quarantined")}
+    mix = ", ".join(f"{k}x{v}" for k, v in plan.kinds().items()) or "clean"
+    print(f"[{name:<4}] {len(plan)} faults ({mix}), "
+          f"{by_status} makespan {summary['makespan']:.1f}s "
+          f"node-s {summary['node_seconds']:.0f} "
+          f"parity={'OK' if rep.ok else 'DIVERGED'} "
+          f"({wall*1e3:.0f} ms)")
+
+    return {
+        "intensity": name,
+        "scale": intensity,
+        "fault_mix": plan.kinds(),
+        "n_faults_planned": len(plan),
+        "n_faults_fired": len(fired),
+        "by_status": by_status,
+        "n_lost": len(lost),
+        "recovery_actions": recovery,
+        "makespan_s": summary["makespan"],
+        "node_seconds": summary["node_seconds"],
+        "n_allocations": summary["n_allocations"],
+        "parity_ok": rep.ok,
+        "n_divergences": len(rep.divergences),
+        "invariant_measures": measures,
+        "wall_s": wall,
+        "problems": problems,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller trace, fewer seeds")
+    ap.add_argument("--json", default="BENCH_chaos.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    bursts, size = (2, 8) if args.quick else (3, 14)
+    trace = bursty_trace(n_bursts=bursts, burst_size=size,
+                         seed=args.seed + 1)
+    horizon_s = 1200.0
+
+    results = [run_intensity(name, scale, trace, seed=args.seed,
+                             horizon_s=horizon_s)
+               for name, scale in INTENSITIES.items()]
+
+    # targeted scenario: crash + preemption-with-migration + result
+    # corruption + straggler hedging in ONE faulted parity run — every
+    # recovery path fires and both drivers must still agree exactly
+    target_trace = [TraceTask(t=i * 0.5, runtime=2.0) for i in range(14)]
+    target_trace += [TraceTask(t=7.0, runtime=120.0),
+                     TraceTask(t=7.5, runtime=90.0)]
+    targeted = run_intensity(
+        "targeted", 0.0, target_trace, seed=5, horizon_s=horizon_s,
+        max_attempts=6,
+        plan=FaultPlan(events=(
+            FaultEvent(t=12.0, kind="worker_crash", target=1),
+            FaultEvent(t=20.0, kind="preempt", target=0, duration_s=15.0),
+            FaultEvent(t=31.0, kind="corrupt_result", target=0),
+        )),
+        retry=RetryPolicy(base_s=1.0, factor=2.0, max_s=20.0, jitter=0.3,
+                          quarantine_after=3))
+    ra = targeted["recovery_actions"]
+    for action in ("requeue", "migrate", "speculate", "hedge_cancel"):
+        if ra.get(action, 0) <= 0:
+            targeted["problems"].append(
+                f"targeted: recovery path {action!r} never fired")
+    results.append(targeted)
+
+    problems = [p for r in results for p in r["problems"]]
+
+    baseline = next(r for r in results if r["intensity"] == "none")
+    for r in results:
+        if r["intensity"] == "targeted":     # different trace: no penalty
+            continue
+        r["makespan_penalty"] = (r["makespan_s"] / baseline["makespan_s"]
+                                 - 1.0) if baseline["makespan_s"] else 0.0
+        if r["makespan_penalty"] > MAX_MAKESPAN_PENALTY:
+            problems.append(
+                f"{r['intensity']}: makespan penalty "
+                f"{r['makespan_penalty']:.2f} exceeds bound "
+                f"{MAX_MAKESPAN_PENALTY}")
+    if not any(r["n_faults_fired"] for r in results):
+        problems.append("sweep fired zero faults: intensities degenerate")
+
+    print("\nrecovery overhead vs clean baseline "
+          f"(makespan {baseline['makespan_s']:.1f}s):")
+    for r in results:
+        pen = (f"{r['makespan_penalty']*100:+6.1f}%"
+               if "makespan_penalty" in r else "   n/a")
+        print(f"  {r['intensity']:<8} penalty {pen}  "
+              f"node-s {r['node_seconds']:.0f}  "
+              f"recovery {r['recovery_actions']}")
+
+    out = {"bench": "chaos", "quick": bool(args.quick),
+           "seed": args.seed,
+           "max_makespan_penalty": MAX_MAKESPAN_PENALTY,
+           "intensities": results, "problems": problems}
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    if problems:
+        print("\nFAIL:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("\nall chaos gates PASS (parity exact, zero invariant "
+          "violations, zero lost tasks, recovery bounded)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

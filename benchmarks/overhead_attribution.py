@@ -37,8 +37,11 @@ import sys
 import time
 from typing import Any, Dict, List
 
-from repro.cluster import AutoAllocConfig, bursty_trace, simulate_cluster
+from repro.chaos import FaultEvent, FaultPlan
+from repro.cluster import (AutoAllocConfig, TraceTask, bursty_trace,
+                           simulate_cluster)
 from repro.core import backends
+from repro.core.task import RetryPolicy
 from repro.obs import (MetricsRegistry, Tracer, format_breakdown,
                        validate_chrome_trace)
 
@@ -174,6 +177,44 @@ def main(argv=None) -> int:
         broker=offload_broker,
         autoalloc=_elastic_cfg(walltime_s=300.0), seed=5))
 
+    # hedged: a p95 straggler pinned to a chaos-degraded node (4x
+    # compute) triggers predictor-gated speculative re-execution; the
+    # healthy hedge copy WINS, so the task's record carries the
+    # straggler-detection lag as a speculation_s component the
+    # balancing must absorb exactly (at seed 7 the 90 s straggler
+    # dispatches on worker 0 at t = 37.38; the slow fault lands before,
+    # the healthy copy wins at t = 239.42 vs the loser's 398.4)
+    hedge_trace = [TraceTask(t=i * 0.5, runtime=2.0) for i in range(14)]
+    hedge_trace += [TraceTask(t=7.0, runtime=120.0),
+                    TraceTask(t=7.5, runtime=90.0)]
+    scenarios.append(run_scenario(
+        "hedged", spec, hedge_trace,
+        autoalloc=AutoAllocConfig(workers_per_alloc=2, walltime_s=300.0,
+                                  backlog_high_s=10.0, backlog_low_s=2.0,
+                                  max_pending=3, max_allocations=6,
+                                  min_allocations=1, idle_drain_s=30.0,
+                                  hysteresis_s=5.0),
+        max_workers=12, max_attempts=6, seed=7,
+        fault_plan=FaultPlan(events=(
+            FaultEvent(t=20.0, kind="slow_node", target=0,
+                       factor=4.0, duration_s=150.0),)),
+        straggler_factor=4.0, straggler_min_completed=5))
+
+    # chaos: a poison task crash-kills its worker until quarantined —
+    # retry_s covers the backoff-extended burned attempts, quarantine_s
+    # the final one, speculation_s stays exactly zero (nothing hedged).
+    # Crash times sit inside the task's run window (at seed 9 the
+    # single static allocation's modelled SLURM queue wait puts the
+    # first dispatch at t = 665.33).
+    scenarios.append(run_scenario(
+        "chaos", spec, [TraceTask(t=0.0, runtime=500.0)],
+        n_workers=1, max_attempts=10, seed=9,
+        fault_plan=FaultPlan(events=tuple(
+            FaultEvent(t=700.0 + 40.0 * i, kind="worker_crash")
+            for i in range(4))),
+        retry_policy=RetryPolicy(base_s=1.0, factor=2.0, jitter=0.2,
+                                 quarantine_after=3)))
+
     # the elastic scenario has the richest lifecycle: export its trace
     elastic = next(s for s in scenarios if s["scenario"] == "elastic")
     elastic["_tracer"].write_chrome(args.trace_out)
@@ -190,6 +231,20 @@ def main(argv=None) -> int:
                         "alloc_wait_s")
     if scenarios[0]["totals"]["queue_wait_s"] <= 0:
         problems.append("static: bursty arrivals produced no queue_wait_s")
+    hedged = next(s for s in scenarios if s["scenario"] == "hedged")
+    chaos = next(s for s in scenarios if s["scenario"] == "chaos")
+    if hedged["totals"]["speculation_s"] <= 0:
+        problems.append("hedged: speculative re-execution produced no "
+                        "speculation_s")
+    if chaos["totals"]["quarantine_s"] <= 0:
+        problems.append("chaos: poison task produced no quarantine_s")
+    # speculation is a hedging-only component: any non-zero value in a
+    # scenario without stragglers means the balancing leaked
+    for s in scenarios:
+        if s["scenario"] != "hedged" and s["totals"]["speculation_s"] != 0:
+            problems.append(f"{s['scenario']}: speculation_s = "
+                            f"{s['totals']['speculation_s']} without "
+                            f"hedging")
 
     out = {
         "bench": "overhead_attribution",

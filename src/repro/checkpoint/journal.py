@@ -41,6 +41,11 @@ class Journal:
         self.dir.mkdir(parents=True, exist_ok=True)
         latest = self.latest_seq()
         self._seq = latest if latest is not None else 0
+        # fault injection (repro.chaos `journal_torn`): the NEXT write
+        # publishes a half-written payload directly under the journal
+        # name — simulating a pre-rename-era torn write / non-atomic
+        # filesystem — which `latest()` must skip on recovery
+        self.torn_next = False
 
     def _path(self, seq: int) -> Path:
         return self.dir / f"journal_{seq:08d}.json"
@@ -69,19 +74,41 @@ class Journal:
         runs only after the publish."""
         payload = json.dumps({"seq": self._seq + 1, "state": state})
         self._seq += 1
+        path = self._path(self._seq)
+        if self.torn_next:
+            self.torn_next = False
+            with open(path, "w") as f:
+                f.write(payload[:max(len(payload) // 2, 1)])
+            return path
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
                 f.write(payload)
                 f.flush()
                 os.fsync(f.fileno())
-            path = self._path(self._seq)
             os.replace(tmp, path)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        # the rename is durable only once the DIRECTORY entry is synced:
+        # without this, a power cut after os.replace can resurface the
+        # old name (or neither), and recovery silently loses the newest
+        # published snapshot
+        self._fsync_dir()
         self._gc()
         return path
+
+    def _fsync_dir(self) -> None:
+        try:
+            dfd = os.open(self.dir, os.O_RDONLY)
+        except OSError:
+            return                             # platform without dir-open
+        try:
+            os.fsync(dfd)
+        except OSError:
+            pass                               # fs without dir fsync
+        finally:
+            os.close(dfd)
 
     def _gc(self) -> None:
         if self.keep <= 0:

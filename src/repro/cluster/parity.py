@@ -36,6 +36,7 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Set
 
+from repro.chaos.inject import ChaosInjector
 from repro.cluster.allocation import RUNNING, Allocation
 from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
 from repro.cluster.broker import Broker
@@ -95,7 +96,11 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                 max_attempts: int = 3,
                 max_t: float = 1e9,
                 tracer: Any = None,
-                registry: Any = None) -> ClusterResult:
+                registry: Any = None,
+                fault_plan: Any = None,
+                retry_policy: Any = None,
+                straggler_factor: float = 0.0,
+                straggler_min_completed: int = 5) -> ClusterResult:
     """Run one trace through a real `Executor` on a virtual clock.
 
     Same signature and semantics as `simulate_cluster`; the difference
@@ -114,7 +119,8 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                    else AutoAllocConfig(**autoalloc))
             allocator = AutoAllocator(cfg, spec=spec, seed=seed)
 
-    arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
+    arrivals, reqs, runtimes = trace_requests(trace, max_attempts,
+                                              retry_policy)
 
     if tracer is not None:
         # the sim emits the identical spec-constants instant (the replay
@@ -134,10 +140,95 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
         max_attempts=max_attempts, max_workers=max_workers,
         allocation_s=walltime_s, cluster=broker, autoalloc=allocator,
         clock=clock, monitor_interval=None,
+        straggler_factor=straggler_factor,
+        straggler_min_completed=straggler_min_completed,
         tracer=tracer, metrics_registry=registry)
+    ex.retry_seed = seed                       # backoff jitter, as the sim
+    ex._stepper.retry_seed = seed
 
     warm: Dict[int, Set[str]] = {}
     inflight: Dict[int, _Inflight] = {}
+
+    # ---- chaos: the injector's handlers mutate the EXECUTOR's tables —
+    # the live mirror of the sim's handlers, firing at the same stepper
+    # choke point at the same virtual times
+    inj: Optional[ChaosInjector] = None
+    if fault_plan is not None and len(fault_plan):
+        inj = ChaosInjector(fault_plan, tracer=tracer)
+
+        def _crash(ev, t):
+            busy = sorted((w for w in ex.workers
+                           if w.wid in inflight and w.alloc is not None
+                           and not w.alloc.virtual),
+                          key=lambda w: (w.alloc.alloc_id, w.wid))
+            if not busy:
+                return
+            w = busy[ev.target % len(busy)]
+            e = inflight.pop(w.wid)
+            ex._pop_inflight(e.req.task_id, e.attempt)
+            w.alloc.note_busy(max(t - e.mark_t, 0.0))
+            warm.get(w.wid, set()).clear()     # process restart: cold
+            ex._stepper.requeue_or_fail(e.req, e.attempt, e.mark_t, t,
+                                        w.alloc, fatal=True)
+
+        def _preempt(ev, t):
+            allocs = sorted((a for a in ex.policy.allocations()
+                             if not a.virtual and a.state == RUNNING),
+                            key=lambda a: a.alloc_id)
+            if not allocs:
+                return
+            victim = allocs[ev.target % len(allocs)]
+            deadline = t + ev.duration_s
+            if deadline < victim.expiry_t:
+                victim.walltime_s = deadline - victim.grant_t
+            ex.policy.drain_allocation(victim.alloc_id, t)
+            by_wid = {w.wid: w for w in ex.workers}
+            for wid in sorted(list(inflight)):
+                e = inflight[wid]
+                w = by_wid.get(wid)
+                if w is None or w.alloc is not victim \
+                        or e.end_t <= deadline:
+                    continue
+                del inflight[wid]
+                ex._pop_inflight(e.req.task_id, e.attempt)
+                victim.note_busy(max(t - e.mark_t, 0.0))
+                ex._stepper.requeue_or_fail(e.req, e.attempt, e.mark_t,
+                                            t, victim, migrate=True)
+
+        def _slow(ev, t):
+            cand = sorted((w for w in ex.workers
+                           if w.alloc is not None and not w.alloc.virtual
+                           and w.alloc.state == RUNNING),
+                          key=lambda w: (w.alloc.alloc_id, w.wid))
+            if cand:
+                w = cand[ev.target % len(cand)]
+                inj.set_slow(w.wid, ev.factor, t + ev.duration_s)
+
+        def _outage(ev, t):
+            sur = getattr(ex.policy, "surrogate", None)
+            if sur is not None and hasattr(sur, "set_degraded"):
+                sur.set_degraded(t, t + ev.duration_s, "outage")
+
+        inj.on("worker_crash", _crash)
+        inj.on("preempt", _preempt)
+        inj.on("slow_node", _slow)
+        inj.on("surrogate_outage", _outage)
+        # journal_torn: the replay has no journal — symmetric no-op
+        ex._stepper.chaos = inj
+
+    def _slot_alive(e):
+        ent = ex._running.get(e.req.task_id)
+        if ent is not None and ent[3] == e.attempt:
+            return True
+        ent = ex._hedges.get(e.req.task_id)
+        return ent is not None and ent[3] == e.attempt
+
+    _TERMINAL = ("ok", "failed", "timeout", "quarantined")
+
+    def n_terminal():
+        return sum(1 for r in ex._results.values()
+                   if r.status in _TERMINAL)
+
     arr_i = 0
     now = 0.0
     next_tick = 0.0
@@ -152,9 +243,16 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                 f"replay_live made no progress after {max_iters} events "
                 f"({n_final}/{len(reqs)} tasks done)")
         # ---- next event time (the sim's candidate set, shared code) ---
+        extra = ex._stepper.deferred_times()   # backoff release times
+        if inj is not None:
+            ct = inj.next_time()
+            if ct is not None:
+                extra.append(ct)
+        elastic = allocator is not None or (
+            straggler_factor > 0.0 and bool(inflight))
         nxt = next_event_time(arrivals, arr_i,
                               (e.end_t for e in inflight.values()),
-                              broker, allocator is not None, next_tick)
+                              broker, elastic, next_tick, extra)
         if nxt is None:
             break
         now = max(now, nxt)
@@ -173,6 +271,22 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
         done = sorted((e for e in inflight.values() if e.end_t <= now),
                       key=lambda e: (e.end_t, e.wid))
         for e in done:
+            if not _slot_alive(e):
+                del inflight[e.wid]            # cancelled this batch
+                continue
+            if inj is not None and not e.req.config.get("_surrogate") \
+                    and inj.take_corruption():
+                # corrupted result (sim mirror): bill the burned work,
+                # route through retry/quarantine as a fatal failure
+                ent = ex._pop_inflight(e.req.task_id, e.attempt)
+                w = ent[1] if ent is not None else None
+                alloc = w.alloc if w is not None else None
+                if alloc is not None:
+                    alloc.note_busy(max(e.end_t - e.mark_t, 0.0))
+                ex._stepper.requeue_or_fail(e.req, e.attempt, e.mark_t,
+                                            e.end_t, alloc, fatal=True)
+                del inflight[e.wid]
+                continue
             ex._complete(e.req, EvalResult(
                 task_id=e.req.task_id, value=[[0.0]], status="ok",
                 worker=e.wname, attempts=e.attempt,
@@ -180,19 +294,21 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                 start_t=e.start_t, end_t=e.end_t,
                 compute_t=e.compute, init_t=e.init))
             del inflight[e.wid]
-            n_final += 1
 
         # ---- lifecycle: the executor's own stepper adapter ------------
         ex._cluster_step()
-        # workers the stepper retired took their in-flight tasks with
-        # them: requeued (still pending, not counted) or terminally
-        # failed by the shared kill rule (a 'failed' result landed)
+        # workers the stepper (or a chaos handler, or a lost hedge race)
+        # tore down took their in-flight tasks with them: drop the stale
+        # slots; terminal accounting is recomputed below
         for wid in [wid for wid, e in inflight.items()
-                    if e.req.task_id not in ex._running]:
-            res = ex._results.get(inflight[wid].req.task_id)
-            if res is not None and res.status == "failed":
-                n_final += 1
+                    if not _slot_alive(e)]:
             del inflight[wid]
+
+        # ---- speculative re-execution (the executor's own check, the
+        # same shared ladder + capacity gate the sim runs) --------------
+        if straggler_factor > 0.0:
+            ex._straggler_check(now)
+        n_final = n_terminal()
 
         # ---- dispatch (sim order: by allocation, then worker id) ------
         for w in sorted(ex.workers, key=lambda w: (w.alloc.alloc_id,
@@ -221,6 +337,8 @@ def replay_live(spec: BackendSpec, trace: List[TraceTask], *,
                 wname = f"{w.name}-surrogate"
             else:
                 compute = runtimes[req.task_id]
+                if inj is not None:
+                    compute *= inj.slow_factor(w.wid, now)
                 init = 0.0 if req.model_name in mine else spec.server_init
                 mine.add(req.model_name)
                 wname = w.name
@@ -300,7 +418,7 @@ def compare_results(sim: ClusterResult, live: ClusterResult,
             if not _close(getattr(s, f), getattr(l, f), tol):
                 out.append(f"{tid}: {f} sim={getattr(s, f)} "
                            f"live={getattr(l, f)}")
-        if s.status == "failed":
+        if s.status in ("failed", "quarantined"):
             for r, side in ((s, "sim"), (l, "live")):
                 if r.start_t != r.end_t or r.cpu_time != 0.0 \
                         or not r.worker.startswith("alloc"):
@@ -354,6 +472,10 @@ def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
                seed: int = 0, tick_s: float = 5.0,
                max_attempts: int = 3,
                surrogate_factory: Any = None,
+               fault_plan: Any = None,
+               retry_policy: Any = None,
+               straggler_factor: float = 0.0,
+               straggler_min_completed: int = 5,
                tol: float = 1e-9,
                tracers: Optional[tuple] = None) -> ParityReport:
     """One differential run: same trace, same config, both drivers.
@@ -382,7 +504,9 @@ def run_parity(spec: BackendSpec, trace: List[TraceTask], *,
 
     kw = dict(seed=seed, tick_s=tick_s, max_attempts=max_attempts,
               max_workers=max_workers, walltime_s=walltime_s,
-              n_workers=n_workers)
+              n_workers=n_workers, fault_plan=fault_plan,
+              retry_policy=retry_policy, straggler_factor=straggler_factor,
+              straggler_min_completed=straggler_min_completed)
     sim_tracer, live_tracer = tracers if tracers is not None else (None,
                                                                    None)
     sim_broker = make_broker()

@@ -28,6 +28,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.chaos.inject import ChaosInjector
+from repro.chaos.speculate import find_stragglers
 from repro.cluster.allocation import DRAINING, QUEUED, RUNNING, Allocation
 from repro.cluster.autoalloc import AutoAllocConfig, AutoAllocator
 from repro.cluster.broker import Broker
@@ -36,8 +38,9 @@ from repro.cluster.traces import TraceTask
 from repro.core import metrics as _metrics
 from repro.core.backends import BackendSpec
 from repro.core.metrics import (AllocationRecord, TaskRecord,
-                                killed_task_record)
-from repro.core.task import EvalRequest
+                                killed_task_record,
+                                quarantined_task_record)
+from repro.core.task import EvalRequest, RetryPolicy
 from repro.obs.attribution import attribute_overhead
 from repro.sched.policy import WorkerView
 from repro.sched.registry import make_predictor
@@ -70,12 +73,16 @@ class ClusterResult:
         }
 
 
-def trace_requests(trace: List[TraceTask], max_attempts: int):
+def trace_requests(trace: List[TraceTask], max_attempts: int,
+                   retry: Any = None):
     """The one trace-to-request mapping both differential drivers use
     (`simulate_cluster` and `parity.replay_live`): time-sorted arrivals,
     task ids ``trace-<i>``, synthetic per-index payloads where the trace
-    carries none, and ``submit_t`` pinned to the arrival time.  Returns
-    ``(arrivals, requests, runtimes)``."""
+    carries none, and ``submit_t`` pinned to the arrival time.  An
+    optional `RetryPolicy` (or its dict form) is stamped on every
+    request.  Returns ``(arrivals, requests, runtimes)``."""
+    if isinstance(retry, dict):
+        retry = RetryPolicy(**retry)
     arrivals = sorted(trace, key=lambda tt: (tt.t,))
     runtimes: Dict[str, float] = {}
     reqs: List[EvalRequest] = []
@@ -88,7 +95,8 @@ def trace_requests(trace: List[TraceTask], max_attempts: int):
                           n_cpus=tt.n_cpus,
                           task_id=f"trace-{i}",
                           max_attempts=max_attempts,
-                          tenant=getattr(tt, "tenant", "default"))
+                          tenant=getattr(tt, "tenant", "default"),
+                          retry=retry)
         req.submit_t = tt.t        # after init: 0.0 must survive as-is
         runtimes[req.task_id] = tt.runtime
         reqs.append(req)
@@ -96,13 +104,18 @@ def trace_requests(trace: List[TraceTask], max_attempts: int):
 
 
 def next_event_time(arrivals, arr_i: int, busy_ends, broker,
-                    elastic: bool, next_tick: float) -> Optional[float]:
+                    elastic: bool, next_tick: float,
+                    extra=()) -> Optional[float]:
     """The canonical next-event candidate set shared by both drivers:
     the next arrival, every in-flight completion, allocation grant and
     walltime-expiry times, and — while an allocator has anything left to
-    react to — the autoalloc tick.  None means nothing can ever happen
-    (the caller stops and surfaces unserved work as 'lost')."""
+    react to — the autoalloc tick.  ``extra`` appends driver-supplied
+    candidates (chaos fault fire times, deferred backoff releases): they
+    must be event times or those instants drift off the parity trace.
+    None means nothing can ever happen (the caller stops and surfaces
+    unserved work as 'lost')."""
     candidates: List[float] = list(busy_ends)
+    candidates.extend(extra)
     if arr_i < len(arrivals):
         candidates.append(arrivals[arr_i].t)
     for a in broker.allocations():
@@ -162,7 +175,11 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                      max_t: float = 1e9,
                      tracer: Any = None,
                      registry: Any = None,
-                     calibration: Any = None) -> ClusterResult:
+                     calibration: Any = None,
+                     fault_plan: Any = None,
+                     retry_policy: Any = None,
+                     straggler_factor: float = 0.0,
+                     straggler_min_completed: int = 5) -> ClusterResult:
     """Run one trace through brokered, allocation-backed dispatch.
 
     Two modes:
@@ -195,6 +212,21 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     observed per-attempt overheads and granted queue waits are streamed
     into it for online drift detection, exactly as the live `Executor`
     does.
+
+    Chaos & recovery (all seeded, all mirrored by `parity.replay_live`):
+    ``fault_plan=`` takes a `repro.chaos.FaultPlan` whose events fire at
+    the stepper choke point — worker crashes, allocation preemption with
+    a grace-period drain (in-flight work migrates), slow-node compute
+    degradation, result corruption, surrogate outages.  ``retry_policy=``
+    stamps a `RetryPolicy` on every request: failed attempts requeue
+    after deterministic exponential backoff (+ seeded jitter) and
+    worker-killing failures quarantine the task after
+    ``quarantine_after`` strikes.  ``straggler_factor>0`` arms
+    speculative re-execution: when the queue is drained and idle
+    capacity exists, tasks running past their model's p95 cutoff
+    (`repro.chaos.find_stragglers`) are hedged on a spare worker —
+    first completion wins, the loser is cancelled and its partial work
+    billed to the allocation.
     """
     rng = np.random.default_rng(seed)
     if broker is None:
@@ -212,7 +244,8 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                                 f"dict, or AutoAllocator; got {autoalloc!r}")
             allocator = AutoAllocator(cfg, spec=spec, seed=seed)
 
-    arrivals, reqs, runtimes = trace_requests(trace, max_attempts)
+    arrivals, reqs, runtimes = trace_requests(trace, max_attempts,
+                                              retry_policy)
 
     now = 0.0
     if tracer is not None:
@@ -244,6 +277,8 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
     wid_counter = 0
     records: List[TaskRecord] = []
     n_final = 0                                # tasks with a final record
+    done_ids: set = set()                      # tasks with a terminal record
+    real_done: List[tuple] = []                # (model, compute) of real oks
     arr_i = 0
     next_tick = 0.0
     retired: List[Allocation] = []             # keep records of removed allocs
@@ -289,11 +324,34 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id, 0) + 1
         return busy
 
+    def cancel_copies(task_id, t):
+        # a task just reached a terminal state: any OTHER in-flight copy
+        # (a speculative hedge, or the original of a hedge that lost) is
+        # cancelled — its partial work bills to its allocation and the
+        # hedge_cancel instant feeds conservation accounting
+        for w in sorted((w for w in workers.values()
+                         if w.busy and w.req.task_id == task_id),
+                        key=lambda w: w.wid):
+            w.alloc.note_busy(max(t - w.mark_t, 0.0))
+            if tracer is not None:
+                tracer.task_hedge_cancel(task_id, w.attempt, t, w.mark_t)
+            w.busy, w.req = False, None
+
     def record_failed(req, attempt, alloc, t):
         nonlocal n_final
         records.append(killed_task_record(req.task_id, req.submit_t, t,
                                           alloc.alloc_id, attempt))
         n_final += 1
+        done_ids.add(req.task_id)
+        cancel_copies(req.task_id, t)
+
+    def record_quarantined(req, attempt, alloc, t):
+        nonlocal n_final
+        records.append(quarantined_task_record(req.task_id, req.submit_t, t,
+                                               alloc.alloc_id, attempt))
+        n_final += 1
+        done_ids.add(req.task_id)
+        cancel_copies(req.task_id, t)
 
     stepper = LifecycleStepper(
         broker, allocator, now=lambda: now,
@@ -301,9 +359,104 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
         busy_count=busy_count,
         worker_count=lambda: len([w for w in workers.values()
                                   if not w.alloc.virtual]),
-        record_failed=record_failed,
+        record_failed=record_failed, record_quarantined=record_quarantined,
         max_workers=max_workers, max_attempts=None, retired=retired,
-        tracer=tracer, registry=registry, calibration=calibration)
+        tracer=tracer, registry=registry, calibration=calibration,
+        retry_seed=seed)
+
+    # ---- chaos: handlers mutate the sim worker/allocation tables at the
+    # stepper choke point, so a parity replay (whose handlers mutate the
+    # live executor's tables) observes the identical fault sequence
+    chaos: Optional[ChaosInjector] = None
+    if fault_plan is not None and len(fault_plan):
+        chaos = ChaosInjector(fault_plan, tracer=tracer)
+
+        def _crash(ev, t):
+            busy = sorted((w for w in workers.values()
+                           if w.busy and not w.alloc.virtual),
+                          key=lambda w: (w.alloc.alloc_id, w.wid))
+            if not busy:
+                return
+            w = busy[ev.target % len(busy)]
+            req, attempt, mark = w.req, w.attempt, w.mark_t
+            w.alloc.note_busy(max(t - mark, 0.0))
+            w.warm.clear()           # worker process restart: servers cold
+            w.busy, w.req = False, None
+            stepper.requeue_or_fail(req, attempt, mark, t, w.alloc,
+                                    fatal=True)
+
+        def _preempt(ev, t):
+            allocs = sorted((a for a in broker.allocations()
+                             if not a.virtual and a.state == RUNNING),
+                            key=lambda a: a.alloc_id)
+            if not allocs:
+                return
+            victim = allocs[ev.target % len(allocs)]
+            deadline = t + ev.duration_s
+            if deadline < victim.expiry_t:
+                victim.walltime_s = deadline - victim.grant_t
+            broker.drain_allocation(victim.alloc_id, t)
+            # in-flight work that cannot finish inside the grace window
+            # migrates NOW (same attempt — migration is not a failure)
+            for w in sorted((w for w in workers.values()
+                             if w.busy and w.alloc is victim
+                             and w.end_t > deadline),
+                            key=lambda w: w.wid):
+                req, attempt, mark = w.req, w.attempt, w.mark_t
+                w.alloc.note_busy(max(t - mark, 0.0))
+                w.busy, w.req = False, None
+                stepper.requeue_or_fail(req, attempt, mark, t, victim,
+                                        migrate=True)
+
+        def _slow(ev, t):
+            cand = sorted((w for w in workers.values()
+                           if not w.alloc.virtual
+                           and w.alloc.state == RUNNING),
+                          key=lambda w: (w.alloc.alloc_id, w.wid))
+            if cand:
+                w = cand[ev.target % len(cand)]
+                chaos.set_slow(w.wid, ev.factor, t + ev.duration_s)
+
+        def _outage(ev, t):
+            sur = getattr(broker, "surrogate", None)
+            if sur is not None and hasattr(sur, "set_degraded"):
+                sur.set_degraded(t, t + ev.duration_s, "outage")
+
+        chaos.on("worker_crash", _crash)
+        chaos.on("preempt", _preempt)
+        chaos.on("slow_node", _slow)
+        chaos.on("surrogate_outage", _outage)
+        # journal_torn: the sim has no journal — a symmetric no-op (the
+        # chaos.fire instant still lands on the trace for parity)
+        stepper.chaos = chaos
+
+    # ---- speculative re-execution: when the queue is drained and idle
+    # real capacity exists, hedge tasks running past their model's p95
+    def hedge_check(t):
+        if straggler_factor <= 0.0 or len(broker) != 0:
+            return
+        idle = [w for w in workers.values()
+                if not w.busy and not w.alloc.virtual
+                and w.alloc.state == RUNNING]
+        if not idle:
+            return
+        cands = sorted((w for w in workers.values()
+                        if w.busy and not w.req.config.get("_surrogate")
+                        and not w.req.config.get("_speculated")),
+                       key=lambda w: (w.mark_t, w.req.task_id))
+        ids = find_stragglers(
+            t, [(w.req.task_id, w.req.model_name, w.mark_t)
+                for w in cands],
+            real_done, predictor=broker.predictor,
+            factor=straggler_factor, min_n=straggler_min_completed)
+        by_id = {w.req.task_id: w for w in cands}
+        for tid in ids[:len(idle)]:
+            w = by_id[tid]
+            w.req.config["_speculated"] = True
+            w.req.config["_no_surrogate"] = True
+            if tracer is not None:
+                tracer.task_speculate(tid, w.attempt + 1, t, w.mark_t)
+            broker.push(w.req, w.attempt + 1)
 
     # per-model cold-init costs: a calibrated/replay spec refines the
     # scalar `server_init` per model; a plain BackendSpec has no hook
@@ -319,10 +472,20 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                 f"events ({n_final}/{len(reqs)} tasks done) — check the "
                 f"autoalloc config can actually serve the trace")
         # ---- next event time ------------------------------------------
+        extra = stepper.deferred_times()       # backoff release times
+        if chaos is not None:
+            ct = chaos.next_time()
+            if ct is not None:
+                extra.append(ct)
+        # hedging needs periodic ticks while work is in flight even on a
+        # static pool (the straggler check is clock-, not event-, driven)
+        elastic = allocator is not None or (
+            straggler_factor > 0.0
+            and any(w.busy for w in workers.values()))
         nxt = next_event_time(
             arrivals, arr_i,
             (w.end_t for w in workers.values() if w.busy),
-            broker, allocator is not None, next_tick)
+            broker, elastic, next_tick, extra)
         if nxt is None:
             break                              # nothing can ever happen
         now = max(now, nxt)
@@ -342,7 +505,20 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                        if w.busy and w.end_t <= now),
                       key=lambda w: (w.end_t, w.wid))
         for w in done:
+            if not w.busy:
+                continue                       # cancelled earlier this batch
             req = w.req
+            if chaos is not None and not req.config.get("_surrogate") \
+                    and chaos.take_corruption():
+                # corrupted result: the attempt ran to completion but its
+                # output is garbage — bill the burned node-seconds and
+                # route through retry/quarantine as a fatal failure
+                w.alloc.note_busy(max(w.end_t - w.mark_t, 0.0))
+                alloc, attempt, mark = w.alloc, w.attempt, w.mark_t
+                w.busy, w.req = False, None
+                stepper.requeue_or_fail(req, attempt, mark, w.end_t,
+                                        alloc, fatal=True)
+                continue
             records.append(TaskRecord(
                 task_id=req.task_id, submit_t=req.submit_t,
                 start_t=w.start_t, end_t=w.end_t,
@@ -375,12 +551,17 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                         registry.observe("predictor_abs_residual",
                                          abs(pred - w.compute))
                 broker.predictor.observe(req, w.compute)
+            if not req.config.get("_surrogate"):
+                real_done.append((req.model_name, w.compute))
             w.busy, w.req = False, None
+            done_ids.add(req.task_id)
+            cancel_copies(req.task_id, now)    # hedge losers, if any
 
         # ---- lifecycle: the shared stepper owns transitions (capped
         # grants), walltime kills, drained-dry, and autoalloc — in the
         # ONE canonical order the live executor also runs ---------------
         stepper.step(now)
+        hedge_check(now)
 
         # ---- dispatch --------------------------------------------------
         for w in dispatch_order():
@@ -390,6 +571,11 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                               budget_left=w.alloc.budget_left(now),
                               alloc_id=w.alloc.alloc_id)
             item = broker.pop(view)
+            # a queued copy of a task that already reached a terminal
+            # state (quarantined while its hedge ran, etc.) is stale —
+            # drop it at pop, exactly as the live executor does
+            while item is not None and item[0].task_id in done_ids:
+                item = broker.pop(view)
             if item is None:
                 continue
             req, attempt = item
@@ -405,6 +591,8 @@ def simulate_cluster(spec: BackendSpec, trace: List[TraceTask], *,
                     broker.surrogate.note_served()
             else:
                 w.compute = runtimes[req.task_id]
+                if chaos is not None:
+                    w.compute *= chaos.slow_factor(w.wid, now)
                 w.init = (0.0 if req.model_name in w.warm
                           else (init_for(req.model_name)
                                 if init_for is not None

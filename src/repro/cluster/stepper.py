@@ -116,6 +116,9 @@ class LifecycleStepper:
                  tracer: Any = None, registry: Any = None,
                  calibration: Any = None,
                  on_tick: Optional[Callable[[float], None]] = None,
+                 record_quarantined: Optional[
+                     Callable[[Any, int, Allocation, float], None]] = None,
+                 retry_seed: int = 0,
                  events_cap: int = 10_000):
         self.broker = broker
         self.allocator = allocator
@@ -144,15 +147,40 @@ class LifecycleStepper:
         # spawn/retire audit trail, bounded (oldest entries drop first;
         # `events.n_dropped` says how many a long run shed)
         self.events: RingBuffer = RingBuffer(events_cap)
+        # -- hardened recovery (repro.chaos) ----------------------------
+        # terminal sink for quarantined poison tasks; record_failed is
+        # the fallback so legacy drivers need no new callback
+        self.record_quarantined = record_quarantined
+        # seed for RetryPolicy's deterministic backoff jitter — both
+        # parity drivers must carry the same one
+        self.retry_seed = int(retry_seed)
+        # optional ChaosInjector, fired at the top of every step (set
+        # post-hoc by the driver; None = fault-free)
+        self.chaos = None
+        # requeues released later than the kill (RetryPolicy backoff):
+        # (release_t, seq, request, attempt), pushed back to the broker
+        # by the first step at/after release_t.  The seq breaks ties in
+        # arrival order, deterministically.
+        self._deferred: List[Tuple[float, int, Any, int]] = []
+        self._defer_seq = 0
+        # fatal (worker-killing) failure counts per task, for quarantine
+        self._fail_counts: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> float:
-        """One canonical tick: transitions (grants + walltime kills) ->
-        drained-dry termination -> autoalloc decisions."""
+        """One canonical tick: deferred-requeue release -> chaos faults ->
+        transitions (grants + walltime kills) -> drained-dry termination
+        -> autoalloc decisions."""
         if now is None:
             now = self.now()
+        self._release_deferred(now)
+        if self.chaos is not None:
+            self.chaos.fire(now)
         self._transitions(now)
         self._drained_dry(now)
+        sur = getattr(self.broker, "surrogate", None)
+        if sur is not None and hasattr(sur, "tick_degraded"):
+            sur.tick_degraded(now)         # outage/drift re-arm point
         if self.allocator is not None:
             actions = self.allocator.step(now, self.broker, self._busy())
             if self.tracer is not None and actions:
@@ -228,16 +256,73 @@ class LifecycleStepper:
             self.tracer.alloc_state(alloc, ts=now)   # terminal span
         self.retired.append(alloc)
         for req, attempt, since in killed:
-            if attempt < self._attempt_limit(req):
+            self.requeue_or_fail(req, attempt, since, now, alloc)
+
+    # -- the one requeue-vs-quarantine-vs-fail rule ---------------------
+    def requeue_or_fail(self, req, attempt: int, since: float, now: float,
+                        alloc: Allocation, *, fatal: bool = False,
+                        migrate: bool = False) -> str:
+        """Route one killed in-flight attempt.  The caller has already
+        billed the burned ``[since, now]`` interval to the allocation;
+        this decides what happens to the TASK — requeue (immediately, or
+        deferred by the request's `RetryPolicy` backoff), quarantine
+        (``fatal=True`` failures — worker crashes, corrupted results —
+        past ``quarantine_after``), or terminal failure when attempts are
+        spent.  ``migrate=True`` (preemption-grace drain) requeues at the
+        SAME attempt with no backoff: migration is not the task's fault.
+        Returns the route taken ("requeued" | "quarantined" | "failed")."""
+        retry = getattr(req, "retry", None)
+        if fatal and retry is not None \
+                and retry.quarantine_after is not None:
+            n = self._fail_counts.get(req.task_id, 0) + 1
+            self._fail_counts[req.task_id] = n
+            if n >= retry.quarantine_after:
                 if self.tracer is not None:
-                    self.tracer.task_requeue(req.task_id, attempt, now,
-                                             since)
-                self.broker.push(req, attempt + 1)
+                    self.tracer.task_quarantined(req.task_id, attempt,
+                                                 now, since)
+                sink = self.record_quarantined or self.record_failed
+                sink(req, attempt, alloc, now)
+                return "quarantined"
+        if migrate or attempt < self._attempt_limit(req):
+            next_attempt = attempt if migrate else attempt + 1
+            release = now
+            if retry is not None and not migrate:
+                release = now + retry.backoff_s(req.task_id, attempt,
+                                                seed=self.retry_seed)
+            if self.tracer is not None:
+                self.tracer.task_requeue(req.task_id, attempt, now, since,
+                                         release=release)
+            if release > now:
+                self.defer_push(req, next_attempt, release)
             else:
-                if self.tracer is not None:
-                    self.tracer.task_killed(req.task_id, attempt, now,
-                                            since)
-                self.record_failed(req, attempt, alloc, now)
+                self.broker.push(req, next_attempt)
+            return "requeued"
+        if self.tracer is not None:
+            self.tracer.task_killed(req.task_id, attempt, now, since)
+        self.record_failed(req, attempt, alloc, now)
+        return "failed"
+
+    # -- deferred (backed-off) requeues ---------------------------------
+    def defer_push(self, req, attempt: int, release: float) -> None:
+        self._defer_seq += 1
+        self._deferred.append((float(release), self._defer_seq, req,
+                               attempt))
+
+    def deferred_times(self) -> List[float]:
+        """Pending release times — event-time candidates for the sim's
+        next-event search (a release must land ON an event time or the
+        requeue timestamp drifts off the parity trace)."""
+        return [d[0] for d in self._deferred]
+
+    def _release_deferred(self, now: float) -> None:
+        if not self._deferred:
+            return
+        due = sorted(d for d in self._deferred if d[0] <= now)
+        if not due:
+            return
+        self._deferred = [d for d in self._deferred if d[0] > now]
+        for _release, _seq, req, attempt in due:
+            self.broker.push(req, attempt)
 
     def _event(self, now: float, kind: str, alloc_id: int, n: int) -> None:
         self.events.append((now, kind, alloc_id, n))

@@ -41,6 +41,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.chaos.speculate import find_stragglers
 from repro.core.metrics import TaskRecord
 from repro.core.task import EvalRequest, EvalResult, Model
 from repro.sched import make_policy, make_predictor
@@ -328,6 +329,13 @@ class Executor:
         self._waiting: List[Tuple[EvalRequest, int]] = []   # unmet deps
         # task_id -> (request, worker, start time, attempt number)
         self._running: Dict[str, Tuple[EvalRequest, Worker, float, int]] = {}
+        # second in-flight copy of a speculatively re-executed task
+        # (first completion wins; the loser is cancelled and billed)
+        self._hedges: Dict[str, Tuple[EvalRequest, Worker, float, int]] = {}
+        # worker-killing failures per task (quarantine threshold), for
+        # the threaded path; the replay/sim path counts in the stepper
+        self._fail_counts: Dict[str, int] = {}
+        self.retry_seed = 0                    # backoff-jitter seed
         self._results: Dict[str, EvalResult] = {}
         self._requests: Dict[str, EvalRequest] = {}
         self._init_total_t = 0.0               # cumulative server-init cost
@@ -347,6 +355,7 @@ class Executor:
                 busy_count=self._busy_by_alloc,
                 worker_count=self._n_real_workers,
                 record_failed=self._record_expired,
+                record_quarantined=self._record_quarantined,
                 max_workers=max_workers, max_attempts=max_attempts,
                 retired=self._retired_allocs,
                 tracer=tracer, registry=metrics_registry,
@@ -403,14 +412,22 @@ class Executor:
             self._cv.notify()
 
     def _already_done(self, task_id: str) -> bool:
+        """Terminal states whose stale queued copies must be dropped at
+        pop: a quarantined or terminally failed task can still have a
+        hedge or requeued copy sitting in the queue."""
         with self._lock:
             return task_id in self._results and \
-                self._results[task_id].status == "ok"
+                self._results[task_id].status in ("ok", "failed",
+                                                  "quarantined")
 
     def _mark_running(self, req: EvalRequest, worker: Worker, attempt: int):
         with self._lock:
-            self._running[req.task_id] = (req, worker, self._clock(),
-                                          attempt)
+            entry = (req, worker, self._clock(), attempt)
+            if req.task_id in self._running:
+                # a second copy of a hedged task: first completion wins
+                self._hedges[req.task_id] = entry
+            else:
+                self._running[req.task_id] = entry
 
     def _note_server_init(self, init_t: float):
         with self._lock:
@@ -458,22 +475,38 @@ class Executor:
                 except Exception:  # noqa: BLE001 — enrichment is best-effort
                     pass
         with self._cv:
-            entry = self._running.pop(req.task_id, None)
+            # the completing ATTEMPT picks its own slot: a hedged task
+            # has two in-flight copies keyed by the same task_id, and
+            # billing/teardown must hit the copy that actually finished
+            entry = self._running.get(req.task_id)
+            hedge = self._hedges.get(req.task_id)
+            if hedge is not None and hedge[3] == res.attempts and \
+                    (entry is None or entry[3] != res.attempts):
+                entry = self._hedges.pop(req.task_id)
+            elif entry is not None:
+                self._running.pop(req.task_id)
             # busy billing happens HERE, under the lock, keyed on still
-            # being in _running: a task whose allocation expired was
+            # being in flight: a task whose allocation expired was
             # already billed (partial, up to the kill) by the stepper and
             # removed by _retire_group, so no double count is possible
             if entry is not None:
                 w = entry[1]
-                if w.alloc is not None and w.alloc.state != "expired":
+                if w is not None and w.alloc is not None \
+                        and w.alloc.state != "expired":
                     w.alloc.note_busy(res.cpu_time)
             prev = self._results.get(req.task_id)
-            # first success wins; "failed" is TERMINAL (recorded only once
-            # every attempt is spent — e.g. an allocation-expiry kill at
-            # max_attempts, after which the orphaned thread may still
-            # finish; matching simulate_cluster, its late result is void)
-            if prev is None or prev.status not in ("ok", "failed"):
+            # first success wins; "failed"/"quarantined" are TERMINAL
+            # (recorded only once every attempt is spent — e.g. an
+            # allocation-expiry kill at max_attempts, after which the
+            # orphaned thread may still finish; matching
+            # simulate_cluster, its late result is void)
+            if prev is None or prev.status not in ("ok", "failed",
+                                                   "quarantined"):
                 self._results[req.task_id] = res
+                # first-completion-wins: any OTHER copy of this task
+                # still in flight lost the race — cancel it, billing the
+                # partial work where it ran
+                self._cancel_copies(req.task_id)
                 if self.tracer is not None and entry is not None:
                     w = entry[1]
                     aid = (w.alloc.alloc_id if w.alloc is not None else 0)
@@ -493,18 +526,81 @@ class Executor:
             self._release_dependents()
             self._cv.notify_all()
 
+    def _cancel_copies(self, task_id: str, t: Optional[float] = None):
+        """A task just reached a terminal state: cancel any other
+        in-flight copy (the loser of a speculative hedge, or a copy
+        orphaned by quarantine), billing its partial work where it ran.
+        Runs under the dispatch lock."""
+        if t is None:
+            t = self._clock()
+        for table in (self._running, self._hedges):
+            other = table.pop(task_id, None)
+            if other is None:
+                continue
+            _oreq, ow, ot, oattempt = other
+            if ow is not None and ow.alloc is not None \
+                    and ow.alloc.state != "expired":
+                ow.alloc.note_busy(max(t - ot, 0.0))
+            if self.tracer is not None:
+                self.tracer.task_hedge_cancel(task_id, oattempt, t, ot)
+
+    def _pop_inflight(self, task_id: str, attempt: int):
+        """Remove (and return) the in-flight entry for one specific
+        attempt of a task, whichever table it landed in."""
+        entry = self._running.get(task_id)
+        if entry is not None and entry[3] == attempt:
+            return self._running.pop(task_id)
+        hedge = self._hedges.get(task_id)
+        if hedge is not None and hedge[3] == attempt:
+            return self._hedges.pop(task_id)
+        return self._running.pop(task_id, None)
+
     def _fail(self, req: EvalRequest, attempt: int, error: str,
               worker: Worker):
         with self._cv:
-            self._running.pop(req.task_id, None)
+            entry = self._pop_inflight(req.task_id, attempt)
             if self._already_done(req.task_id):
                 return
+            # hardened recovery (threaded path; the replay/sim path runs
+            # the same rules through the shared stepper): worker-killing
+            # failures count toward the task's quarantine threshold, and
+            # retried attempts honour the policy's deterministic backoff
+            retry = getattr(req, "retry", None)
+            fatal = worker is not None and getattr(worker, "crashed", False)
+            if retry is not None and fatal \
+                    and retry.quarantine_after is not None:
+                n = self._fail_counts.get(req.task_id, 0) + 1
+                self._fail_counts[req.task_id] = n
+                if n >= retry.quarantine_after:
+                    now = self._clock()
+                    self._results[req.task_id] = EvalResult(
+                        task_id=req.task_id, status="quarantined",
+                        error=error, worker=worker.name, attempts=attempt,
+                        submit_t=req.submit_t, start_t=now, end_t=now)
+                    if self.tracer is not None:
+                        since = entry[2] if entry is not None else now
+                        self.tracer.task_quarantined(req.task_id, attempt,
+                                                     now, since)
+                    self._cancel_copies(req.task_id, now)
+                    self._notify_result(req, self._results[req.task_id])
+                    self._release_dependents()
+                    self._cv.notify_all()
+                    return
             # attempts are bounded by BOTH the executor-wide limit and the
             # request's own max_attempts (which simulate_cluster honours —
             # live and sim must agree on when a task is spent)
             if attempt < min(self.max_attempts, req.max_attempts):
                 self._cv.notify_all()
-                self._push(req, attempt + 1)
+                if retry is not None and retry.base_s > 0.0 \
+                        and self._stepper is not None:
+                    # deferred requeue: the monitor's next step() past
+                    # the release time pushes it (exponential backoff
+                    # with the policy's seeded jitter)
+                    release = self._clock() + retry.backoff_s(
+                        req.task_id, attempt, seed=self.retry_seed)
+                    self._stepper.defer_push(req, attempt + 1, release)
+                else:
+                    self._push(req, attempt + 1)
             else:
                 # terminal shape matches the sim's killed_task_record:
                 # start_t == end_t (the failure instant), zero cpu time
@@ -535,11 +631,12 @@ class Executor:
             if worker in self.workers:
                 self.workers.remove(worker)
             self.policy.remove_worker(worker.wid)
-            dead = [tid for tid, (_, w, _, _) in self._running.items()
-                    if w is worker]
-            for tid in dead:
-                req, _, _, attempt = self._running.pop(tid)
-                self._push(req, attempt)       # the crash was not its fault
+            for table in (self._running, self._hedges):
+                dead = [tid for tid, (_, w, _, _) in table.items()
+                        if w is worker]
+                for tid in dead:
+                    req, _, _, attempt = table.pop(tid)
+                    self._push(req, attempt)   # the crash was not its fault
             if worker.alloc is not None and worker.alloc.virtual \
                     and worker.alloc.state == "running":
                 # the surrogate queue is served ONLY by virtual workers
@@ -688,18 +785,25 @@ class Executor:
             w.alive = False
             self.workers.remove(w)
             self.policy.remove_worker(w.wid)
-            for tid in [tid for tid, (_, rw, _, _) in self._running.items()
-                        if rw is w]:
-                req, _, t_start, attempt = self._running.pop(tid)
-                killed.append((req, attempt, t_start))
+            for table in (self._running, self._hedges):
+                for tid in [tid for tid, (_, rw, _, _) in table.items()
+                            if rw is w]:
+                    req, _, t_start, attempt = table.pop(tid)
+                    killed.append((req, attempt, t_start))
         return killed
 
     def _busy_by_alloc(self) -> Dict[int, int]:
         busy: Dict[int, int] = {}
-        for _req, w, _t, _a in self._running.values():
-            if w.alloc is not None:
-                busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id, 0) + 1
+        for table in (self._running, self._hedges):
+            for _req, w, _t, _a in table.values():
+                if w is not None and w.alloc is not None:
+                    busy[w.alloc.alloc_id] = busy.get(w.alloc.alloc_id,
+                                                      0) + 1
         return busy
+
+    def _worker_busy(self, worker: Worker) -> bool:
+        return any(e[1] is worker for e in self._running.values()) or \
+            any(e[1] is worker for e in self._hedges.values())
 
     def _record_expired(self, req, attempt, alloc, now: float):
         """Terminal record for a walltime-killed task with every attempt
@@ -711,6 +815,22 @@ class Executor:
             error="allocation expired", worker=f"alloc{alloc.alloc_id}",
             attempts=attempt, submit_t=req.submit_t,
             start_t=now, end_t=now)
+        self._cancel_copies(req.task_id, now)
+        self._notify_result(req, self._results[req.task_id])
+        self._release_dependents()
+
+    def _record_quarantined(self, req, attempt, alloc, now: float):
+        """Terminal record for a task quarantined by the stepper's
+        retry rule (N worker-killing failures): canonical killed shape
+        with status 'quarantined'."""
+        if self._already_done(req.task_id):
+            return
+        self._results[req.task_id] = EvalResult(
+            task_id=req.task_id, status="quarantined",
+            error="quarantined after repeated worker-killing failures",
+            worker=f"alloc{alloc.alloc_id}", attempts=attempt,
+            submit_t=req.submit_t, start_t=now, end_t=now)
+        self._cancel_copies(req.task_id, now)
         self._notify_result(req, self._results[req.task_id])
         self._release_dependents()
 
@@ -740,60 +860,66 @@ class Executor:
 
     def _straggler_check(self, now: float):
         """Speculatively re-issue tasks running far beyond their MODEL'S
-        p95.  A pooled p95 misfires on heterogeneous models: the fast
+        p95 (`repro.chaos.find_stragglers` — the one ladder the simulator
+        also runs, so a parity replay hedges the same tasks at the same
+        times).  A pooled p95 misfires on heterogeneous models: the fast
         model's p95 re-issues every healthy task of a slow model, doubling
-        exactly the work that is already the bottleneck.  Per model:
-        predictor quantile first, then a scan of that model's completions,
-        then the pooled estimate (a model with too few completions of its
-        own still gets straggler protection)."""
+        exactly the work that is already the bottleneck.
 
-        def scan_p95(xs):
-            xs = sorted(xs)
-            return xs[int(0.95 * (len(xs) - 1))]
-
+        Cluster mode is capacity-gated: hedges launch only when the queue
+        is drained and idle real workers exist (at most one hedge per
+        idle worker per tick), and the copy runs as ``attempt + 1`` so
+        its trace span is distinguishable from the original's.  The
+        plain-pool path keeps the legacy ungated behaviour."""
         with self._lock:
-            min_n = self.straggler_min_completed
-            done_by_model: Dict[str, List[float]] = {}
+            if self.straggler_factor <= 0.0:
+                return
+            completions = []
             for tid, r in self._results.items():
                 if r.status != "ok" or r.worker.endswith("-surrogate"):
                     continue       # ms-scale surrogate hits would crater p95
                 r_req = self._requests.get(tid)
-                if r_req is None:
-                    continue
-                done_by_model.setdefault(r_req.model_name,
-                                         []).append(r.compute_t)
-            done = [t for ts in done_by_model.values() for t in ts]
-            if len(done) < min_n:
-                return
-            pooled = (self.predictor.quantile(0.95)
-                      if self.predictor is not None else None)
-            if pooled is None:
-                pooled = scan_p95(done)
-            # one p95 per MODEL per tick (not per running task): the
-            # scan sorts each model's completion list exactly once
-            scan_by_model = {m: scan_p95(ts)
-                             for m, ts in done_by_model.items()
-                             if len(ts) >= min_n}
-            n_obs = getattr(self.predictor, "n_observed", None)
-            for tid, (req, w, t_start, _) in list(self._running.items()):
-                p95 = None
-                if self.predictor is not None and callable(n_obs) \
-                        and n_obs(req.model_name) >= min_n:
-                    p95 = self.predictor.quantile(0.95, req.model_name)
-                if p95 is None:
-                    p95 = scan_by_model.get(req.model_name)
-                if p95 is None:
-                    p95 = pooled               # pooled fallback
-                cutoff = self.straggler_factor * max(p95, 1e-3)
-                if now - t_start > cutoff and \
-                        not req.config.get("_speculated"):
-                    req.config["_speculated"] = True
-                    # the copy must duplicate the SAME work: re-deciding
-                    # the serving path here could stamp _surrogate on the
-                    # shared config while the real attempt is in flight,
-                    # and a first-to-finish GP answer would silently
-                    # replace (and discard) the real result
-                    req.config["_no_surrogate"] = True
+                if r_req is not None:
+                    completions.append((r_req.model_name, r.compute_t))
+            idle_n = None
+            if self._cluster_mode:
+                if len(self.policy):
+                    return         # hedge on SPARE capacity only
+                idle_n = len([w for w in self.workers
+                              if w.alloc is not None and not w.alloc.virtual
+                              and w.alloc.state == "running"
+                              and not self._worker_busy(w)])
+                if idle_n == 0:
+                    return
+            cands = sorted(((tid, req.model_name, t_start, attempt)
+                            for tid, (req, _w, t_start, attempt)
+                            in self._running.items()
+                            if not req.config.get("_speculated")
+                            and not req.config.get("_surrogate")),
+                           key=lambda c: (c[2], c[0]))
+            ids = find_stragglers(
+                now, [(c[0], c[1], c[2]) for c in cands], completions,
+                predictor=self.predictor, factor=self.straggler_factor,
+                min_n=self.straggler_min_completed)
+            if idle_n is not None:
+                ids = ids[:idle_n]
+            by_id = {c[0]: c for c in cands}
+            for tid in ids:
+                _, _, t_start, attempt = by_id[tid]
+                req = self._running[tid][0]
+                req.config["_speculated"] = True
+                # the copy must duplicate the SAME work: re-deciding the
+                # serving path here could stamp _surrogate on the shared
+                # config while the real attempt is in flight, and a
+                # first-to-finish GP answer would silently replace (and
+                # discard) the real result
+                req.config["_no_surrogate"] = True
+                if self._cluster_mode:
+                    if self.tracer is not None:
+                        self.tracer.task_speculate(tid, attempt + 1, now,
+                                                   t_start)
+                    self._push(req, attempt + 1)
+                else:
                     self._push(req, 1)
 
     # ------------------------------------------------------------------
@@ -824,6 +950,8 @@ class Executor:
                     "max_attempts": r.max_attempts,
                     "deadline": r.deadline,
                     "tenant": r.tenant,
+                    "retry": (dataclasses.asdict(r.retry)
+                              if r.retry is not None else None),
                     "depends_on": list(r.depends_on),
                 } for r in pending],
                 "predictor": sd() if callable(sd) else None,

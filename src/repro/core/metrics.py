@@ -60,6 +60,19 @@ def killed_task_record(task_id: str, submit_t: float, now: float,
         attempts=attempts, status="failed")
 
 
+def quarantined_task_record(task_id: str, submit_t: float, now: float,
+                            alloc_id: int, attempts: int) -> TaskRecord:
+    """Terminal record for a poison task quarantined after repeatedly
+    killing workers (`RetryPolicy.quarantine_after`): same canonical
+    killed shape as `killed_task_record` — zero cpu/compute, the burned
+    partial work billed to the allocation — but a distinct terminal
+    status so quarantines are countable and never retried."""
+    return TaskRecord(
+        task_id=task_id, submit_t=submit_t, start_t=now, end_t=now,
+        cpu_time=0.0, compute_t=0.0, worker=f"alloc{alloc_id}",
+        attempts=attempts, status="quarantined")
+
+
 @dataclasses.dataclass
 class AllocationRecord:
     """One bulk allocation's lifetime (the `repro.cluster` analogue of

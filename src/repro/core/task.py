@@ -12,6 +12,7 @@ distinct from the *time limit* safety bound).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -85,6 +86,48 @@ class LambdaModel(Model):
             self._warmup_fn()
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Hardened requeue semantics for one request (repro.chaos).
+
+    Requeues after a *fatal* attempt (worker crash, corrupted result) are
+    released ``backoff_s`` seconds later instead of immediately, with
+    exponential growth per attempt and a deterministic seeded jitter —
+    ``backoff_s(task_id, attempt, seed)`` is a pure function, so the sim
+    and the live replay compute byte-identical release times (pinned by
+    the parity suite).  ``quarantine_after`` caps fatal failures: once a
+    task has killed that many workers it is quarantined (terminal
+    ``quarantined`` record) instead of crash-looping forever.
+
+    The default-constructed policy (all zeros, no quarantine) is
+    semantically identical to ``retry=None`` for timing, so traces stamped
+    with it stay comparable to legacy runs.
+    """
+    base_s: float = 0.0              # first-retry backoff (0 = immediate)
+    factor: float = 2.0              # exponential growth per attempt
+    max_s: float = 60.0              # backoff ceiling
+    jitter: float = 0.0              # +/- fraction of the backoff, seeded
+    quarantine_after: Optional[int] = None   # fatal failures before terminal
+
+    def backoff_s(self, task_id: str, attempt: int, seed: int = 0) -> float:
+        """Deterministic backoff before re-releasing `attempt`'s requeue.
+
+        The jitter draw hashes (seed, task_id, attempt) — not global RNG
+        state — so any driver, in any completion order, on any host,
+        computes the same delay."""
+        if self.base_s <= 0.0:
+            return 0.0
+        raw = self.base_s * (self.factor ** max(attempt - 1, 0))
+        delay = min(raw, self.max_s)
+        if self.jitter > 0.0:
+            digest = hashlib.blake2b(
+                f"{seed}:{task_id}:{attempt}".encode(),
+                digest_size=8).digest()
+            u = int.from_bytes(digest, "big") / 2.0 ** 64   # [0, 1)
+            delay *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return max(delay, 0.0)
+
+
 @dataclasses.dataclass
 class EvalRequest:
     """One F(theta) evaluation travelling through the load balancer."""
@@ -108,10 +151,15 @@ class EvalRequest:
     # fair-share scheduling, quotas, and per-tenant SLO accounting only
     # engage when requests carry distinct tenants
     tenant: str = DEFAULT_TENANT
+    # hardened requeue semantics (None = legacy immediate requeue); a
+    # plain dict (journal round trip) is rehydrated into a RetryPolicy
+    retry: Optional[Any] = None
 
     def __post_init__(self):
         if not self.task_id:
             self.task_id = f"task-{next(_task_counter)}"
+        if isinstance(self.retry, dict):
+            self.retry = RetryPolicy(**self.retry)
         # submit_t is stamped by whoever owns the clock: `Executor.submit`
         # (its injected clock) or the simulator (trace arrival time).  A
         # wall-clock default here would leak `time.monotonic` into
@@ -122,7 +170,7 @@ class EvalRequest:
 class EvalResult:
     task_id: str
     value: Any = None
-    status: str = "ok"                        # ok | failed | timeout
+    status: str = "ok"            # ok | failed | timeout | quarantined
     error: Optional[str] = None
     worker: str = ""
     attempts: int = 1

@@ -11,19 +11,32 @@ the span trace:
                  autoalloc bootstrap / SLURM-queue share of the wait);
   dispatch_s   — dispatch decision -> occupancy (the per-task dispatch
                  latency the paper measures in milliseconds on HQ);
-  retry_s      — work burned by walltime kills: each killed attempt's
-                 ``[dispatch mark, kill]`` interval (its partial init +
-                 run cannot be split from the trace — the attempt never
-                 completed — so the whole interval is retry);
+  retry_s      — work burned by walltime kills plus retry backoff: each
+                 killed attempt's ``[dispatch mark, release]`` interval
+                 (its partial init + run cannot be split from the trace
+                 — the attempt never completed — so the whole interval
+                 is retry; with a `RetryPolicy` the interval extends
+                 through the backoff delay to the requeue release);
+  quarantine_s — the final burned interval of a poison task that was
+                 quarantined after killing `quarantine_after` workers
+                 (earlier burned attempts are retry_s as usual);
+  speculation_s— hedged-execution surcharge: for tasks that were
+                 speculatively re-executed (``task.speculate`` /
+                 ``task.hedge_cancel`` in the trace), the share of the
+                 record's overhead not explained by the winner lineage's
+                 queue/dispatch/retry components — the loser lineage's
+                 cost.  Exactly zero for non-hedged tasks;
   init_s       — reported alongside, NOT summed into overhead: the
                  final attempt's server init is part of ``cpu_time`` by
                  the §IV-A definition, but it is the cost warm-start
                  scheduling exists to avoid, so the breakdown surfaces
                  it.
 
-Additivity: ``queue_wait + alloc_wait + dispatch + retry`` equals the
-record's unclamped overhead exactly for tasks that completed or were
-killed (see `tests/test_obs.py`); `attribute_overhead` returns per-task
+Additivity: ``queue_wait + alloc_wait + dispatch + retry + quarantine +
+speculation`` equals the record's unclamped overhead exactly for tasks
+that completed or were killed (see `tests/test_obs.py` and the hard
+assert in `benchmarks/overhead_attribution.py`, which covers hedged
+runs); `attribute_overhead` returns per-task
 breakdowns plus aggregate totals, and the drivers surface the totals in
 `Executor.metrics()["overhead_attribution"]` and
 `ClusterResult.overhead_attribution`.
@@ -41,7 +54,7 @@ import dataclasses
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 _TERMINAL = ("task.ok", "task.failed", "task.timeout", "task.killed",
-             "task.lost")
+             "task.lost", "task.quarantined")
 
 
 @dataclasses.dataclass
@@ -52,6 +65,8 @@ class OverheadBreakdown:
     alloc_wait_s: float = 0.0
     dispatch_s: float = 0.0
     retry_s: float = 0.0
+    quarantine_s: float = 0.0
+    speculation_s: float = 0.0
     init_s: float = 0.0           # informational: final-attempt init
     status: str = ""
 
@@ -60,13 +75,15 @@ class OverheadBreakdown:
         """The §IV-A overhead this breakdown decomposes (init excluded:
         it is cpu_time by definition)."""
         return (self.queue_wait_s + self.alloc_wait_s + self.dispatch_s
-                + self.retry_s)
+                + self.retry_s + self.quarantine_s + self.speculation_s)
 
     def as_dict(self) -> Dict[str, float]:
         return {"queue_wait_s": self.queue_wait_s,
                 "alloc_wait_s": self.alloc_wait_s,
                 "dispatch_s": self.dispatch_s,
                 "retry_s": self.retry_s,
+                "quarantine_s": self.quarantine_s,
+                "speculation_s": self.speculation_s,
                 "init_s": self.init_s,
                 "overhead_s": self.overhead_s}
 
@@ -133,6 +150,8 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
     deadline_of: Dict[str, float] = {}
     cpu_of: Dict[str, float] = {}
     end_of: Dict[str, float] = {}
+    submit_of: Dict[str, float] = {}
+    hedged: set = set()
 
     def task(args) -> Optional[OverheadBreakdown]:
         tid = args.get("task") if args else None
@@ -153,6 +172,8 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
         elif name == "task.queued" and ph == "i" and args:
             tid = args.get("task")
             if tid is not None:
+                if tid not in submit_of or ts < submit_of[tid]:
+                    submit_of[tid] = ts
                 if "tenant" in args:
                     tenant_of[tid] = args["tenant"]
                 if "deadline" in args:
@@ -177,15 +198,46 @@ def attribute_overhead(events: Iterable) -> Dict[str, Any]:
         elif name in ("task.requeue", "task.killed") and ph == "i":
             bd = task(args)
             if bd is not None and args and "since" in args:
-                bd.retry_s += max(ts - float(args["since"]), 0.0)
+                # a backoff requeue is *released* later than the kill;
+                # the retry interval runs to the release so it abuts the
+                # next attempt's queued span (additivity)
+                until = float(args.get("release", ts))
+                bd.retry_s += max(until - float(args["since"]), 0.0)
+        elif name == "task.quarantined" and ph == "i":
+            bd = task(args)
+            if bd is not None and args and "since" in args:
+                bd.quarantine_s += max(ts - float(args["since"]), 0.0)
+        elif name in ("task.speculate", "task.hedge_cancel") \
+                and ph == "i" and args:
+            tid = args.get("task")
+            if tid is not None:
+                hedged.add(tid)
         if name in _TERMINAL and ph == "i":
             bd = task(args)
             if bd is not None:
                 bd.status = name.split(".", 1)[1]
                 end_of[bd.task_id] = ts
 
+    # hedged tasks: the loser lineage's cost never shows up as spans
+    # (its queued entry is dropped at hedge_cancel), so the record's
+    # overhead exceeds what the winner-lineage components explain.  The
+    # remainder IS the speculation surcharge — assigned by balancing
+    # against the trace-measured overhead so the decomposition stays
+    # exactly additive.
+    for tid in hedged:
+        bd = tasks.get(tid)
+        end = end_of.get(tid)
+        sub = submit_of.get(tid)
+        if bd is None or end is None or sub is None:
+            continue
+        measured = max((end - sub) - cpu_of.get(tid, 0.0), 0.0)
+        accounted = (bd.queue_wait_s + bd.alloc_wait_s + bd.dispatch_s
+                     + bd.retry_s + bd.quarantine_s)
+        bd.speculation_s = max(measured - accounted, 0.0)
+
     totals = {"queue_wait_s": 0.0, "alloc_wait_s": 0.0, "dispatch_s": 0.0,
-              "retry_s": 0.0, "init_s": 0.0, "overhead_s": 0.0}
+              "retry_s": 0.0, "quarantine_s": 0.0, "speculation_s": 0.0,
+              "init_s": 0.0, "overhead_s": 0.0}
     by_tenant: Dict[str, Dict[str, float]] = {}
     for bd in tasks.values():
         d = bd.as_dict()
@@ -223,7 +275,8 @@ def format_breakdown(result: Dict[str, Any]) -> str:
     overhead = totals["overhead_s"]
     lines = [f"overhead attribution over {result['n_tasks']} tasks "
              f"(total {overhead:.3f}s):"]
-    for key in ("queue_wait_s", "alloc_wait_s", "dispatch_s", "retry_s"):
+    for key in ("queue_wait_s", "alloc_wait_s", "dispatch_s", "retry_s",
+                "quarantine_s", "speculation_s"):
         share = totals[key] / overhead if overhead > 0 else 0.0
         lines.append(f"  {key:<13} {totals[key]:>12.3f}s  "
                      f"({share:6.1%})")

@@ -654,7 +654,8 @@ class CalibrationMonitor:
     def __init__(self, spec: BackendSpec, *, registry: Any = None,
                  tracer: Any = None, window: int = 64,
                  drift_logratio: float = math.log(2.0),
-                 min_n: int = 8, eps: float = 1e-6):
+                 min_n: int = 8, eps: float = 1e-6,
+                 on_alarm: Any = None):
         self.spec = spec
         self.registry = registry
         self.tracer = tracer
@@ -662,6 +663,10 @@ class CalibrationMonitor:
         self.drift_logratio = float(drift_logratio)
         self.min_n = int(min_n)
         self.eps = float(eps)
+        # callback fired (best-effort) on every drift alarm with
+        # (alarm_dict, now) — e.g. SurrogateOffload.note_drift_alarm, so
+        # a drifting cost model auto-disables offload for a cool-down
+        self.on_alarm = on_alarm
         self._ratios: Dict[str, deque] = {}
         self._armed: Dict[str, bool] = {}
         self.alarms: List[Dict[str, Any]] = []
@@ -770,6 +775,11 @@ class CalibrationMonitor:
                       "mean_logratio": float(mean),
                       "predicted": float(predicted),
                       "observed": float(observed)})
+        if self.on_alarm is not None:
+            try:
+                self.on_alarm(alarm, now)
+            except Exception:  # noqa: BLE001 — alarms must never kill a run
+                pass
 
     def summary(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"n_observed": self.n_observed,

@@ -24,6 +24,7 @@ Event model (Chrome trace-event phases):
     parity-exact and monotone per track;
   * instants for scheduling decisions: ``offload.decide``,
     ``task.steal``, ``task.migrate``, ``task.requeue``, ``task.killed``,
+    ``task.quarantined``, ``task.speculate``, ``task.hedge_cancel``,
     ``alloc.spawn`` / ``alloc.kill`` / ``alloc.drain-dry`` /
     ``alloc.cancel``, ``autoalloc.submit`` / ``autoalloc.drain``, and
     ``gp.predict_batch`` compile-shape launches.
@@ -227,21 +228,65 @@ class Tracer:
         self.instant(f"task.{status}", ts=end_t, pid=0, tid=tid, args=a)
 
     def task_requeue(self, task_id: str, attempt: int, now: float,
-                     since: float) -> None:
+                     since: float,
+                     release: Optional[float] = None) -> None:
         """An in-flight attempt died with its allocation and was requeued
         at attempt+1.  ``since`` is the killed attempt's dispatch mark:
-        the burned ``[since, now]`` interval is retry overhead."""
+        the burned ``[since, now]`` interval is retry overhead.  With a
+        `RetryPolicy` backoff the requeue is *released* later than the
+        kill; ``release`` extends the retry interval to ``[since,
+        release]`` (omitted when the requeue is immediate, which keeps
+        legacy traces byte-identical)."""
         self._close_queued(task_id, attempt, since)
+        args: dict = {"task": task_id, "attempt": attempt,
+                      "since": float(since)}
+        if release is not None and release > now:
+            args["release"] = float(release)
         self.instant("task.requeue", ts=now, pid=0,
-                     tid=self._tid(task_id),
-                     args={"task": task_id, "attempt": attempt,
-                           "since": float(since)})
+                     tid=self._tid(task_id), args=args)
 
     def task_killed(self, task_id: str, attempt: int, now: float,
                     since: float) -> None:
         """Killed with every attempt spent (terminal walltime kill)."""
         self._close_queued(task_id, attempt, since)
         self.instant("task.killed", ts=now, pid=0,
+                     tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt,
+                           "since": float(since)})
+
+    def task_quarantined(self, task_id: str, attempt: int, now: float,
+                         since: float) -> None:
+        """Poison task quarantined: it killed `quarantine_after` workers
+        and is terminal instead of requeued (repro.chaos hardening).
+        Same shape as `task_killed` — burned ``[since, now]`` billed to
+        the allocation — under a distinct terminal name."""
+        self._close_queued(task_id, attempt, since)
+        self.instant("task.quarantined", ts=now, pid=0,
+                     tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt,
+                           "since": float(since)})
+
+    def task_hedge_cancel(self, task_id: str, attempt: int, now: float,
+                          since: float) -> None:
+        """The losing copy of a speculatively re-executed task was
+        cancelled at the winner's completion.  The loser's pending queued
+        entry is dropped WITHOUT emitting a span — the loser lineage is
+        accounted as a single `speculation` overhead component
+        (`obs.attribution`), not as queue/dispatch time — and the burned
+        ``[since, now]`` interval (zero when the loser never dispatched)
+        feeds billing conservation."""
+        self._queued.pop((task_id, attempt), None)
+        self.instant("task.hedge_cancel", ts=now, pid=0,
+                     tid=self._tid(task_id),
+                     args={"task": task_id, "attempt": attempt,
+                           "since": float(since)})
+
+    def task_speculate(self, task_id: str, attempt: int, now: float,
+                       since: float) -> None:
+        """A p95-straggler hedge copy was pushed at ``attempt``.
+        ``since`` is the original attempt's dispatch mark (what made it a
+        straggler)."""
+        self.instant("task.speculate", ts=now, pid=0,
                      tid=self._tid(task_id),
                      args={"task": task_id, "attempt": attempt,
                            "since": float(since)})

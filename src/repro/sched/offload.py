@@ -83,6 +83,7 @@ class SurrogateOffload:
                  latency_s: float = 0.05, n_virtual_workers: int = 1,
                  condition_every: int = 8, max_points: int = 256,
                  sd_window: int = 4096, backend: str = "exact",
+                 drift_disable_s: float = 300.0,
                  **backend_kw):
         from repro.uq import engine as uq_engine
         self.backend = backend
@@ -111,6 +112,13 @@ class SurrogateOffload:
         # optional repro.obs.Tracer: decide() emits an `offload.decide`
         # instant per decision (set by Broker.set_tracer / the executor)
         self.tracer = None
+        # degraded state: while set, every decision is "real path" —
+        # armed by a surrogate outage fault or a calib.drift alarm
+        # (`note_drift_alarm`), re-armed by `tick_degraded` once the
+        # cool-down passes (the stepper ticks it each step)
+        self.degraded_until: Optional[float] = None
+        self.degraded_reason: Optional[str] = None
+        self.drift_disable_s = float(drift_disable_s)
         # recency cap on the conditioned training set (mirrors
         # GPRuntimePredictor.max_points): without it every batch of
         # completions grows N forever — O(N^3) Cholesky rebuilds and a
@@ -191,6 +199,8 @@ class SurrogateOffload:
             eng = self._engine
         if req.config.get(NO_SURROGATE_KEY):
             return False                       # pinned to the real path
+        if self.degraded_until is not None:
+            return False                       # outage / drift cool-down
         if self.model_name is not None and \
                 req.model_name != self.model_name:
             return False                       # not this surrogate's model
@@ -233,6 +243,44 @@ class SurrogateOffload:
         this where the live path counts inside `evaluate`)."""
         with self._lock:
             self.n_evals += 1
+
+    # -- degradation (outage faults, drift alarms) -----------------------
+    def set_degraded(self, now: float, until: float,
+                     reason: str = "outage") -> None:
+        """Disable offload until ``until`` (every `_decide` answers
+        "real path").  Emits one ``offload.degraded`` instant on the
+        healthy->degraded edge; an extension while already degraded
+        just moves the deadline."""
+        with self._lock:
+            was_healthy = self.degraded_until is None
+            self.degraded_until = float(until)
+            self.degraded_reason = str(reason)
+        if was_healthy and self.tracer is not None:
+            self.tracer.instant("offload.degraded", ts=now,
+                                args={"degraded": True, "reason": reason})
+
+    def tick_degraded(self, now: float) -> None:
+        """Re-arm once the cool-down has passed (called from
+        `LifecycleStepper.step`, so sim and live re-arm at the same
+        virtual instant)."""
+        with self._lock:
+            until = self.degraded_until
+            if until is None or now < until:
+                return
+            reason = self.degraded_reason
+            self.degraded_until = None
+            self.degraded_reason = None
+        if self.tracer is not None:
+            self.tracer.instant("offload.degraded", ts=now,
+                                args={"degraded": False, "reason": reason})
+
+    def note_drift_alarm(self, alarm: Any, now: float) -> None:
+        """`CalibrationMonitor.on_alarm` adapter: a drifting cost model
+        means the offload economics (and trust region) are suspect —
+        cool off for `drift_disable_s` seconds."""
+        phase = (alarm or {}).get("phase", "?")
+        self.set_degraded(now, now + self.drift_disable_s,
+                          reason=f"drift:{phase}")
 
     # -- surrogate serving ----------------------------------------------
     def evaluate(self, parameters) -> List[List[float]]:

@@ -87,6 +87,9 @@ class ServiceBroker:
     journal_keep:    journals retained (keep-N gc).
     registry:        `MetricsRegistry` for tenant-labelled series (one
                      is created when omitted).
+    fault_plan:      optional `repro.chaos.FaultPlan` wired into the
+                     live executor via `attach_chaos` (crash drills,
+                     torn-journal tests); None = no fault injection.
     executor_kw:     everything else (`n_workers`, `autoalloc`, `clock`,
                      `monitor_interval`, `tracer`, ...) is passed to the
                      `Executor` — a virtual-clock service for tests is
@@ -103,6 +106,7 @@ class ServiceBroker:
                  journal_every_s: float = 5.0,
                  journal_keep: int = 3,
                  registry: Optional[MetricsRegistry] = None,
+                 fault_plan: Any = None,
                  **executor_kw):
         self.weights = {str(t): float(w)
                         for t, w in (weights or {}).items()}
@@ -142,6 +146,11 @@ class ServiceBroker:
             self._writer = threading.Thread(target=self._writer_loop,
                                             daemon=True)
             self._writer.start()
+        self.chaos = None
+        if fault_plan is not None and len(fault_plan):
+            from repro.chaos.inject import attach_chaos
+            self.chaos = attach_chaos(self._ex, fault_plan,
+                                      journal=self._journal)
 
     # ------------------------------------------------------------------
     # ingestion

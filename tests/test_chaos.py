@@ -1,0 +1,432 @@
+"""`repro.chaos`: deterministic fault injection + hardened recovery.
+
+The contract under test: a seeded `FaultPlan` produces IDENTICAL fault
+sequences — and identical recovery — in `simulate_cluster` and the live
+replay driver, so `run_parity` stays exact with crashes, preemptions,
+corrupted results, slow nodes and backoff-jittered requeues in play.
+Plus the hardening satellites: torn-journal recovery, the conservation
+`InvariantChecker`, quarantine thresholds, offload degradation wiring,
+and the speculation/quarantine overhead-attribution components.
+"""
+from collections import Counter
+
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.chaos import (ChaosInjector, FaultEvent, FaultPlan,
+                         InvariantChecker, attach_chaos)
+from repro.checkpoint.journal import Journal
+from repro.cluster import AutoAllocConfig, TraceTask, simulate_cluster
+from repro.cluster.parity import run_parity
+from repro.core import backends
+from repro.core.task import RetryPolicy
+from repro.obs import Tracer, span_sequence
+from repro.obs.calib import CalibrationMonitor
+from repro.sched.offload import SurrogateOffload
+
+
+def _elastic_cfg() -> AutoAllocConfig:
+    return AutoAllocConfig(workers_per_alloc=2, walltime_s=300.0,
+                           backlog_high_s=10.0, backlog_low_s=2.0,
+                           max_pending=3, max_allocations=6,
+                           min_allocations=1, idle_drain_s=30.0,
+                           hysteresis_s=5.0)
+
+
+def _hedge_trace():
+    """14 short tasks + 2 stragglers: the queue drains, the stragglers
+    run past 4x p95 and idle workers hedge them."""
+    trace = [TraceTask(t=float(i) * 0.5, runtime=2.0) for i in range(14)]
+    trace += [TraceTask(t=7.0, runtime=120.0),
+              TraceTask(t=7.5, runtime=90.0)]
+    return trace
+
+
+# --------------------------------------------------------------------------
+# FaultPlan / ChaosInjector mechanics
+# --------------------------------------------------------------------------
+def test_fault_plan_sorted_and_validated():
+    plan = FaultPlan(events=(
+        FaultEvent(t=20.0, kind="preempt", duration_s=30.0),
+        FaultEvent(t=5.0, kind="worker_crash", target=3),
+        FaultEvent(t=5.0, kind="worker_crash", target=1),
+    ))
+    assert [e.t for e in plan.events] == [5.0, 5.0, 20.0]
+    assert [e.target for e in plan.events[:2]] == [1, 3]
+    assert len(plan) == 3
+    assert plan.kinds() == {"worker_crash": 2, "preempt": 1}
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="meteor_strike")
+
+
+def test_fault_plan_roundtrip_and_seeded_generation():
+    rates = {"worker_crash": 1 / 100.0, "preempt": 1 / 200.0}
+    a = FaultPlan.generate(seed=11, horizon_s=500.0, rates=rates)
+    b = FaultPlan.generate(seed=11, horizon_s=500.0, rates=rates)
+    c = FaultPlan.generate(seed=12, horizon_s=500.0, rates=rates)
+    assert a.events == b.events                 # seeded: reproducible
+    assert a.events != c.events
+    assert len(a) > 0
+    assert FaultPlan.from_dicts(a.to_dicts()).events == a.events
+
+
+def test_injector_fires_in_order_and_tracks_state():
+    plan = FaultPlan(events=(
+        FaultEvent(t=1.0, kind="worker_crash"),
+        FaultEvent(t=2.0, kind="corrupt_result"),
+        FaultEvent(t=9.0, kind="worker_crash"),
+    ))
+    inj = ChaosInjector(plan)
+    seen = []
+    inj.on("worker_crash", lambda ev, now: seen.append((ev.t, now)))
+    assert inj.next_time() == 1.0
+    assert inj.fire(5.0) == 2                  # crash + corrupt due
+    assert seen == [(1.0, 5.0)]
+    assert inj.take_corruption() is True       # pending counter consumed
+    assert inj.take_corruption() is False
+    assert inj.next_time() == 9.0
+    inj.set_slow(wid=2, factor=3.0, until=20.0)
+    assert inj.slow_factor(2, 10.0) == 3.0
+    assert inj.slow_factor(2, 25.0) == 1.0     # expired, dropped
+    assert inj.slow_factor(7, 10.0) == 1.0
+
+
+def test_attach_chaos_arms_journal_torn_writes(tmp_path):
+    class _FakeExecutor:
+        workers = ()
+        tracer = None
+        _broker = None
+        _stepper = None
+
+    journal = Journal(tmp_path / "j")
+    ex = _FakeExecutor()
+    inj = attach_chaos(
+        ex, FaultPlan(events=(FaultEvent(t=3.0, kind="journal_torn"),)),
+        journal=journal)
+    assert ex._chaos is inj
+    assert journal.torn_next is False
+    inj.fire(5.0)
+    assert journal.torn_next is True
+
+
+# --------------------------------------------------------------------------
+# faulted differential parity: every recovery path, still exact
+# --------------------------------------------------------------------------
+def test_faulted_parity_exact_with_all_recovery_paths():
+    """crash + preemption-with-migration + result corruption +
+    straggler hedging in one run: sim and live agree on records, alloc
+    events, billing AND span sequences, and every conservation
+    invariant holds on both sides."""
+    spec = backends.get("hq")
+    plan = FaultPlan(events=(
+        FaultEvent(t=12.0, kind="worker_crash", target=1),
+        FaultEvent(t=20.0, kind="preempt", target=0, duration_s=15.0),
+        FaultEvent(t=31.0, kind="corrupt_result", target=0),
+    ))
+    retry = RetryPolicy(base_s=1.0, factor=2.0, max_s=20.0, jitter=0.3,
+                        quarantine_after=3)
+    ts, tl = Tracer(), Tracer()
+    rep = run_parity(spec, _hedge_trace(), autoalloc=_elastic_cfg(),
+                     max_workers=12, seed=5, max_attempts=6,
+                     fault_plan=plan, retry_policy=retry,
+                     straggler_factor=4.0, straggler_min_completed=5,
+                     tracers=(ts, tl))
+    assert rep.ok, rep.divergences[:5]
+    assert Counter(r.status for r in rep.sim.records) == {"ok": 16}
+
+    counts = Counter(e[2] for e in ts.events())
+    assert counts["chaos.fire"] == 3
+    assert counts["task.requeue"] >= 1         # crash / corruption retry
+    assert counts["task.migrate"] >= 1         # preemption grace drain
+    assert counts["task.speculate"] >= 1       # straggler hedged
+    assert counts["task.hedge_cancel"] >= 1    # loser cancelled
+    # the observability layer inherits the no-forked-logic guarantee
+    assert span_sequence(ts) == span_sequence(tl)
+
+    checker = InvariantChecker()
+    expected = [f"trace-{i}" for i in range(16)]
+    for res, tr in ((rep.sim, ts), (rep.live, tl)):
+        inv = checker.check(records=res.records,
+                            allocations=res.allocations,
+                            events=tr.events(), expected_tasks=expected)
+        assert inv.ok, inv.violations[:5]
+
+
+def test_backoff_jitter_requeue_timestamps_pinned():
+    """The seeded differential test the issue asks for: with exponential
+    backoff + jitter, both drivers emit bit-identical requeue release
+    timestamps, and the poison task quarantines at the threshold."""
+    spec = backends.get("hq")
+    trace = [TraceTask(t=0.0, runtime=500.0)]
+    plan = FaultPlan(events=tuple(
+        FaultEvent(t=10.0 + 20.0 * i, kind="worker_crash", target=0)
+        for i in range(4)))
+    retry = RetryPolicy(base_s=1.0, factor=2.0, jitter=0.2,
+                        quarantine_after=3)
+    ts, tl = Tracer(), Tracer()
+    rep = run_parity(spec, trace, n_workers=1, seed=2, max_attempts=10,
+                     fault_plan=plan, retry_policy=retry,
+                     tracers=(ts, tl))
+    assert rep.ok, rep.divergences[:5]
+    assert [r.status for r in rep.sim.records] == ["quarantined"]
+    assert [r.status for r in rep.live.records] == ["quarantined"]
+
+    def releases(tr):
+        return [(e[6]["attempt"], e[6]["since"], e[6]["release"])
+                for e in tr.events() if e[2] == "task.requeue"]
+
+    # bit-exact, seeded: blake2b(f"{seed}:{task}:{attempt}") jitter on
+    # an exponential base — pinned so refactors cannot silently change
+    # the backoff schedule either driver observes
+    expect = [(1, 0.0, 10.823104785525953),
+              (2, 10.823104785525953, 32.146764199914315)]
+    assert releases(ts) == expect
+    assert releases(tl) == expect
+
+    quarantined = [e for e in ts.events() if e[2] == "task.quarantined"]
+    assert len(quarantined) == 1
+    assert quarantined[0][6]["attempt"] == 3
+    assert quarantined[0][6]["since"] == 32.146764199914315
+
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    r = RetryPolicy(base_s=2.0, factor=2.0, max_s=30.0, jitter=0.5)
+    a = r.backoff_s("task-x", 3, seed=7)
+    assert a == r.backoff_s("task-x", 3, seed=7)      # pure function
+    assert a != r.backoff_s("task-x", 3, seed=8)      # seed matters
+    assert a != r.backoff_s("task-y", 3, seed=7)      # task matters
+    base = min(2.0 * 2.0 ** (3 - 1), 30.0)
+    assert base * 0.5 <= a <= base * 1.5               # jitter bounded
+    nojit = RetryPolicy(base_s=2.0, factor=2.0, max_s=30.0, jitter=0.0)
+    assert nojit.backoff_s("t", 10, seed=0) == 30.0    # max_s cap
+
+
+# --------------------------------------------------------------------------
+# quarantine threshold: fires iff failures cross it
+# --------------------------------------------------------------------------
+def _crash_run(n_crashes: int, quarantine_after: int):
+    # run_parity (not bare simulate_cluster): its static mode seeds a
+    # zero-queue-wait allocation, so the crash times land inside the
+    # task's run window — and every cell doubles as a parity check
+    spec = backends.get("hq")
+    plan = FaultPlan(events=tuple(
+        FaultEvent(t=10.0 + 20.0 * i, kind="worker_crash", target=0)
+        for i in range(n_crashes)))
+    rep = run_parity(
+        spec, [TraceTask(t=0.0, runtime=500.0)], n_workers=1, seed=2,
+        max_attempts=10, fault_plan=plan,
+        retry_policy=RetryPolicy(base_s=1.0, factor=2.0, jitter=0.2,
+                                 quarantine_after=quarantine_after),
+        walltime_s=3600.0)
+    assert rep.ok, rep.divergences[:3]
+    assert rep.sim.records[0].status == rep.live.records[0].status
+    return rep.sim.records[0].status
+
+
+def test_quarantine_fires_iff_threshold_crossed():
+    """Every (crashes, threshold) cell: quarantined exactly when the
+    fatal-failure count reaches the threshold, ok otherwise (the task
+    always recovers when allowed to retry)."""
+    for threshold in (1, 2, 3):
+        for crashes in range(5):
+            status = _crash_run(crashes, threshold)
+            if crashes >= threshold:
+                assert status == "quarantined", (crashes, threshold)
+            else:
+                assert status == "ok", (crashes, threshold)
+
+
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=6))
+@settings(max_examples=12, deadline=None)
+def test_quarantine_threshold_property(threshold, crashes):
+    status = _crash_run(crashes, threshold)
+    assert status == ("quarantined" if crashes >= threshold else "ok")
+
+
+# --------------------------------------------------------------------------
+# journal: torn-write recovery + directory fsync
+# --------------------------------------------------------------------------
+def test_journal_survives_torn_writes(tmp_path):
+    """Kill-mid-write loop: every other publish is torn (the chaos
+    `journal_torn` fault), and `latest()` must fall back to the newest
+    complete snapshot every time — zero lost state."""
+    j = Journal(tmp_path / "j", keep=10)
+    for i in range(6):
+        j.write({"round": i})
+        j.torn_next = True                     # next publish is torn
+        j.write({"round": f"torn-{i}"})
+        assert j.torn_next is False            # one-shot flag
+        seq, state = j.latest()
+        assert state == {"round": i}           # torn snapshot skipped
+    # a cold restart over the littered directory recovers the same state
+    j2 = Journal(tmp_path / "j", keep=10)
+    _, state = j2.latest()
+    assert state == {"round": 5}
+    # and the next publish heals the tip
+    j2.write({"round": 99})
+    assert j2.latest()[1] == {"round": 99}
+
+
+def test_journal_dir_fsync_is_tolerant(tmp_path):
+    j = Journal(tmp_path / "j")
+    path = j.write({"a": 1})
+    assert path.exists()
+    j._fsync_dir()                             # second sync: harmless
+    assert j.latest()[1] == {"a": 1}
+
+
+# --------------------------------------------------------------------------
+# InvariantChecker: catches the bugs it exists for
+# --------------------------------------------------------------------------
+def test_invariant_checker_clean_run_passes():
+    spec = backends.get("hq")
+    tracer = Tracer()
+    res = simulate_cluster(spec, _hedge_trace(), autoalloc=_elastic_cfg(),
+                           max_workers=12, seed=5, max_attempts=6,
+                           tracer=tracer)
+    inv = InvariantChecker().check(
+        records=res.records, allocations=res.allocations,
+        events=tracer.events(),
+        expected_tasks=[f"trace-{i}" for i in range(16)])
+    assert inv.ok, inv.violations[:5]
+    assert inv.measures["n_records"] == 16.0
+    assert inv.measures["n_lost"] == 0.0
+    assert inv.measures["billed_busy_s"] == \
+        inv.measures["accounted_busy_s"]
+
+
+def test_invariant_checker_flags_violations():
+    spec = backends.get("hq")
+    tracer = Tracer()
+    res = simulate_cluster(spec, _hedge_trace(), autoalloc=_elastic_cfg(),
+                           max_workers=12, seed=5, max_attempts=6,
+                           tracer=tracer)
+    checker = InvariantChecker()
+    # duplicate terminal state for one task
+    dup = checker.check(records=list(res.records) + [res.records[0]],
+                        allocations=res.allocations,
+                        events=tracer.events())
+    assert not dup.ok
+    # a submitted task with no terminal record = lost work
+    missing = checker.check(records=res.records[:-1],
+                            allocations=res.allocations,
+                            events=tracer.events(),
+                            expected_tasks=[f"trace-{i}"
+                                            for i in range(16)])
+    assert not missing.ok
+    with pytest.raises(AssertionError):
+        missing.assert_ok()
+
+
+# --------------------------------------------------------------------------
+# overhead attribution: quarantine component stays additive
+# --------------------------------------------------------------------------
+def test_quarantine_attribution_additive():
+    spec = backends.get("hq")
+    tracer = Tracer()
+    rep = run_parity(
+        spec, [TraceTask(t=0.0, runtime=500.0)], n_workers=1, seed=2,
+        max_attempts=10, tracers=(tracer, Tracer()),
+        fault_plan=FaultPlan(events=tuple(
+            FaultEvent(t=10.0 + 20.0 * i, kind="worker_crash", target=0)
+            for i in range(4))),
+        retry_policy=RetryPolicy(base_s=1.0, factor=2.0, jitter=0.2,
+                                 quarantine_after=3))
+    assert rep.ok, rep.divergences[:3]
+    res = rep.sim
+    att = res.overhead_attribution
+    bd = att["per_task"]["trace-0"]
+    assert bd.status == "quarantined"
+    assert bd.quarantine_s > 0                 # final burned attempt
+    assert bd.retry_s > 0                      # backoff-extended burns
+    assert bd.speculation_s == 0.0             # nothing hedged
+    rec = res.records[0]
+    assert abs(bd.overhead_s - rec.overhead) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# offload degradation: outage faults + calibration drift alarms
+# --------------------------------------------------------------------------
+def test_offload_degradation_cycle_and_instants():
+    tracer = Tracer()
+    sur = SurrogateOffload(drift_disable_s=120.0)
+    sur.tracer = tracer
+    assert sur.degraded_until is None
+    sur.set_degraded(10.0, 40.0, reason="outage")
+    assert sur.degraded_until == 40.0
+    sur.set_degraded(12.0, 50.0, reason="outage")   # extend: no new edge
+    sur.tick_degraded(30.0)                         # too early: no-op
+    assert sur.degraded_until == 50.0
+    sur.tick_degraded(50.0)                         # re-arm
+    assert sur.degraded_until is None
+    edges = [e[6] for e in tracer.events()
+             if e[2] == "offload.degraded"]
+    assert edges == [{"degraded": True, "reason": "outage"},
+                     {"degraded": False, "reason": "outage"}]
+
+
+def test_calib_drift_alarm_degrades_offload():
+    """Satellite 1 end-to-end: a drifting cost model raises `calib.drift`,
+    the monitor's `on_alarm` hook cools the offload engine off, and the
+    stepper-driven tick re-arms it after `drift_disable_s`."""
+    spec = backends.get("hq")
+    sur = SurrogateOffload(drift_disable_s=100.0)
+    mon = CalibrationMonitor(spec, min_n=4, on_alarm=sur.note_drift_alarm)
+    for i in range(6):                         # observed 4x predicted
+        mon.observe("init", 1.0, 4.0, float(i))
+    assert mon.alarms, "drift alarm did not fire"
+    assert sur.degraded_until is not None
+    assert sur.degraded_reason == "drift:init"
+    t_alarm = mon.alarms[0]["t"]
+    assert sur.degraded_until == t_alarm + 100.0
+    sur.tick_degraded(sur.degraded_until)
+    assert sur.degraded_until is None
+
+
+def test_surrogate_outage_fault_degrades_and_rearms():
+    """A `surrogate_outage` fault disables offload for its duration in
+    the simulator; the stepper re-arms it at the same virtual instant
+    on both drivers (here: sim side, via the degraded tick)."""
+    calls = []
+
+    class _FakeSurrogate:
+        latency_s = 0.05
+        n_virtual_workers = 1
+        tracer = None
+        degraded_until = None
+
+        def decide(self, req, cost=None):
+            return False
+
+        def note_served(self):
+            pass
+
+        def observe(self, *a, **kw):
+            pass
+
+        def set_degraded(self, now, until, reason="outage"):
+            calls.append(("set", now, until, reason))
+            self.degraded_until = until
+
+        def tick_degraded(self, now):
+            if self.degraded_until is not None \
+                    and now >= self.degraded_until:
+                calls.append(("rearm", now))
+                self.degraded_until = None
+
+    from repro.cluster import Broker
+    broker = Broker()
+    broker.attach_surrogate(_FakeSurrogate())
+    spec = backends.get("hq")
+    res = simulate_cluster(
+        spec, _hedge_trace(), broker=broker, autoalloc=_elastic_cfg(),
+        max_workers=12, seed=5, max_attempts=6,
+        fault_plan=FaultPlan(events=(
+            FaultEvent(t=15.0, kind="surrogate_outage", duration_s=40.0),
+        )))
+    assert Counter(r.status for r in res.records)["ok"] == 16
+    sets = [c for c in calls if c[0] == "set"]
+    rearms = [c for c in calls if c[0] == "rearm"]
+    assert sets == [("set", 15.0, 55.0, "outage")]
+    assert len(rearms) == 1 and rearms[0][1] >= 55.0
